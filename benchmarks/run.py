@@ -1,0 +1,56 @@
+"""Benchmark harness (deliverable d): one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV and writes results/benchmarks.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import paper_tables as pt
+
+    benches = [
+        ("table5_predictor_quality", pt.table5_predictor_quality),
+        ("table4_training_cost", pt.table4_training_cost),
+        ("fig5_interval_ablation", pt.fig5_interval_ablation),
+        ("fig6_speedups_hnsw", lambda: pt.fig6_darth_speedups("hnsw")),
+        ("fig19_speedups_ivf", lambda: pt.fig6_darth_speedups("ivf")),
+        ("fig8_optimality_ivf", lambda: pt.fig8_optimality("ivf")),
+        ("fig10_competitors", pt.fig10_competitors),
+        ("fig11_hardness", pt.fig11_hardness),
+        ("fig18_ood", pt.fig18_ood),
+        ("feature_ablation", pt.feature_ablation),
+        ("model_selection", pt.model_selection),
+        ("serving_compaction", pt.serving_compaction),
+    ]
+
+    all_out = {}
+    print("name,us_per_call,derived")
+    for name, fn in benches:
+        t0 = time.time()
+        try:
+            rows, headline = fn()
+            status = "ok"
+        except Exception as e:  # pragma: no cover
+            rows, headline = [], f"ERROR {type(e).__name__}: {e}"
+            status = "error"
+            traceback.print_exc()
+        dt = time.time() - t0
+        us = dt * 1e6
+        all_out[name] = {"status": status, "seconds": round(dt, 1),
+                         "headline": headline, "rows": rows}
+        print(f"{name},{us:.0f},{headline}", flush=True)
+
+    os.makedirs("results", exist_ok=True)
+    with open("results/benchmarks.json", "w") as f:
+        json.dump(all_out, f, indent=1, default=str)
+    n_err = sum(1 for v in all_out.values() if v["status"] != "ok")
+    if n_err:
+        raise SystemExit(f"{n_err} benchmarks failed")
+
+
+if __name__ == "__main__":
+    main()

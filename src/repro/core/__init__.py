@@ -1,0 +1,16 @@
+"""DARTH core: declarative recall through early termination (the paper's
+primary contribution), engine-agnostic over the ANN index substrate."""
+from repro.core import (api, baselines, darth_search, engines, features,
+                        intervals, predictor, training)
+from repro.core.api import Darth
+from repro.core.darth_search import budget_search, plain_search
+from repro.core.engines import Engine, hnsw_engine, ivf_engine
+from repro.core.intervals import IntervalParams, heuristic_params
+from repro.core.predictor import RecallPredictor
+
+__all__ = [
+    "api", "baselines", "darth_search", "engines", "features", "intervals",
+    "predictor", "training", "Darth", "Engine", "RecallPredictor",
+    "budget_search", "plain_search", "hnsw_engine", "ivf_engine",
+    "IntervalParams", "heuristic_params",
+]

@@ -1,0 +1,66 @@
+"""Public declarative-recall API: ANNS(q, index, k, R_t) (paper §2.3).
+
+`Darth` bundles an index, its engine factory, a trained recall predictor,
+and per-target heuristic interval parameters. After `Darth.fit()` (one
+training-data generation + GBDT fit), any attainable recall target can be
+declared per query with NO further tuning — the paper's headline property.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import darth_search, engines as engines_lib
+from repro.core import intervals as intervals_lib
+from repro.core import training as training_lib
+from repro.index import flat
+
+
+@dataclasses.dataclass
+class Darth:
+    """Declarative-recall searcher over one index + one k."""
+    make_engine: Callable[..., engines_lib.Engine]
+    engine: engines_lib.Engine
+    trained: Optional[training_lib.TrainedDarth] = None
+
+    # -- training ----------------------------------------------------------
+    def fit(self, q_train: jax.Array, x: jax.Array, *,
+            targets: Sequence[float] = (0.8, 0.85, 0.9, 0.95, 0.99),
+            max_samples: int = 2_000_000, batch: int = 256,
+            seed: int = 0) -> training_lib.TrainedDarth:
+        k = self.engine.k
+        _, gt_i = flat.search(q_train, x, k)
+        log = training_lib.generate_observations(self.engine, q_train, gt_i,
+                                                 batch=batch)
+        self.trained = training_lib.fit_predictor(
+            log, targets=targets, max_samples=max_samples, seed=seed)
+        self._last_log = log
+        return self.trained
+
+    # -- search ------------------------------------------------------------
+    def interval_params(self, r_target: float) -> intervals_lib.IntervalParams:
+        assert self.trained is not None, "call fit() first"
+        # nearest trained target's dists_Rt; interpolate if between
+        keys = sorted(self.trained.dists_rt)
+        arr = np.array(keys)
+        dists = np.array([self.trained.dists_rt[t] for t in keys])
+        d = float(np.interp(r_target, arr, dists))
+        return intervals_lib.heuristic_params(d)
+
+    def search(self, q: jax.Array, r_target: Union[float, jax.Array],
+               ) -> Tuple[jax.Array, jax.Array, darth_search.DarthState]:
+        """ANNS(q, G, k, R_t): returns (dists, ids, diagnostics state)."""
+        assert self.trained is not None, "call fit() first"
+        rt_scalar = float(np.mean(np.asarray(r_target)))
+        params = self.interval_params(rt_scalar)
+        st = darth_search.darth_search(self.engine, q, r_target,
+                                       self.trained.predictor, params)
+        return (self.engine.topk_d(st.inner), self.engine.topk_i(st.inner), st)
+
+    def search_plain(self, q: jax.Array):
+        inner = darth_search.plain_search(self.engine, q)
+        return self.engine.topk_d(inner), self.engine.topk_i(inner), inner

@@ -1,0 +1,132 @@
+"""Declarative-recall competitors (paper §4: Baseline, REM, LAET).
+
+  Baseline  terminate every query after dists_Rt distance calcs (§3.2.2).
+  REM       Recall-to-efSearch/nprobe Mapping: one linear sweep over the
+            effort parameter on validation queries; pick the smallest value
+            whose mean recall >= target.
+  LAET      Learned Adaptive Early Termination (Li et al. 2020): after a
+            fixed initial search, predict the TOTAL distance calcs a query
+            needs to find all its NNs, multiply by a hand-tuned multiplier,
+            terminate at that budget. Multiplier tuned per target on
+            validation queries (the paper's adaptation, §4 'Comparison
+            Algorithms').
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import gbdt
+from repro.core import darth_search, engines as engines_lib
+from repro.core import features as features_lib
+from repro.core.training import TrainLog
+from repro.index import flat
+
+
+# ---------------------------------------------------------------------------
+# REM
+# ---------------------------------------------------------------------------
+
+class REM(NamedTuple):
+    mapping: Dict[float, int]   # target recall -> effort parameter
+    sweep: Dict[int, float]     # effort parameter -> measured mean recall
+
+
+def fit_rem(make_engine: Callable[[int], engines_lib.Engine],
+            q_val: jax.Array, gt_val: jax.Array,
+            param_grid: Sequence[int],
+            targets: Sequence[float]) -> REM:
+    sweep = {}
+    for p in sorted(param_grid):
+        eng = make_engine(int(p))
+        inner = darth_search.plain_search(eng, q_val)
+        rec = float(np.asarray(flat.recall_at_k(eng.topk_i(inner), gt_val)).mean())
+        sweep[int(p)] = rec
+    mapping = {}
+    for rt in targets:
+        ok = [p for p, r in sweep.items() if r >= rt]
+        mapping[float(rt)] = min(ok) if ok else max(sweep)
+    return REM(mapping=mapping, sweep=sweep)
+
+
+# ---------------------------------------------------------------------------
+# LAET
+# ---------------------------------------------------------------------------
+
+class LAET(NamedTuple):
+    params: gbdt.GBDTParams      # predicts log1p(total dists to all NNs)
+    n0: int                      # fixed initial steps before prediction
+    multipliers: Dict[float, float]
+
+
+def _total_dists_to_final(log: TrainLog) -> np.ndarray:
+    """Per-query ndis at the first step reaching its FINAL recall."""
+    t, b = log.recall.shape
+    final = log.recall[-1]
+    hit = (log.recall >= final[None, :] - 1e-9) & log.valid
+    t_idx = np.where(hit.any(0), hit.argmax(0), t - 1)
+    return log.ndis[t_idx, np.arange(b)].astype(np.float64)
+
+
+def fit_laet(log: TrainLog, *, n0: int = 2,
+             cfg: gbdt.GBDTConfig = gbdt.GBDTConfig()) -> LAET:
+    """Train LAET's total-effort regressor from the same step logs."""
+    x = log.features[n0 - 1]            # features after the fixed prefix
+    y = np.log1p(_total_dists_to_final(log))
+    params = gbdt.fit(x, y.astype(np.float32), cfg)
+    return LAET(params=params, n0=n0, multipliers={})
+
+
+def laet_search(laet: LAET, engine: engines_lib.Engine, q: jax.Array,
+                multiplier: float):
+    """Run LAET: n0 fixed steps, one prediction, fixed budget after."""
+    inner = engine.init(q)
+    for _ in range(laet.n0):
+        inner = engine.step(inner)
+    feats = features_lib.extract(
+        engine.nstep(inner), inner.ndis, inner.ninserts, inner.first_nn,
+        engine.topk_d(inner))
+    pred_total = jnp.expm1(gbdt.predict_efficient(laet.params, feats))
+    budget = jnp.maximum(pred_total * multiplier,
+                         inner.ndis.astype(jnp.float32))
+    return _run_with_budget(engine, inner, budget)
+
+
+def _run_with_budget(engine, inner, budget):
+    def cond(carry):
+        inner, t = carry
+        return inner.active.any() & (t < engine.max_steps)
+
+    def body(carry):
+        inner, t = carry
+        inner = engine.step(inner)
+        over = inner.ndis.astype(jnp.float32) >= budget
+        inner = engines_lib.set_active(inner, inner.active & ~over)
+        return inner, t + 1
+
+    inner, _ = jax.lax.while_loop(cond, body, (inner, jnp.zeros((), jnp.int32)))
+    return inner
+
+
+def tune_laet(laet: LAET, engine: engines_lib.Engine, q_val: jax.Array,
+              gt_val: jax.Array, targets: Sequence[float],
+              lo: float = 0.1, hi: float = 3.0, steps: int = 8) -> LAET:
+    """Binary-search the multiplier per target (monotone recall-vs-mult)."""
+    mult = {}
+    for rt in targets:
+        a, b = lo, hi
+        best = hi
+        for _ in range(steps):
+            mid = 0.5 * (a + b)
+            inner = laet_search(laet, engine, q_val, mid)
+            rec = float(np.asarray(
+                flat.recall_at_k(engine.topk_i(inner), gt_val)).mean())
+            if rec >= rt:
+                best, b = mid, mid
+            else:
+                a = mid
+        mult[float(rt)] = best
+    return laet._replace(multipliers=mult)

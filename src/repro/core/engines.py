@@ -1,0 +1,65 @@
+"""Uniform engine adapters: one step-wise protocol over IVF and HNSW.
+
+DARTH's driver (darth_search.py) is engine-agnostic: anything that exposes
+init/step plus the counters the features need can be driven to a declarative
+recall target. This mirrors the paper's claim (§3.3) that Algorithm 1
+generalizes across ANNS methods whose search is iterative.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.index import hnsw as hnsw_lib
+from repro.index import ivf as ivf_lib
+
+
+class Engine(NamedTuple):
+    """Step-wise search engine protocol.
+
+    All state objects must carry: .active bool[B], .ndis i32[B],
+    .ninserts i32[B], .first_nn f32[B].
+    """
+    init: Callable[[jax.Array], Any]
+    step: Callable[[Any], Any]
+    topk_d: Callable[[Any], jax.Array]   # f32[B, K] squared, ascending
+    topk_i: Callable[[Any], jax.Array]   # i32[B, K]
+    nstep: Callable[[Any], jax.Array]    # i32[B]
+    max_steps: int
+    name: str
+    k: int
+
+
+def set_active(state: Any, mask: jax.Array) -> Any:
+    return dataclasses.replace(state, active=mask)
+
+
+def ivf_engine(index: ivf_lib.IVFIndex, *, k: int, nprobe: int) -> Engine:
+    return Engine(
+        init=lambda q: ivf_lib.init_state(index, q, k=k, nprobe=nprobe),
+        step=lambda s: ivf_lib.probe_step(index, s),
+        topk_d=lambda s: s.topk_d,
+        topk_i=lambda s: s.topk_i,
+        nstep=lambda s: s.probe_pos,
+        max_steps=nprobe,
+        name="ivf",
+        k=k,
+    )
+
+
+def hnsw_engine(index: hnsw_lib.HNSWIndex, *, k: int, ef: int,
+                max_steps: int = 0) -> Engine:
+    limit = max_steps or 8 * ef
+    return Engine(
+        init=lambda q: hnsw_lib.init_state(index, q, ef=ef),
+        step=lambda s: hnsw_lib.beam_step(index, s, k=k),
+        topk_d=lambda s: s.cand_d[:, :k],
+        topk_i=lambda s: s.cand_i[:, :k],
+        nstep=lambda s: s.nstep,
+        max_steps=limit,
+        name="hnsw",
+        k=k,
+    )

@@ -1,0 +1,73 @@
+"""DARTH's 11 search-state features (paper Table 1), fully vectorized.
+
+Feature vector layout (fixed order, float32[B, 11]):
+  0 nstep      search step (HNSW: beam expansions; IVF: probe number §3.3.2)
+  1 ndis       #distance calculations so far
+  2 ninserts   #updates to the NN result set
+  3 firstNN    distance of the first base-layer NN found
+               (IVF: distance to the nearest centroid §3.3.2)
+  4 closestNN  current closest NN distance
+  5 furthestNN current k-th NN distance
+  6 avg        mean of the k NN distances found
+  7 var        variance of the NN distances
+  8 med        median
+  9 perc25     25th percentile
+ 10 perc75     75th percentile
+
+The result set is kept *sorted ascending* by every engine in this repo, so
+the median/percentile features are O(1) indexed reads (DESIGN.md §2) — no
+per-invocation sort, which is what keeps predictor-call overhead below one
+probe/beam step.
+
+Distances are metric (sqrt of the squared-L2 the engines carry), matching
+the paper's feature scale. Partially-filled result sets (+inf tail) are
+handled with masked statistics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NUM_FEATURES = 11
+FEATURE_NAMES = (
+    "nstep", "ndis", "ninserts", "firstNN", "closestNN", "furthestNN",
+    "avg", "var", "med", "perc25", "perc75",
+)
+
+
+def extract(nstep: jax.Array, ndis: jax.Array, ninserts: jax.Array,
+            first_nn: jax.Array, topk_sqd: jax.Array) -> jax.Array:
+    """Build the feature matrix.
+
+    Args:
+      nstep, ndis, ninserts: int32[B]
+      first_nn: float32[B] (already metric distance)
+      topk_sqd: float32[B, K] squared distances, ascending, +inf = empty.
+    Returns:
+      float32[B, NUM_FEATURES]
+    """
+    b, k = topk_sqd.shape
+    finite = jnp.isfinite(topk_sqd)
+    cnt = finite.sum(axis=1)
+    cnt_safe = jnp.maximum(cnt, 1)
+    d = jnp.sqrt(jnp.where(finite, jnp.maximum(topk_sqd, 0.0), 0.0))
+
+    closest = d[:, 0]
+    furthest_idx = jnp.maximum(cnt - 1, 0)
+    furthest = jnp.take_along_axis(d, furthest_idx[:, None], 1)[:, 0]
+    avg = d.sum(axis=1) / cnt_safe
+    var = (d**2).sum(axis=1) / cnt_safe - avg**2
+
+    def pct(p: float) -> jax.Array:
+        idx = jnp.clip((p * (cnt - 1)).astype(jnp.int32), 0, k - 1)
+        return jnp.take_along_axis(d, idx[:, None], 1)[:, 0]
+
+    feats = jnp.stack([
+        nstep.astype(jnp.float32),
+        ndis.astype(jnp.float32),
+        ninserts.astype(jnp.float32),
+        first_nn.astype(jnp.float32),
+        closest, furthest, avg, jnp.maximum(var, 0.0),
+        pct(0.5), pct(0.25), pct(0.75),
+    ], axis=1)
+    return jnp.where(cnt[:, None] > 0, feats, 0.0)

@@ -1,0 +1,113 @@
+"""Training-data generation + recall-predictor fitting (paper §3.1.3, §4.1).
+
+One `lax.scan` over the engine runs ALL training queries in parallel and
+logs (features, true recall, ndis, valid) at every engine step — the TPU
+equivalent of the paper's "log every distance calculation" (our logging
+cadence is one engine step = one probe / beam expansion; the paper itself
+uses coarser cadences for IVF, §4.2.10).
+
+Byproducts used elsewhere (all free, as the paper notes):
+  * dists_Rt per target  -> heuristic ipi/mpi + the 'Baseline' competitor,
+  * per-query oracle termination points -> the optimality experiment (Fig 8).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import gbdt
+from repro.core import engines as engines_lib
+from repro.core import features as features_lib
+from repro.core import intervals as intervals_lib
+from repro.core.predictor import RecallPredictor, regression_metrics
+from repro.index import flat
+
+
+class TrainLog(NamedTuple):
+    features: np.ndarray  # f32[T, B, 11]
+    recall: np.ndarray    # f32[T, B]
+    ndis: np.ndarray      # i32[T, B]
+    valid: np.ndarray     # bool[T, B] (query was active going into step)
+    gen_seconds: float
+
+
+def generate_observations(engine: engines_lib.Engine, q: jax.Array,
+                          gt_i: jax.Array,
+                          batch: int = 256) -> TrainLog:
+    """Run training queries through the engine, logging every step."""
+    t0 = time.time()
+    outs = []
+    for lo in range(0, q.shape[0], batch):
+        qb = q[lo:lo + batch]
+        gb = gt_i[lo:lo + batch]
+        if qb.shape[0] < batch:  # pad tail batch to keep one compiled shape
+            pad = batch - qb.shape[0]
+            qb = jnp.pad(qb, ((0, pad), (0, 0)))
+            gb = jnp.pad(gb, ((0, pad), (0, 0)), constant_values=-2)
+        outs.append(_scan_log(engine, qb, gb))
+    feats = np.concatenate([o[0] for o in outs], axis=1)[:, :q.shape[0]]
+    rec = np.concatenate([o[1] for o in outs], axis=1)[:, :q.shape[0]]
+    nd = np.concatenate([o[2] for o in outs], axis=1)[:, :q.shape[0]]
+    va = np.concatenate([o[3] for o in outs], axis=1)[:, :q.shape[0]]
+    return TrainLog(feats, rec, nd, va, time.time() - t0)
+
+
+def _scan_log(engine: engines_lib.Engine, q: jax.Array, gt_i: jax.Array):
+    def step_fn(inner, _):
+        was_active = inner.active
+        inner = engine.step(inner)
+        feats = features_lib.extract(
+            engine.nstep(inner), inner.ndis, inner.ninserts, inner.first_nn,
+            engine.topk_d(inner))
+        rec = flat.recall_at_k(engine.topk_i(inner), gt_i)
+        return inner, (feats, rec, inner.ndis, was_active)
+
+    inner0 = engine.init(q)
+    _, (f, r, nd, v) = jax.lax.scan(step_fn, inner0, None,
+                                    length=engine.max_steps)
+    return (np.asarray(f), np.asarray(r), np.asarray(nd), np.asarray(v))
+
+
+class TrainedDarth(NamedTuple):
+    predictor: RecallPredictor
+    dists_rt: Dict[float, float]       # target recall -> mean oracle dists
+    metrics: dict                      # fit metrics on held-out split
+    train_seconds: float
+    num_samples: int
+
+
+def fit_predictor(log: TrainLog, *, cfg: gbdt.GBDTConfig = gbdt.GBDTConfig(),
+                  targets: Sequence[float] = (0.8, 0.85, 0.9, 0.95, 0.99),
+                  max_samples: int = 2_000_000, holdout: float = 0.1,
+                  seed: int = 0) -> TrainedDarth:
+    """Fit the GBDT recall predictor from step logs."""
+    t0 = time.time()
+    mask = log.valid.reshape(-1)
+    x = log.features.reshape(-1, features_lib.NUM_FEATURES)[mask]
+    y = log.recall.reshape(-1)[mask]
+    rng = np.random.default_rng(seed)
+    if x.shape[0] > max_samples:
+        sel = rng.choice(x.shape[0], max_samples, replace=False)
+        x, y = x[sel], y[sel]
+    n_hold = max(1, int(holdout * x.shape[0]))
+    perm = rng.permutation(x.shape[0])
+    x, y = x[perm], y[perm]
+    x_tr, y_tr = x[n_hold:], y[n_hold:]
+    x_ho, y_ho = x[:n_hold], y[:n_hold]
+
+    params = gbdt.fit(x_tr, y_tr, cfg)
+    pred = RecallPredictor(params=params)
+    m = regression_metrics(np.asarray(pred(jnp.asarray(x_ho))), y_ho)
+
+    dists_rt = {
+        float(rt): float(np.mean(intervals_lib.dists_to_target(
+            log.recall, log.ndis, log.valid, rt)))
+        for rt in targets
+    }
+    return TrainedDarth(predictor=pred, dists_rt=dists_rt, metrics=m,
+                        train_seconds=time.time() - t0,
+                        num_samples=int(x_tr.shape[0]))

@@ -1,0 +1,7 @@
+from repro.data import synthetic, vectors
+from repro.data.synthetic import PipelineConfig, TokenPipeline
+from repro.data.vectors import (VectorDataset, make_dataset, noisy_queries,
+                                ood_queries)
+
+__all__ = ["synthetic", "vectors", "PipelineConfig", "TokenPipeline",
+           "VectorDataset", "make_dataset", "noisy_queries", "ood_queries"]

@@ -1,0 +1,62 @@
+"""Batched GBDT inference in pure JAX (the XLA path; kernels/gbdt_predict.py
+is the Pallas VMEM-resident version, validated against this)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.gbdt.model import GBDTParams
+
+
+def predict(params: GBDTParams, x: jax.Array) -> jax.Array:
+    """Predict for a batch.
+
+    Args:
+      params: ensemble.
+      x: float32[B, F] raw features.
+    Returns:
+      float32[B] predictions.
+    """
+    depth = params.depth
+    num_trees = params.num_trees
+    b = x.shape[0]
+
+    # node[b, t]: current node index per (query, tree); predicated descent.
+    node = jnp.zeros((b, num_trees), jnp.int32)
+    for _ in range(depth):
+        f = jnp.take_along_axis(params.feat[None, :, :].repeat(b, 0), node[:, :, None], axis=2)[..., 0]
+        t = jnp.take_along_axis(params.thresh[None, :, :].repeat(b, 0), node[:, :, None], axis=2)[..., 0]
+        xv = jnp.take_along_axis(x, jnp.maximum(f, 0), axis=1)  # [B, T]
+        go_right = (xv > t) & (f >= 0)
+        node = 2 * node + 1 + go_right.astype(jnp.int32)
+    leaf_idx = node - (2**depth - 1)
+    leaf_val = jnp.take_along_axis(params.leaf[None, :, :].repeat(b, 0), leaf_idx[:, :, None], axis=2)[..., 0]
+    return params.base + leaf_val.sum(axis=1)
+
+
+def predict_efficient(params: GBDTParams, x: jax.Array) -> jax.Array:
+    """Gather-light variant: same math, but gathers through flattened tables
+    (XLA lowers this to a single gather per level instead of per-tree)."""
+    depth = params.depth
+    num_trees, n_internal = params.feat.shape
+    b = x.shape[0]
+    feat_flat = params.feat.reshape(-1)
+    thresh_flat = params.thresh.reshape(-1)
+    tree_off = jnp.arange(num_trees, dtype=jnp.int32) * n_internal
+
+    node = jnp.zeros((b, num_trees), jnp.int32)
+    for _ in range(depth):
+        idx = node + tree_off[None, :]
+        f = feat_flat[idx]
+        t = thresh_flat[idx]
+        xv = jnp.take_along_axis(x, jnp.maximum(f, 0), axis=1)
+        go_right = (xv > t) & (f >= 0)
+        node = 2 * node + 1 + go_right.astype(jnp.int32)
+    leaf_idx = node - (2**depth - 1)
+    n_leaf = params.leaf.shape[1]
+    leaf_flat = params.leaf.reshape(-1)
+    leaf_val = leaf_flat[leaf_idx + (jnp.arange(num_trees, dtype=jnp.int32) * n_leaf)[None, :]]
+    return params.base + leaf_val.sum(axis=1)
+
+
+predict_jit = jax.jit(predict_efficient)

@@ -1,0 +1,77 @@
+"""Array-form GBDT ensemble: a pytree of fixed-shape arrays.
+
+Trees are complete binary trees of fixed ``depth`` stored in level order:
+internal node ``i`` has children ``2i+1`` (left, x[f] <= thr) and ``2i+2``
+(right). Leaves are the final level, indexed ``node - (2**depth - 1)``.
+
+This fixed layout is what makes both jit-compiled training (level-wise
+growth) and Pallas-kernel inference possible: no pointers, no ragged trees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class GBDTParams:
+    """Ensemble parameters.
+
+    feat:   int32[T, 2**depth - 1]  split feature per internal node
+            (-1 => degenerate node: everything goes left)
+    thresh: float32[T, 2**depth - 1] raw-space threshold (left iff x <= thr)
+    leaf:   float32[T, 2**depth]     leaf values (already scaled by lr)
+    base:   float32[]                initial prediction (mean of targets)
+    """
+
+    feat: jax.Array
+    thresh: jax.Array
+    leaf: jax.Array
+    base: jax.Array
+
+    @property
+    def num_trees(self) -> int:
+        return self.feat.shape[0]
+
+    @property
+    def depth(self) -> int:
+        return int(np.log2(self.leaf.shape[1]))
+
+    @property
+    def num_features(self) -> int:
+        # Not stored explicitly; max feature index + 1 is a lower bound.
+        return int(jax.device_get(self.feat).max()) + 1
+
+
+def empty_params(num_trees: int, depth: int) -> GBDTParams:
+    n_internal = 2**depth - 1
+    n_leaf = 2**depth
+    return GBDTParams(
+        feat=jnp.zeros((num_trees, n_internal), jnp.int32),
+        thresh=jnp.full((num_trees, n_internal), jnp.inf, jnp.float32),
+        leaf=jnp.zeros((num_trees, n_leaf), jnp.float32),
+        base=jnp.zeros((), jnp.float32),
+    )
+
+
+def to_state_dict(p: GBDTParams) -> Dict[str, Any]:
+    return {
+        "feat": np.asarray(p.feat),
+        "thresh": np.asarray(p.thresh),
+        "leaf": np.asarray(p.leaf),
+        "base": np.asarray(p.base),
+    }
+
+
+def from_state_dict(d: Dict[str, Any]) -> GBDTParams:
+    return GBDTParams(
+        feat=jnp.asarray(d["feat"], jnp.int32),
+        thresh=jnp.asarray(d["thresh"], jnp.float32),
+        leaf=jnp.asarray(d["leaf"], jnp.float32),
+        base=jnp.asarray(d["base"], jnp.float32),
+    )

@@ -1,0 +1,4 @@
+"""ANN index substrate: exact flat search, IVF, TPU-adapted HNSW graph."""
+from repro.index import flat, hnsw, ivf, kmeans
+
+__all__ = ["flat", "hnsw", "ivf", "kmeans"]

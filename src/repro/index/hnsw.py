@@ -1,0 +1,340 @@
+"""TPU-adapted HNSW: fixed-degree navigable graph + batched beam search.
+
+Hardware adaptation (DESIGN.md §2): the paper's HNSW is a pointer-chasing,
+one-query-per-core CPU structure. The TPU-native equivalent keeps the
+*search semantics* of HNSW's base layer (best-first beam with an
+efSearch-sized frontier, natural termination when no unexpanded candidate
+remains among the best ef) but re-structures everything as fixed shapes:
+
+  * graph      = int32[N, M] adjacency (padded with -1), built in vectorized
+                 batches: exact kNN candidates -> RobustPrune (alpha-CNG,
+                 the Vamana rule) -> reverse-edge merge -> re-prune. GPU/TPU
+                 HNSW builders use the same batch strategy; the paper's
+                 upper layers are replaced by a medoid entry point (their
+                 role — a good entry — is preamble, not where DARTH acts).
+  * frontier   = the best `ef` candidates per query, ascending, with an
+                 expanded bitmask; result set = first k of the frontier
+                 (always sorted, so DARTH's percentile features are O(1)).
+  * visited    = per-query bitmap [B, N] (exact; a hashed variant would
+                 trade memory for false-positive skips at billion scale).
+  * one step   = expand closest unexpanded candidate of every active query:
+                 gather M neighbors, mask visited, batched distance, merge.
+                 ndis advances by the number of *new* distance computations,
+                 matching the paper's accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.index import flat
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class HNSWIndex:
+    vectors: jax.Array    # f32[N, D]
+    sqnorm: jax.Array     # f32[N]
+    neighbors: jax.Array  # i32[N, M] (-1 pad)
+    entry: jax.Array      # i32[] medoid entry point (fallback)
+    route_ids: jax.Array  # i32[R] upper-layer stand-in: uniform node sample;
+    #                       one dense scan picks a per-query base-layer entry
+    #                       (the role HNSW's upper layers play, one matmul)
+
+    @property
+    def num_vectors(self) -> int:
+        return self.vectors.shape[0]
+
+    @property
+    def degree(self) -> int:
+        return self.neighbors.shape[1]
+
+
+# ---------------------------------------------------------------------------
+# Build
+# ---------------------------------------------------------------------------
+
+def _pairwise_sq(v: jax.Array) -> jax.Array:
+    """v: [B, C, D] -> [B, C, C] squared L2 among candidates."""
+    sq = jnp.sum(v**2, axis=2)
+    dots = jnp.einsum("bcd,bed->bce", v, v)
+    return jnp.maximum(sq[:, :, None] + sq[:, None, :] - 2.0 * dots, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "alpha"))
+def _robust_prune(cand_i: jax.Array, cand_d: jax.Array, pd: jax.Array,
+                  m: int, alpha: float = 1.2) -> jax.Array:
+    """Vectorized Vamana RobustPrune.
+
+    cand_i: i32[B, C] candidate ids sorted by distance to owner (-1 invalid)
+    cand_d: f32[B, C] distances to owner
+    pd:     f32[B, C, C] pairwise distances among candidates
+    Returns i32[B, m] selected neighbors (-1 pad).
+    """
+    b, c = cand_i.shape
+    alive = cand_i >= 0
+    out = jnp.full((b, m), -1, jnp.int32)
+    col = jnp.arange(c)
+
+    def body(t, carry):
+        alive, out = carry
+        # First alive candidate (they are distance-sorted).
+        score = jnp.where(alive, col[None, :], c + 1)
+        pick = jnp.argmin(score, axis=1)                       # [B]
+        has = jnp.take_along_axis(alive, pick[:, None], 1)[:, 0]
+        pick_id = jnp.take_along_axis(cand_i, pick[:, None], 1)[:, 0]
+        out = out.at[:, t].set(jnp.where(has, pick_id, -1))
+        # Kill candidates dominated by the pick: alpha*d(pick,c) <= d(u,c).
+        pd_pick = jnp.take_along_axis(pd, pick[:, None, None], 1)[:, 0, :]
+        dominated = alpha * pd_pick <= cand_d
+        alive = alive & ~dominated & (col[None, :] != pick[:, None])
+        alive = alive & has[:, None]
+        return alive, out
+
+    _, out = jax.lax.fori_loop(0, m, body, (alive, out))
+    return out
+
+
+def _dedup_rows_vec(ids: np.ndarray) -> np.ndarray:
+    """Vectorized per-row dedup: keeps first occurrence, others -> -1."""
+    b, c = ids.shape
+    order = np.argsort(ids, axis=1, kind="stable")
+    s = np.take_along_axis(ids, order, axis=1)
+    dup = np.zeros_like(s, dtype=bool)
+    dup[:, 1:] = (s[:, 1:] == s[:, :-1]) & (s[:, 1:] >= 0)
+    mask = np.zeros_like(dup)
+    np.put_along_axis(mask, order, dup, axis=1)
+    out = ids.copy()
+    out[mask] = -1
+    return out
+
+
+def _reverse_edges(fwd: np.ndarray, slots: int) -> np.ndarray:
+    """Collect up to `slots` reverse proposals per node from forward edges."""
+    n, m = fwd.shape
+    src = np.repeat(np.arange(n, dtype=np.int32), m)
+    dst = fwd.reshape(-1)
+    ok = (dst >= 0) & (dst != src)
+    src, dst = src[ok], dst[ok]
+    order = np.argsort(dst, kind="stable")
+    src, dst = src[order], dst[order]
+    grp_start = np.r_[True, dst[1:] != dst[:-1]] if len(dst) else np.zeros(0, bool)
+    pos = (np.arange(len(dst))
+           - np.maximum.accumulate(np.where(grp_start, np.arange(len(dst)), 0)))
+    rev = np.full((n, slots), -1, np.int32)
+    keep = pos < slots
+    rev[dst[keep], pos[keep]] = src[keep]
+    return rev
+
+
+def _prune_merged(x: np.ndarray, merged: np.ndarray, m: int, alpha2: float,
+                  chunk: int) -> np.ndarray:
+    """Distance-sort + alpha-prune candidate lists to degree m (chunked)."""
+    n = x.shape[0]
+    out = np.zeros((n, m), np.int32)
+    for lo in range(0, n, chunk):
+        hi = min(n, lo + chunk)
+        ci = merged[lo:hi]
+        vi = x[np.maximum(ci, 0)]
+        du = ((vi - x[lo:hi, None, :]) ** 2).sum(axis=2).astype(np.float32)
+        du = np.where((ci >= 0) & (ci != np.arange(lo, hi)[:, None]), du, np.inf)
+        ord_ = np.argsort(du, axis=1, kind="stable")
+        ci_s = np.where(np.take_along_axis(du, ord_, 1) < np.inf,
+                        np.take_along_axis(ci, ord_, 1), -1)
+        du_s = np.take_along_axis(du, ord_, axis=1)
+        pd = _pairwise_sq(jnp.asarray(x[np.maximum(ci_s, 0)]))
+        out[lo:hi] = np.asarray(_robust_prune(
+            jnp.asarray(ci_s), jnp.asarray(du_s), pd, m, alpha2))
+    return out
+
+
+def build(x: np.ndarray, m: int = 16, *, ef_construction: int = 64,
+          passes: int = 2, alpha: float = 1.2, chunk: int = 1024,
+          seed: int = 0) -> HNSWIndex:
+    """Vamana-style batch build (see module docstring).
+
+    Random-init R-regular graph (global connectivity), then `passes` rounds:
+    for each node batch, beam-search the current graph for the node itself
+    (ef_construction frontier = candidate pool), RobustPrune to m forward
+    edges, then merge reverse proposals and re-prune. `alpha` is the metric-
+    space diversification factor (applied as alpha^2 in squared-L2 space).
+    """
+    x = np.asarray(x, np.float32)
+    n, d = x.shape
+    xs = jnp.asarray(x)
+    sq = jnp.sum(xs**2, axis=1)
+    rng = np.random.default_rng(seed)
+    alpha2 = float(alpha) ** 2
+
+    neighbors = rng.integers(0, n, size=(n, m), dtype=np.int64).astype(np.int32)
+    neighbors = _dedup_rows_vec(neighbors)
+    entry = int(np.argmin(((x - x.mean(0)) ** 2).sum(1)))
+    # Routing sample = upper-layer stand-in (uniform, like HNSW level draws).
+    r = int(min(8192, max(64, n // 64)))
+    route_ids = jnp.asarray(rng.choice(n, size=min(r, n), replace=False)
+                            .astype(np.int32))
+    efc = max(ef_construction, 2 * m)
+
+    for _ in range(passes):
+        idx = HNSWIndex(vectors=xs, sqnorm=sq,
+                        neighbors=jnp.asarray(neighbors),
+                        entry=jnp.asarray(entry, jnp.int32),
+                        route_ids=route_ids)
+        fwd = np.zeros((n, m), np.int32)
+        for lo in range(0, n, chunk):
+            hi = min(n, lo + chunk)
+            _, _, s = search(idx, xs[lo:hi], k=m, ef=efc,
+                             max_steps=4 * efc)
+            cd = np.asarray(s.cand_d)
+            ci = np.asarray(s.cand_i)
+            # drop self from the candidate pool
+            is_self = ci == np.arange(lo, hi)[:, None]
+            cd = np.where(is_self | (ci < 0), np.inf, cd)
+            ord_ = np.argsort(cd, axis=1, kind="stable")
+            ci_s = np.where(np.take_along_axis(cd, ord_, 1) < np.inf,
+                            np.take_along_axis(ci, ord_, 1), -1)
+            cd_s = np.take_along_axis(cd, ord_, axis=1)
+            pd = _pairwise_sq(xs[jnp.maximum(jnp.asarray(ci_s), 0)])
+            fwd[lo:hi] = np.asarray(_robust_prune(
+                jnp.asarray(ci_s), jnp.asarray(cd_s), pd, m, alpha2))
+        rev = _reverse_edges(fwd, m)
+        # Union with the previous graph: keeps the long "highway" edges the
+        # frontier-only candidate pool cannot see (Vamana's visited-set role).
+        merged = _dedup_rows_vec(np.concatenate([fwd, rev, neighbors], axis=1))
+        neighbors = _prune_merged(x, merged, m, alpha2, chunk)
+
+    return HNSWIndex(vectors=xs, sqnorm=sq,
+                     neighbors=jnp.asarray(neighbors),
+                     entry=jnp.asarray(entry, jnp.int32),
+                     route_ids=route_ids)
+
+
+# ---------------------------------------------------------------------------
+# Search
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class HNSWSearchState:
+    q: jax.Array         # f32[B, D]
+    qsq: jax.Array       # f32[B, 1]
+    cand_d: jax.Array    # f32[B, ef] ascending (frontier + results)
+    cand_i: jax.Array    # i32[B, ef]
+    cand_exp: jax.Array  # bool[B, ef]
+    visited: jax.Array   # bool[B, N]
+    first_nn: jax.Array  # f32[B]
+    active: jax.Array    # bool[B]
+    ndis: jax.Array      # i32[B]
+    ninserts: jax.Array  # i32[B]
+    nstep: jax.Array     # i32[B]
+
+    def topk(self, k: int) -> Tuple[jax.Array, jax.Array]:
+        return self.cand_d[:, :k], self.cand_i[:, :k]
+
+
+@functools.partial(jax.jit, static_argnames=("ef",))
+def init_state(index: HNSWIndex, q: jax.Array, *, ef: int) -> HNSWSearchState:
+    b = q.shape[0]
+    n = index.num_vectors
+    qf = q.astype(jnp.float32)
+    qsq = jnp.sum(qf**2, axis=1, keepdims=True)
+    # Upper-layer stand-in: one dense scan of the routing sample picks a
+    # per-query base-layer entry (greedy descent's role in HNSW).
+    rv = index.vectors[index.route_ids]                     # [R, D]
+    rd = (index.sqnorm[index.route_ids][None, :]
+          - 2.0 * qf @ rv.T + qsq)                          # [B, R]
+    r_best = jnp.argmin(rd, axis=1)
+    e = index.route_ids[r_best]                             # [B]
+    ed = jnp.maximum(jnp.take_along_axis(rd, r_best[:, None], 1)[:, 0], 0.0)
+    first_nn = jnp.sqrt(ed)
+    cand_d = jnp.full((b, ef), jnp.inf, jnp.float32).at[:, 0].set(ed)
+    cand_i = jnp.full((b, ef), -1, jnp.int32).at[:, 0].set(e)
+    cand_exp = jnp.zeros((b, ef), bool)
+    visited = jnp.zeros((b, n), bool).at[jnp.arange(b), e].set(True)
+    return HNSWSearchState(
+        q=qf, qsq=qsq, cand_d=cand_d, cand_i=cand_i, cand_exp=cand_exp,
+        visited=visited, first_nn=first_nn,
+        active=jnp.ones((b,), bool),
+        ndis=jnp.ones((b,), jnp.int32),
+        ninserts=jnp.ones((b,), jnp.int32),
+        nstep=jnp.zeros((b,), jnp.int32),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def beam_step(index: HNSWIndex, s: HNSWSearchState, *,
+              k: int) -> HNSWSearchState:
+    """Expand the closest unexpanded candidate of every active query."""
+    b, ef = s.cand_d.shape
+    mdeg = index.degree
+
+    unexp_d = jnp.where(s.cand_exp | (s.cand_i < 0), jnp.inf, s.cand_d)
+    sel = jnp.argmin(unexp_d, axis=1)                       # [B]
+    sel_d = jnp.take_along_axis(unexp_d, sel[:, None], 1)[:, 0]
+    # Natural termination: no unexpanded candidate among the best ef.
+    natural_stop = ~jnp.isfinite(sel_d)
+    act = s.active & ~natural_stop
+
+    sel_id = jnp.take_along_axis(s.cand_i, sel[:, None], 1)[:, 0]
+    sel_id_safe = jnp.maximum(sel_id, 0)
+    onehot = jax.lax.broadcasted_iota(jnp.int32, (b, ef), 1) == sel[:, None]
+    cand_exp = s.cand_exp | (onehot & act[:, None])
+
+    nbrs = index.neighbors[sel_id_safe]                     # [B, M]
+    valid = (nbrs >= 0) & act[:, None]
+    nbrs_safe = jnp.maximum(nbrs, 0)
+    seen = jnp.take_along_axis(s.visited, nbrs_safe, axis=1)
+    new = valid & ~seen
+    visited = s.visited.at[
+        jnp.arange(b)[:, None], jnp.where(valid, nbrs_safe, 0)].max(valid)
+
+    vecs = index.vectors[nbrs_safe]                         # [B, M, D]
+    dist = (index.sqnorm[nbrs_safe] - 2.0 * jnp.einsum("bd,bmd->bm", s.q, vecs)
+            + s.qsq)
+    dist = jnp.where(new, jnp.maximum(dist, 0.0), jnp.inf)
+
+    old_kth = s.cand_d[:, k - 1]
+    cand_d = jnp.concatenate([s.cand_d, dist], axis=1)
+    cand_i = jnp.concatenate([s.cand_i, nbrs], axis=1)
+    cand_e = jnp.concatenate([cand_exp, jnp.zeros((b, mdeg), bool)], axis=1)
+    neg, pos = jax.lax.top_k(-cand_d, ef)
+    new_d = -neg
+    new_i = jnp.take_along_axis(cand_i, pos, axis=1)
+    new_e = jnp.take_along_axis(cand_e, pos, axis=1)
+
+    inserts = jnp.minimum(jnp.sum(dist < old_kth[:, None], axis=1), k)
+    return HNSWSearchState(
+        q=s.q, qsq=s.qsq,
+        cand_d=jnp.where(act[:, None], new_d, s.cand_d),
+        cand_i=jnp.where(act[:, None], new_i, s.cand_i),
+        cand_exp=jnp.where(act[:, None], new_e, cand_exp),
+        visited=visited, first_nn=s.first_nn,
+        active=act,
+        ndis=s.ndis + jnp.where(act, jnp.sum(new, axis=1), 0).astype(jnp.int32),
+        ninserts=s.ninserts + jnp.where(act, inserts, 0).astype(jnp.int32),
+        nstep=s.nstep + act.astype(jnp.int32),
+    )
+
+
+def search(index: HNSWIndex, q: jax.Array, *, k: int, ef: int,
+           max_steps: int = 0) -> Tuple[jax.Array, jax.Array, HNSWSearchState]:
+    """Plain HNSW search to natural termination."""
+    s = init_state(index, q, ef=ef)
+    limit = max_steps or index.num_vectors
+
+    def cond(carry):
+        s, t = carry
+        return s.active.any() & (t < limit)
+
+    def body(carry):
+        s, t = carry
+        return beam_step(index, s, k=k), t + 1
+
+    s, _ = jax.lax.while_loop(cond, body, (s, jnp.asarray(0, jnp.int32)))
+    d, i = s.topk(k)
+    return d, i, s

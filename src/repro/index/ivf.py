@@ -1,0 +1,212 @@
+"""IVF index with a step-wise probe API (the shape DARTH drives).
+
+TPU-native layout (DESIGN.md §2): bucket-major padded storage
+``[nlist, cap, D]`` — every probe is a fixed-shape gather + batched matvec,
+so the whole search is jit/scan/while-able with per-query active masks.
+
+The probe loop exposes exactly the counters DARTH's features need:
+``ndis`` advances by the *true* bucket population (padding excluded),
+``nstep`` is the probe number, ``firstNN`` is the distance to the nearest
+centroid (paper §3.3.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.index import kmeans as kmeans_lib
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class IVFIndex:
+    centroids: jax.Array      # f32[nlist, D]
+    bucket_vecs: jax.Array    # f32|int8[nlist, cap, D] (zero padded)
+    bucket_ids: jax.Array     # i32[nlist, cap] (-1 padding)
+    bucket_sqnorm: jax.Array  # f32[nlist, cap] (+inf padding) — of the
+    #                           DEQUANTIZED vectors when SQ8
+    bucket_sizes: jax.Array   # i32[nlist]
+    # SQ8 affine dequant (x_hat = scale * x8 + offset, per dim); identity
+    # (ones/zeros) for f32 storage.
+    scale: jax.Array          # f32[D]
+    offset: jax.Array         # f32[D]
+
+    @property
+    def quantized(self) -> bool:
+        return self.bucket_vecs.dtype == jnp.int8
+
+    @property
+    def nlist(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def cap(self) -> int:
+        return self.bucket_vecs.shape[1]
+
+    @property
+    def dim(self) -> int:
+        return self.centroids.shape[1]
+
+    @property
+    def num_vectors(self) -> int:
+        return int(jax.device_get(self.bucket_sizes).sum())
+
+
+def build(x: np.ndarray, nlist: int, *, iters: int = 15, seed: int = 0,
+          cap_round: int = 8, quantize: bool = False) -> IVFIndex:
+    """Cluster + bucket-major layout. cap = max bucket size rounded up.
+
+    quantize=True stores vectors as SQ8 (per-dim affine int8): 4x less HBM
+    at search time with asymmetric (f32-query vs dequantized-db) distances;
+    bucket_sqnorm is computed on the dequantized vectors so reported
+    distances match what the quantized search actually measures.
+    """
+    x = np.asarray(x, np.float32)
+    n, d = x.shape
+    cents = kmeans_lib.kmeans(x, nlist, iters=iters, seed=seed)
+    a = np.asarray(kmeans_lib.assign(jnp.asarray(x), jnp.asarray(cents)))
+    order = np.argsort(a, kind="stable")
+    sizes = np.bincount(a, minlength=nlist)
+    cap = int(max(8, -(-int(sizes.max()) // cap_round) * cap_round))
+
+    if quantize:
+        lo = x.min(axis=0)
+        hi = x.max(axis=0)
+        scale = np.maximum((hi - lo) / 254.0, 1e-12).astype(np.float32)
+        offset = ((hi + lo) / 2.0).astype(np.float32)
+        x8 = np.clip(np.round((x - offset) / scale), -127, 127
+                     ).astype(np.int8)
+        x_store = x8
+        x_deq = x8.astype(np.float32) * scale + offset
+        store_dtype = np.int8
+    else:
+        scale = np.ones((d,), np.float32)
+        offset = np.zeros((d,), np.float32)
+        x_store = x
+        x_deq = x
+        store_dtype = np.float32
+
+    bucket_vecs = np.zeros((nlist, cap, d), store_dtype)
+    bucket_ids = np.full((nlist, cap), -1, np.int32)
+    bucket_sqnorm = np.full((nlist, cap), np.inf, np.float32)
+    start = 0
+    for c in range(nlist):
+        sz = int(sizes[c])
+        ids = order[start:start + sz]
+        start += sz
+        bucket_vecs[c, :sz] = x_store[ids]
+        bucket_ids[c, :sz] = ids
+        bucket_sqnorm[c, :sz] = (x_deq[ids] ** 2).sum(axis=1)
+    return IVFIndex(
+        centroids=jnp.asarray(cents),
+        bucket_vecs=jnp.asarray(bucket_vecs),
+        bucket_ids=jnp.asarray(bucket_ids),
+        bucket_sqnorm=jnp.asarray(bucket_sqnorm),
+        bucket_sizes=jnp.asarray(sizes.astype(np.int32)),
+        scale=jnp.asarray(scale),
+        offset=jnp.asarray(offset),
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class IVFSearchState:
+    q: jax.Array            # f32[B, D]
+    qsq: jax.Array          # f32[B, 1]
+    probe_order: jax.Array  # i32[B, nprobe] ranked centroids
+    first_nn: jax.Array     # f32[B] distance to nearest centroid
+    probe_pos: jax.Array    # i32[B] next probe
+    topk_d: jax.Array       # f32[B, K] ascending (inf = empty)
+    topk_i: jax.Array       # i32[B, K] (-1 = empty)
+    active: jax.Array       # bool[B]
+    ndis: jax.Array         # i32[B] true distance calcs so far
+    ninserts: jax.Array     # i32[B] result-set updates so far
+
+
+@functools.partial(jax.jit, static_argnames=("k", "nprobe"))
+def init_state(index: IVFIndex, q: jax.Array, *, k: int,
+               nprobe: int) -> IVFSearchState:
+    b = q.shape[0]
+    qf = q.astype(jnp.float32)
+    qsq = jnp.sum(qf**2, axis=1, keepdims=True)
+    cd = (jnp.sum(index.centroids**2, axis=1)[None, :]
+          - 2.0 * qf @ index.centroids.T)                      # [B, nlist]
+    neg, order = jax.lax.top_k(-cd, nprobe)
+    first_nn = jnp.sqrt(jnp.maximum(-neg[:, 0] + qsq[:, 0], 0.0))
+    return IVFSearchState(
+        q=qf, qsq=qsq,
+        probe_order=order.astype(jnp.int32),
+        first_nn=first_nn,
+        probe_pos=jnp.zeros((b,), jnp.int32),
+        topk_d=jnp.full((b, k), jnp.inf, jnp.float32),
+        topk_i=jnp.full((b, k), -1, jnp.int32),
+        active=jnp.ones((b,), bool),
+        ndis=jnp.zeros((b,), jnp.int32),
+        ninserts=jnp.zeros((b,), jnp.int32),
+    )
+
+
+@jax.jit
+def probe_step(index: IVFIndex, s: IVFSearchState) -> IVFSearchState:
+    """Scan one bucket per active query; merge global top-k; bump counters."""
+    b, k = s.topk_d.shape
+    nprobe = s.probe_order.shape[1]
+    pos = jnp.minimum(s.probe_pos, nprobe - 1)
+    bucket = jnp.take_along_axis(s.probe_order, pos[:, None], axis=1)[:, 0]
+
+    vecs = index.bucket_vecs[bucket]        # [B, cap, D] (f32 or int8)
+    ids = index.bucket_ids[bucket]          # [B, cap]
+    sqn = index.bucket_sqnorm[bucket]       # [B, cap]
+    sizes = index.bucket_sizes[bucket]      # [B]
+
+    if index.quantized:
+        # asymmetric SQ8: q . x_hat = (q*scale) . x8 + q . offset
+        qa = s.q * index.scale[None, :]
+        dots = (jnp.einsum("bd,bcd->bc", qa, vecs.astype(jnp.float32))
+                + (s.q @ index.offset)[:, None])
+    else:
+        dots = jnp.einsum("bd,bcd->bc", s.q, vecs)
+    dist = sqn - 2.0 * dots + s.qsq
+    dist = jnp.where(ids >= 0, jnp.maximum(dist, 0.0), jnp.inf)
+    # Inactive queries contribute nothing.
+    dist = jnp.where(s.active[:, None], dist, jnp.inf)
+
+    old_kth = s.topk_d[:, -1]
+    cand_d = jnp.concatenate([s.topk_d, dist], axis=1)
+    cand_i = jnp.concatenate([s.topk_i, ids], axis=1)
+    neg, sel = jax.lax.top_k(-cand_d, k)
+    new_d = -neg
+    new_i = jnp.take_along_axis(cand_i, sel, axis=1)
+
+    inserts = jnp.sum(dist < old_kth[:, None], axis=1).astype(jnp.int32)
+    inserts = jnp.minimum(inserts, k)
+    done_probes = s.probe_pos + s.active.astype(jnp.int32)
+    return IVFSearchState(
+        q=s.q, qsq=s.qsq, probe_order=s.probe_order, first_nn=s.first_nn,
+        probe_pos=done_probes,
+        topk_d=jnp.where(s.active[:, None], new_d, s.topk_d),
+        topk_i=jnp.where(s.active[:, None], new_i, s.topk_i),
+        active=s.active & (done_probes < nprobe),
+        ndis=s.ndis + jnp.where(s.active, sizes, 0).astype(jnp.int32),
+        ninserts=s.ninserts + jnp.where(s.active, inserts, 0),
+    )
+
+
+def search(index: IVFIndex, q: jax.Array, *, k: int,
+           nprobe: int) -> Tuple[jax.Array, jax.Array, IVFSearchState]:
+    """Plain (no early termination) IVF search: scan all nprobe buckets."""
+    s = init_state(index, q, k=k, nprobe=nprobe)
+
+    def cond(s):
+        return s.active.any()
+
+    def body(s):
+        return probe_step(index, s)
+
+    s = jax.lax.while_loop(cond, body, s)
+    return s.topk_d, s.topk_i, s

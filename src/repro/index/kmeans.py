@@ -1,0 +1,82 @@
+"""Lloyd's k-means in JAX (IVF coarse quantizer).
+
+kmeans++-style seeding on a subsample, then jitted Lloyd iterations with
+chunked assignment (the assignment hot loop is the same fused distance
+pattern as kernels/l2_topk; on CPU we use the XLA path for speed, on TPU
+the Pallas kernel path).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def assign(x: jax.Array, centroids: jax.Array, chunk: int = 8192) -> jax.Array:
+    """Nearest-centroid assignment. x: [N, D], centroids: [C, D] -> int32[N]."""
+    n = x.shape[0]
+    csq = jnp.sum(centroids**2, axis=1)
+
+    def one(chunk_x):
+        d = csq[None, :] - 2.0 * chunk_x @ centroids.T
+        return jnp.argmin(d, axis=1).astype(jnp.int32)
+
+    pad = (-n) % chunk
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    out = jax.lax.map(one, xp.reshape(-1, chunk, x.shape[1]))
+    return out.reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, donate_argnums=(1,))
+def _lloyd_step(x: jax.Array, centroids: jax.Array,
+                key: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    c = centroids.shape[0]
+    a = assign(x, centroids)
+    sums = jax.ops.segment_sum(x, a, num_segments=c)
+    counts = jax.ops.segment_sum(jnp.ones((x.shape[0],), jnp.float32), a,
+                                 num_segments=c)
+    new = sums / jnp.maximum(counts, 1.0)[:, None]
+    # Re-seed empty clusters from random points.
+    rand_idx = jax.random.randint(key, (c,), 0, x.shape[0])
+    new = jnp.where((counts > 0)[:, None], new, x[rand_idx])
+    shift = jnp.sum((new - centroids) ** 2)
+    return new, shift
+
+
+def kmeans(x: np.ndarray, num_clusters: int, iters: int = 15,
+           seed: int = 0, sample: int = 200_000) -> np.ndarray:
+    """Fit centroids. Returns float32[num_clusters, D]."""
+    x = jnp.asarray(x, jnp.float32)
+    n = x.shape[0]
+    key = jax.random.PRNGKey(seed)
+    k_init, key = jax.random.split(key)
+    train = x
+    if n > sample:
+        idx = jax.random.choice(k_init, n, (sample,), replace=False)
+        train = x[idx]
+
+    # kmeans++-lite seeding: d2-weighted sequential picks on a subsample.
+    k_seed, key = jax.random.split(key)
+    seed_pool = train[jax.random.choice(k_seed, train.shape[0],
+                                        (min(train.shape[0], 20 * num_clusters),),
+                                        replace=False)]
+    cents = [seed_pool[0]]
+    d2 = jnp.sum((seed_pool - cents[0]) ** 2, axis=1)
+    for i in range(1, num_clusters):
+        k_i = jax.random.fold_in(key, i)
+        p = d2 / jnp.maximum(d2.sum(), 1e-9)
+        pick = jax.random.choice(k_i, seed_pool.shape[0], p=p)
+        cents.append(seed_pool[pick])
+        d2 = jnp.minimum(d2, jnp.sum((seed_pool - cents[-1]) ** 2, axis=1))
+    centroids = jnp.stack(cents)
+
+    for i in range(iters):
+        centroids, shift = _lloyd_step(train, centroids,
+                                       jax.random.fold_in(key, 10_000 + i))
+        if float(shift) < 1e-7:
+            break
+    return np.asarray(centroids)

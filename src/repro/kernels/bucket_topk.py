@@ -1,0 +1,100 @@
+"""Fused IVF probe step: per-query bucket distances + running top-k merge.
+
+This is DARTH-on-IVF's hot loop (paper §3.3.2): each active query scans
+its next bucket [cap, D] and merges into its running top-k. Unlike
+l2_topk (one shared DB for all queries), every query here has its OWN
+gathered bucket, so the distance work is a batched matvec, not a shared
+matmul.
+
+Kernel layout: grid over query tiles; per tile the kernel holds
+q [bq, D], bucket vecs [bq, C, D], squared norms, ids, and the running
+top-k in VMEM (bq=8, C=512, D=128 -> ~2.3 MB), computes
+dist = ||x||^2 - 2 q.x + ||q||^2 via an elementwise multiply-reduce on
+the VPU, then runs the same K-step masked-min merge as l2_topk.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bucket_topk_kernel(q_ref, vecs_ref, sqn_ref, ids_ref, ind_ref, ini_ref,
+                        outd_ref, outi_ref, *, k: int):
+    q = q_ref[...].astype(jnp.float32)            # [bq, D]
+    vecs = vecs_ref[...].astype(jnp.float32)      # [bq, C, D]
+    sqn = sqn_ref[...].astype(jnp.float32)        # [bq, C]
+    ids = ids_ref[...]                            # [bq, C]
+    run_d = ind_ref[...].astype(jnp.float32)      # [bq, K]
+    run_i = ini_ref[...]                          # [bq, K]
+
+    qsq = jnp.sum(q * q, axis=1, keepdims=True)   # [bq, 1]
+    dots = jnp.sum(vecs * q[:, None, :], axis=2)  # [bq, C] (VPU reduce)
+    dist = sqn - 2.0 * dots + qsq
+    dist = jnp.where(ids >= 0, jnp.maximum(dist, 0.0), jnp.inf)
+
+    cand_d = jnp.concatenate([run_d, dist], axis=1)      # [bq, K+C]
+    cand_i = jnp.concatenate([run_i, ids], axis=1)
+    col = jax.lax.broadcasted_iota(jnp.int32, cand_d.shape, 1)
+    out_col = jax.lax.broadcasted_iota(jnp.int32, run_d.shape, 1)
+    new_d = jnp.zeros_like(run_d)
+    new_i = jnp.zeros_like(run_i)
+
+    def body(t, carry):
+        cand_d, cand_i, new_d, new_i = carry
+        m = jnp.min(cand_d, axis=1)
+        am = jnp.argmin(cand_d, axis=1).astype(jnp.int32)
+        sel = col == am[:, None]
+        mi = jnp.sum(jnp.where(sel, cand_i, 0), axis=1)
+        write = out_col == t
+        new_d = jnp.where(write, m[:, None], new_d)
+        new_i = jnp.where(write, mi[:, None], new_i)
+        cand_d = jnp.where(sel, jnp.inf, cand_d)
+        return cand_d, cand_i, new_d, new_i
+
+    _, _, new_d, new_i = jax.lax.fori_loop(
+        0, k, body, (cand_d, cand_i, new_d, new_i))
+    outd_ref[...] = new_d
+    outi_ref[...] = new_i
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "interpret"))
+def bucket_topk_padded(q: jax.Array, vecs: jax.Array, sqn: jax.Array,
+                       ids: jax.Array, run_d: jax.Array, run_i: jax.Array,
+                       *, bq: int = 8, interpret: bool = False
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Pre-padded fused probe. q: [B, D] (B % bq == 0), vecs: [B, C, D],
+    sqn/ids: [B, C], run_d/run_i: [B, K]. Returns merged (dist, ids)."""
+    b, d = q.shape
+    c = vecs.shape[1]
+    k = run_d.shape[1]
+    assert b % bq == 0, (b, bq)
+    kernel = functools.partial(_bucket_topk_kernel, k=k)
+    outd, outi = pl.pallas_call(
+        kernel,
+        grid=(b // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((bq, c, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bq, c), lambda i: (i, 0)),
+            pl.BlockSpec((bq, c), lambda i: (i, 0)),
+            pl.BlockSpec((bq, k), lambda i: (i, 0)),
+            pl.BlockSpec((bq, k), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda i: (i, 0)),
+            pl.BlockSpec((bq, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(q, vecs, sqn, ids, run_d, run_i)
+    return outd, outi

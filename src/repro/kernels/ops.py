@@ -1,0 +1,91 @@
+"""Public jit'd wrappers for the Pallas kernels: padding, norm handling,
+interpret-mode fallback (this container is CPU-only; TPU is the target).
+
+`use_pallas` defaults to interpret-mode kernels on CPU so every caller in
+the framework exercises the kernel path in tests; pure-XLA fallbacks
+(`ref.py`) remain available and are what the dry-run lowers (Mosaic does not
+compile for the CPU backend).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.gbdt.model import GBDTParams
+from repro.kernels import ref
+from repro.kernels.bucket_topk import bucket_topk_padded
+from repro.kernels.gbdt_predict import gbdt_predict_padded
+from repro.kernels.l2_topk import l2_topk_padded
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bq", "bn", "interpret"))
+def l2_topk(q: jax.Array, x: jax.Array, *, k: int,
+            x_sqnorm: Optional[jax.Array] = None,
+            bq: int = 128, bn: int = 512,
+            interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Fused top-k nearest (squared L2). Handles padding; returns true
+    squared distances (|| q ||^2 added back), ascending, with int32 ids;
+    padded/invalid slots have dist=+inf, id=-1."""
+    b, d = q.shape
+    n = x.shape[0]
+    if x_sqnorm is None:
+        x_sqnorm = jnp.sum(x.astype(jnp.float32) ** 2, axis=1)
+    bq_eff = min(bq, _round_up(b, 8))
+    bn_eff = min(bn, _round_up(n, 128))
+    bp = _round_up(b, bq_eff)
+    np_ = _round_up(n, bn_eff)
+    qp = jnp.pad(q, ((0, bp - b), (0, 0)))
+    xp = jnp.pad(x, ((0, np_ - n), (0, 0)))
+    xsqp = jnp.pad(x_sqnorm, (0, np_ - n), constant_values=jnp.inf)
+    dist, idx = l2_topk_padded(qp, xp, xsqp, k=k, bq=bq_eff, bn=bn_eff,
+                               interpret=interpret)
+    dist = dist[:b] + jnp.sum(q.astype(jnp.float32) ** 2, axis=1, keepdims=True)
+    idx = idx[:b]
+    dist = jnp.where(idx >= 0, jnp.maximum(dist, 0.0), jnp.inf)
+    return dist, idx
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "interpret"))
+def gbdt_predict(params: GBDTParams, x: jax.Array, *, bq: int = 64,
+                 interpret: bool = True) -> jax.Array:
+    """Batched ensemble inference via the Pallas kernel. x: [B, F] -> [B]."""
+    b, f = x.shape
+    bq_eff = min(bq, _round_up(b, 8))
+    bp = _round_up(b, bq_eff)
+    xp = jnp.pad(x, ((0, bp - b), (0, 0)))
+    out = gbdt_predict_padded(xp, params.feat, params.thresh, params.leaf,
+                              bq=bq_eff, interpret=interpret)
+    return params.base + out[:b]
+
+
+# Pure-XLA equivalents (used in lowering paths where Mosaic is unavailable).
+l2_topk_xla = jax.jit(ref.l2_topk_ref, static_argnames=("k",))
+gbdt_predict_xla = jax.jit(ref.gbdt_predict_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "interpret"))
+def bucket_topk(q: jax.Array, vecs: jax.Array, sqn: jax.Array,
+                ids: jax.Array, run_d: jax.Array, run_i: jax.Array, *,
+                bq: int = 8, interpret: bool = True):
+    """Fused IVF probe step (per-query bucket + running top-k merge)."""
+    b = q.shape[0]
+    bq_eff = min(bq, _round_up(b, 4))
+    bp = _round_up(b, bq_eff)
+    pad = bp - b
+    if pad:
+        q = jnp.pad(q, ((0, pad), (0, 0)))
+        vecs = jnp.pad(vecs, ((0, pad), (0, 0), (0, 0)))
+        sqn = jnp.pad(sqn, ((0, pad), (0, 0)), constant_values=jnp.inf)
+        ids = jnp.pad(ids, ((0, pad), (0, 0)), constant_values=-1)
+        run_d = jnp.pad(run_d, ((0, pad), (0, 0)), constant_values=jnp.inf)
+        run_i = jnp.pad(run_i, ((0, pad), (0, 0)), constant_values=-1)
+    d, i = bucket_topk_padded(q, vecs, sqn, ids, run_d, run_i,
+                              bq=bq_eff, interpret=interpret)
+    return d[:b], i[:b]

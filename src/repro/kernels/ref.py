@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness references: slow, obvious, allocation-happy.
+Kernel tests sweep shapes/dtypes and assert_allclose against these.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.gbdt.model import GBDTParams
+
+
+def l2_topk_ref(q: jax.Array, x: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Exact squared-L2 top-k. q: [B, D], x: [N, D] -> (dist [B,k], idx [B,k]).
+
+    Distances are true squared L2 (including the ||q||^2 term), ascending.
+    """
+    qf = q.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    d2 = (jnp.sum(qf**2, 1)[:, None] + jnp.sum(xf**2, 1)[None, :]
+          - 2.0 * qf @ xf.T)
+    d2 = jnp.maximum(d2, 0.0)
+    neg, idx = jax.lax.top_k(-d2, k)
+    return -neg, idx.astype(jnp.int32)
+
+
+def gbdt_predict_ref(params: GBDTParams, x: jax.Array) -> jax.Array:
+    """Oracle GBDT inference: per-sample, per-tree python-level descent."""
+    depth = params.depth
+    b = x.shape[0]
+    t = params.num_trees
+    node = jnp.zeros((b, t), jnp.int32)
+    for _ in range(depth):
+        f = jnp.take_along_axis(params.feat[None].repeat(b, 0), node[..., None], 2)[..., 0]
+        thr = jnp.take_along_axis(params.thresh[None].repeat(b, 0), node[..., None], 2)[..., 0]
+        xv = jnp.take_along_axis(x.astype(jnp.float32), jnp.maximum(f, 0), 1)
+        node = 2 * node + 1 + ((xv > thr) & (f >= 0)).astype(jnp.int32)
+    leaf = node - (2**depth - 1)
+    vals = jnp.take_along_axis(params.leaf[None].repeat(b, 0), leaf[..., None], 2)[..., 0]
+    return params.base + vals.sum(1)
+
+
+def bucket_topk_ref(q, vecs, sqn, ids, run_d, run_i):
+    """Oracle for the fused IVF probe: batched bucket distances merged into
+    the running top-k. q: [B,D]; vecs: [B,C,D]; sqn/ids: [B,C];
+    run_d/run_i: [B,K] ascending."""
+    qf = q.astype(jnp.float32)
+    dist = (sqn.astype(jnp.float32)
+            - 2.0 * jnp.einsum("bd,bcd->bc", qf, vecs.astype(jnp.float32))
+            + jnp.sum(qf**2, axis=1, keepdims=True))
+    dist = jnp.where(ids >= 0, jnp.maximum(dist, 0.0), jnp.inf)
+    cand_d = jnp.concatenate([run_d, dist], axis=1)
+    cand_i = jnp.concatenate([run_i, ids], axis=1)
+    k = run_d.shape[1]
+    neg, sel = jax.lax.top_k(-cand_d, k)
+    return -neg, jnp.take_along_axis(cand_i, sel, axis=1)

@@ -1,0 +1,210 @@
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input shape x mesh) cell with 512 placeholder host devices,
+record memory_analysis / cost_analysis / collective traffic.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m \
+      --shape train_4k [--multi-pod]           # one cell
+  PYTHONPATH=src python -m repro.launch.dryrun --all \
+      --out results/dryrun.json                # full sweep, both meshes
+"""
+# The VERY FIRST lines, before ANY other import (jax locks device count on
+# first init):
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.configs.base import SHAPES, runnable
+from repro.dist import sharding as sh
+from repro.launch import mesh as mesh_lib
+from repro.models import model_zoo
+from repro.train import step as step_lib
+from repro.utils import hlo as hlo_lib
+from repro.utils import meshctx
+
+
+def _ns_tree(spec_or_shard):
+    return spec_or_shard
+
+
+def lower_cell(arch: str, shape: str, *, multi_pod: bool,
+               overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """Lower+compile one cell; returns the roofline-input record."""
+    cfg = configs.get_config(arch)
+    cell = SHAPES[shape]
+    ok, reason = runnable(cfg, cell)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": cell.kind,
+    }
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    params_abs = model_zoo.abstract_params(cfg)
+    p_shard = sh.param_shardings(params_abs, mesh)
+    t0 = time.time()
+
+    overrides = overrides or {}
+    # Sequence parallelism for attention-family train/prefill (perf iter 6:
+    # 2x memory term, 5.8x temp memory on glm4). NOT for ssm/hybrid: their
+    # causal conv + chunked scans need the full sequence per device, and a
+    # seq-sharded residual thrashes reshardings every chunk (21 TB of
+    # collectives on zamba2 — iteration 6b, REFUTED for that family).
+    sp = (cell.kind in ("train", "prefill")
+          and cfg.family in ("dense", "moe", "vlm", "audio"))
+    with mesh, meshctx.use_mesh(mesh, sp=sp):
+        if cell.kind == "train":
+            init_opt, train_step = step_lib.make_train_step(
+                cfg, **overrides)
+            opt_abs = jax.eval_shape(init_opt, params_abs)
+            o_shard = sh.opt_shardings(opt_abs, params_abs, mesh)
+            specs = model_zoo.input_specs(cfg, cell.seq_len,
+                                          cell.global_batch, "train")
+            b_shard = sh.batch_shardings(specs["batch"], mesh, "train")
+            lowered = jax.jit(
+                train_step,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, None),
+                donate_argnums=(0, 1),
+            ).lower(params_abs, opt_abs, specs["batch"])
+        elif cell.kind == "prefill":
+            prefill_step = step_lib.make_prefill_step(cfg)
+            specs = model_zoo.input_specs(cfg, cell.seq_len,
+                                          cell.global_batch, "prefill")
+            b_shard = sh.batch_shardings(specs["batch"], mesh, "prefill")
+            lowered = jax.jit(
+                prefill_step, in_shardings=(p_shard, b_shard),
+            ).lower(params_abs, specs["batch"])
+        else:  # decode
+            serve_step = step_lib.make_serve_step(cfg)
+            specs = model_zoo.input_specs(cfg, cell.seq_len,
+                                          cell.global_batch, "decode")
+            c_shard = sh.cache_shardings(specs["cache"], mesh)
+            t_shard = sh.batch_shardings(specs["tokens"], mesh, "decode")
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            pos_shard = NamedSharding(mesh, P())
+            lowered = jax.jit(
+                serve_step,
+                in_shardings=(p_shard, c_shard, t_shard, pos_shard),
+                out_shardings=(None, c_shard),
+                donate_argnums=(1,),
+            ).lower(params_abs, specs["cache"], specs["tokens"],
+                    jax.ShapeDtypeStruct((), np.int32))
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ca = compiled.cost_analysis() or {}
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+        }
+    except Exception:  # pragma: no cover
+        mem = {}
+    analysis = hlo_lib.analyze(compiled.as_text())
+    coll = {k: analysis[k] for k in
+            list(hlo_lib.COLLECTIVES) + ["num_ops", "total"]}
+    rec.update(
+        status="ok",
+        lower_seconds=round(t_lower, 1),
+        compile_seconds=round(t_compile, 1),
+        # loop-weighted per-device numbers from the HLO parser (XLA's
+        # cost_analysis counts while bodies once -> undercounts scans)
+        hlo_flops=analysis["flops"],
+        hlo_bytes=analysis["hbm_bytes"],
+        # raw cost_analysis for reference
+        flops=float(ca.get("flops", 0.0)),
+        bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+        memory=mem,
+        collectives=coll,
+        num_devices=int(np.prod(list(mesh.shape.values()))),
+    )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="sweep all arch x shape x {single,multi}-pod")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--out", type=str, default="results/dryrun.json")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in configs.ALL_ARCHS:
+            for shape in SHAPES:
+                cells.append((arch, shape, False))
+                if not args.single_pod_only:
+                    cells.append((arch, shape, True))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results}
+
+    for arch, shape, mp in cells:
+        key = (arch, shape, "2x16x16" if mp else "16x16")
+        if key in done:
+            print(f"[skip-done] {key}")
+            continue
+        print(f"[dryrun] {key} ...", flush=True)
+        try:
+            rec = lower_cell(arch, shape, multi_pod=mp)
+        except Exception as e:  # record failures, keep sweeping
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": key[2], "status": "error",
+                   "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+        results.append(rec)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            extra = (f" flops={rec['flops']:.3g}"
+                     f" coll={rec['collectives']['total']:.3g}B"
+                     f" compile={rec['compile_seconds']}s")
+        elif status == "skipped":
+            extra = f" ({rec['reason'][:60]})"
+        else:
+            extra = f" ({rec['error'][:120]})"
+        print(f"[dryrun] {key} -> {status}{extra}", flush=True)
+
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\nDONE: {n_ok} ok, {n_skip} skipped (documented), {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Mesh-aware training launcher: the production version of train.loop.
+
+On real hardware this runs under the 16x16 / 2x16x16 mesh with the same
+shardings the dry-run compiles; on this CPU container it runs the identical
+code path on a (1,1) mesh (the logic — shardings, checkpoint/restart,
+restart-exact data — is shared with `repro.train.loop`, which the
+fault-tolerance tests exercise).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+      --steps 100 --global-batch 8 --seq-len 128 --scale 0.1
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro import ckpt, configs
+from repro.data.synthetic import PipelineConfig, TokenPipeline
+from repro.dist import sharding as sh
+from repro.launch import mesh as mesh_lib
+from repro.models import model_zoo
+from repro.train import step as step_lib
+from repro.utils import meshctx
+
+
+def reduced(cfg, scale: float):
+    """Width/depth-scaled variant for CPU-sized runs (scale=1 -> full)."""
+    if scale >= 1.0:
+        return cfg
+    def r(v, m=1):
+        return max(m, int(v * scale))
+    return cfg.scaled(
+        num_layers=r(cfg.num_layers, 2),
+        d_model=r(cfg.d_model // 64, 1) * 64,
+        num_heads=r(cfg.num_heads, 2),
+        num_kv_heads=max(1, min(r(cfg.num_kv_heads, 1), r(cfg.num_heads, 2))),
+        d_ff=r(cfg.d_ff // 64, 2) * 64,
+        vocab_size=min(cfg.vocab_size, 8192),
+        num_experts=r(cfg.num_experts, 4) if cfg.num_experts else 0,
+        moe_d_ff=r(cfg.moe_d_ff // 32, 2) * 32 if cfg.moe_d_ff else 0,
+        ssm_state=min(cfg.ssm_state, 32) if cfg.ssm_state else 0,
+        encoder_layers=r(cfg.encoder_layers, 1) if cfg.encoder_layers else 0,
+        frontend_len=min(cfg.frontend_len, 16) if cfg.frontend_len else 0,
+        frontend_dim=min(cfg.frontend_dim, 64) if cfg.frontend_dim else 0,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ALL_ARCHS)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--scale", type=float, default=0.1,
+                    help="model width/depth scale (1.0 = full config)")
+    ap.add_argument("--ckpt-dir", type=str, default="/tmp/repro_launch_train")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--peak-lr", type=float, default=1e-3)
+    args = ap.parse_args()
+
+    cfg = reduced(configs.get_config(args.arch), args.scale)
+    mesh = mesh_lib.make_host_mesh() if jax.device_count() == 1 else \
+        mesh_lib.make_production_mesh()
+    print(f"[train] {cfg.name} scale={args.scale} on "
+          f"{mesh_lib.describe(mesh)}")
+
+    pipe = TokenPipeline(PipelineConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+        global_batch=args.global_batch))
+    init_opt, train_step = step_lib.make_train_step(cfg,
+                                                    peak_lr=args.peak_lr)
+
+    with mesh, meshctx.use_mesh(mesh, sp=True):
+        params = model_zoo.init_params(cfg, jax.random.PRNGKey(0))
+        p_sh = sh.param_shardings(params, mesh)
+        params = jax.tree.map(jax.device_put, params, p_sh)
+        opt_state = init_opt(params)
+        step_fn = jax.jit(train_step, donate_argnums=(0, 1))
+
+        start = 0
+        if ckpt.latest_step(args.ckpt_dir) is not None:
+            (params, opt_state), meta = ckpt.restore(
+                args.ckpt_dir, (params, opt_state))
+            start = int(meta["extra"]["next_step"])
+            print(f"[train] resumed from step {start}")
+
+        t0 = time.time()
+        for s in range(start, args.steps):
+            batch = pipe.get_batch(s)
+            params, opt_state, m = step_fn(params, opt_state, batch)
+            if s % 10 == 0 or s == args.steps - 1:
+                print(f"step {s:5d} loss={float(m['loss']):.4f} "
+                      f"gnorm={float(m['grad_norm']):.2f} "
+                      f"({(time.time()-t0)/max(s-start+1,1):.2f}s/step)",
+                      flush=True)
+            if (s + 1) % args.ckpt_every == 0:
+                ckpt.save(args.ckpt_dir, s + 1, (params, opt_state),
+                          extra={"next_step": s + 1})
+    print("[train] done")
+
+
+if __name__ == "__main__":
+    main()

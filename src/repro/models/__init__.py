@@ -1,0 +1,4 @@
+"""LM substrate for the 10 assigned architectures."""
+from repro.models import layers, linear_attn, model_zoo, moe, transformer
+
+__all__ = ["layers", "linear_attn", "model_zoo", "moe", "transformer"]

@@ -1,0 +1,397 @@
+"""Core transformer layers: norms, RoPE, GQA attention (chunked flash-style
+prefill + KV-cache decode), SwiGLU MLP, cross-attention.
+
+Everything is shape-polymorphic pure functions over param dicts so the
+model zoo can stack them under `lax.scan` (one compiled block body
+regardless of depth — required to keep the 512-device dry-run compile
+tractable, DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.meshctx import constrain
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def nonparam_layernorm(x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """OLMo-style non-parametric LayerNorm (no scale/bias)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def apply_norm(kind: str, x: jax.Array, params: Optional[Params]) -> jax.Array:
+    if kind == "nonparam_ln":
+        return nonparam_layernorm(x)
+    return rmsnorm(x, params["scale"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 1e4) -> jax.Array:
+    """x: [B, S, H, Dh], positions: [B, S] or [S]."""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(dh, theta), jnp.float32)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, Dh/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+
+
+def attn_params_shape(d_model: int, dims: AttnDims):
+    h, kv, dh = dims.num_heads, dims.num_kv_heads, dims.head_dim
+    return {
+        "wq": (d_model, h * dh),
+        "wk": (d_model, kv * dh),
+        "wv": (d_model, kv * dh),
+        "wo": (h * dh, d_model),
+    }
+
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    """[B, S, Hkv, Dh] -> [B, S, Hkv*groups, Dh]."""
+    if groups == 1:
+        return k
+    b, s, hkv, dh = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, hkv, groups, dh)
+                            ).reshape(b, s, hkv * groups, dh)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, q_offset: int = 0,
+                      chunk: int = 512,
+                      kv_valid_len: Optional[jax.Array] = None) -> jax.Array:
+    """Flash-style attention in pure JAX: scan over KV chunks with running
+    (max, denom, acc). Memory O(S*chunk) instead of O(S^2).
+
+    Differentiable path: when kv_valid_len is None (train/prefill) this
+    dispatches to `flash_attention`, a custom_vjp whose backward recomputes
+    the probability tiles per chunk instead of saving them — without it the
+    scan stores [nkv, B, H, Sq, ckv] f32 residuals (16 GB/device/layer on
+    train_4k; see EXPERIMENTS.md §Perf).
+
+    q: [B, Sq, H, Dh]; k/v: [B, Skv, H, Dh] (kv heads already repeated).
+    q_offset: absolute position of q[0] (for causal masking in decode).
+    kv_valid_len: optional [B] valid kv prefix length (cache decode).
+    """
+    if kv_valid_len is None:
+        return flash_attention(q, k, v, causal, q_offset, chunk)
+    b, sq, h, dh = q.shape
+    skv = k.shape[1]
+    scale = np.float32(1.0 / np.sqrt(dh))
+    # Keep q/k/v in storage dtype (bf16 on the MXU); f32 accumulation via
+    # preferred_element_type — no materialized f32 copies of K/V.
+    qs = q * jnp.asarray(scale, q.dtype)
+
+    ckv = min(chunk, skv)
+    pad = (-skv) % ckv
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else k
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else v
+    nkv = (skv + pad) // ckv
+
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, j):
+        m, l, acc = carry
+        kcj = jax.lax.dynamic_slice_in_dim(kp, j * ckv, ckv, axis=1)
+        vcj = jax.lax.dynamic_slice_in_dim(vp, j * ckv, ckv, axis=1)
+        kv_pos = j * ckv + jnp.arange(ckv)
+        s_ij = jnp.einsum("bqhd,bkhd->bhqk", qs, kcj,
+                          preferred_element_type=jnp.float32)
+        mask = kv_pos[None, :] > q_pos[:, None] if causal else \
+            jnp.zeros((sq, ckv), bool)
+        invalid = kv_pos >= skv
+        if kv_valid_len is not None:
+            invalid = invalid[None, :] | (kv_pos[None, :]
+                                          >= kv_valid_len[:, None])
+            mask = mask[None, None] | invalid[:, None, None, :]
+        else:
+            mask = (mask | invalid[None, :])[None, None]
+        s_ij = jnp.where(mask, -jnp.inf, s_ij)
+        m_new = jnp.maximum(m, s_ij.max(axis=-1))
+        # Guard fully-masked rows (m_new = -inf).
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s_ij - m_safe[..., None])
+        p = jnp.where(mask, 0.0, p)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(q.dtype), vcj,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(nkv))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+# --- flash attention with memory-lean custom VJP -------------------------
+
+def _flash_fwd_core(q, k, v, causal: bool, q_offset: int, chunk: int):
+    """Returns (out [B,Sq,H,Dh], lse [B,H,Sq] f32)."""
+    b, sq, h, dh = q.shape
+    skv = k.shape[1]
+    scale = np.float32(1.0 / np.sqrt(dh))
+    qs = q * jnp.asarray(scale, q.dtype)
+    ckv = min(chunk, skv)
+    pad = (-skv) % ckv
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else k
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else v
+    nkv = (skv + pad) // ckv
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, j):
+        m, l, acc = carry
+        kcj = jax.lax.dynamic_slice_in_dim(kp, j * ckv, ckv, axis=1)
+        vcj = jax.lax.dynamic_slice_in_dim(vp, j * ckv, ckv, axis=1)
+        kv_pos = j * ckv + jnp.arange(ckv)
+        s_ij = jnp.einsum("bqhd,bkhd->bhqk", qs, kcj,
+                          preferred_element_type=jnp.float32)
+        mask = (kv_pos[None, :] > q_pos[:, None]) if causal else \
+            jnp.zeros((sq, ckv), bool)
+        mask = (mask | (kv_pos >= skv)[None, :])[None, None]
+        s_ij = jnp.where(mask, -jnp.inf, s_ij)
+        m_new = jnp.maximum(m, s_ij.max(axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.where(mask, 0.0, jnp.exp(s_ij - m_safe[..., None]))
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(q.dtype), vcj,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(nkv))
+    l_safe = jnp.maximum(l, 1e-30)
+    out = (acc / l_safe[..., None]).transpose(0, 2, 1, 3).astype(q.dtype)
+    lse = jnp.where(jnp.isfinite(m), m + jnp.log(l_safe), -jnp.inf)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal: bool = True, q_offset: int = 0,
+                    chunk: int = 512):
+    out, _ = _flash_fwd_core(q, k, v, causal, q_offset, chunk)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, q_offset, chunk):
+    out, lse = _flash_fwd_core(q, k, v, causal, q_offset, chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, q_offset, chunk, res, dout):
+    q, k, v, out, lse = res
+    b, sq, h, dh = q.shape
+    skv = k.shape[1]
+    scale = np.float32(1.0 / np.sqrt(dh))
+    ckv = min(chunk, skv)
+    pad = (-skv) % ckv
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else k
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else v
+    nkv = (skv + pad) // ckv
+    q_pos = q_offset + jnp.arange(sq)
+    # D = rowsum(dout * out), f32 [B, H, Sq]
+    d_row = jnp.einsum("bqhd,bqhd->bhq", dout.astype(jnp.float32),
+                       out.astype(jnp.float32))
+    lse_safe = jnp.where(jnp.isfinite(lse), lse, 0.0)
+
+    def body(dq, j):
+        kcj = jax.lax.dynamic_slice_in_dim(kp, j * ckv, ckv, axis=1)
+        vcj = jax.lax.dynamic_slice_in_dim(vp, j * ckv, ckv, axis=1)
+        kv_pos = j * ckv + jnp.arange(ckv)
+        s_ij = jnp.einsum("bqhd,bkhd->bhqk", q, kcj,
+                          preferred_element_type=jnp.float32) * scale
+        mask = (kv_pos[None, :] > q_pos[:, None]) if causal else \
+            jnp.zeros((sq, ckv), bool)
+        mask = (mask | (kv_pos >= skv)[None, :])[None, None]
+        p = jnp.where(mask, 0.0, jnp.exp(s_ij - lse_safe[..., None]))
+        pc = p.astype(q.dtype)
+        dv_j = jnp.einsum("bhqk,bqhd->bkhd", pc, dout,
+                          preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bqhd,bkhd->bhqk", dout, vcj,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - d_row[..., None]) * scale
+        dsc = ds.astype(q.dtype)
+        dq = dq + jnp.einsum("bhqk,bkhd->bqhd", dsc, kcj,
+                             preferred_element_type=jnp.float32)
+        dk_j = jnp.einsum("bhqk,bqhd->bkhd", dsc, q,
+                          preferred_element_type=jnp.float32)
+        return dq, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((b, sq, h, dh), jnp.float32)
+    dq, (dk_c, dv_c) = jax.lax.scan(body, dq0, jnp.arange(nkv))
+    dk = dk_c.transpose(1, 0, 2, 3, 4).reshape(b, nkv * ckv, h, dh)[:, :skv]
+    dv = dv_c.transpose(1, 0, 2, 3, 4).reshape(b, nkv * ckv, h, dh)[:, :skv]
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def gqa_attention(params: Params, x: jax.Array, dims: AttnDims, *,
+                  positions: Optional[jax.Array] = None, causal: bool = True,
+                  rope_theta: float = 1e4, chunk: int = 512,
+                  use_rope: bool = True) -> jax.Array:
+    """Self-attention over a full sequence (train / prefill)."""
+    b, s, _ = x.shape
+    h, kv, dh = dims.num_heads, dims.num_kv_heads, dims.head_dim
+    if positions is None:
+        positions = jnp.arange(s)
+    # ZeRO-3: storage is fsdp-sharded; gather weights (small) for compute
+    # so activations never lose their batch sharding (EXPERIMENTS.md §Perf).
+    wq = constrain(params["wq"], None, "tp")
+    wk = constrain(params["wk"], None, "tp")
+    wv = constrain(params["wv"], None, "tp")
+    q = constrain((x @ wq).reshape(b, s, h, dh), "dp", None, "tp", None)
+    k = constrain((x @ wk).reshape(b, s, kv, dh), "dp", None, "tp", None)
+    v = constrain((x @ wv).reshape(b, s, kv, dh), "dp", None, "tp", None)
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    k = _repeat_kv(k, h // kv)
+    v = _repeat_kv(v, h // kv)
+    out = chunked_attention(q, k, v, causal=causal, chunk=chunk)
+    wo = constrain(params["wo"], "tp", None)
+    return constrain(out.reshape(b, s, h * dh) @ wo, "dp", "sp", None)
+
+
+def gqa_decode(params: Params, x: jax.Array, cache_k: jax.Array,
+               cache_v: jax.Array, pos: jax.Array, dims: AttnDims, *,
+               rope_theta: float = 1e4, chunk: int = 2048,
+               use_rope: bool = True
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode with KV cache.
+
+    x: [B, 1, d]; cache_k/v: [B, S_max, Hkv, Dh]; pos: scalar current length.
+    Returns (out [B,1,d], new_cache_k, new_cache_v).
+    """
+    b = x.shape[0]
+    h, kv, dh = dims.num_heads, dims.num_kv_heads, dims.head_dim
+    wq = constrain(params["wq"], None, "tp")
+    wk = constrain(params["wk"], None, "tp")
+    wv = constrain(params["wv"], None, "tp")
+    q = (x @ wq).reshape(b, 1, h, dh)
+    k = (x @ wk).reshape(b, 1, kv, dh)
+    v = (x @ wv).reshape(b, 1, kv, dh)
+    posv = jnp.full((b, 1), pos, jnp.int32)
+    if use_rope:
+        q = apply_rope(q, posv, rope_theta)
+        k = apply_rope(k, posv, rope_theta)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                           (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                           (0, pos, 0, 0))
+    kk = _repeat_kv(cache_k, h // kv)
+    vv = _repeat_kv(cache_v, h // kv)
+    valid = jnp.full((b,), pos + 1, jnp.int32)
+    out = chunked_attention(q, kk, vv, causal=False, chunk=chunk,
+                            kv_valid_len=valid)
+    wo = constrain(params["wo"], "tp", None)
+    return out.reshape(b, 1, h * dh) @ wo, cache_k, cache_v
+
+
+def cross_attention(params: Params, x: jax.Array, enc: jax.Array,
+                    dims: AttnDims, chunk: int = 512) -> jax.Array:
+    """Encoder-decoder cross attention (whisper). x: [B,S,d], enc: [B,T,d]."""
+    b, s, _ = x.shape
+    t = enc.shape[1]
+    h, kv, dh = dims.num_heads, dims.num_kv_heads, dims.head_dim
+    q = (x @ constrain(params["wq"], None, "tp")).reshape(b, s, h, dh)
+    k = (enc @ constrain(params["wk"], None, "tp")).reshape(b, t, kv, dh)
+    v = (enc @ constrain(params["wv"], None, "tp")).reshape(b, t, kv, dh)
+    k = _repeat_kv(k, h // kv)
+    v = _repeat_kv(v, h // kv)
+    out = chunked_attention(q, k, v, causal=False, chunk=chunk)
+    return out.reshape(b, s, h * dh) @ constrain(params["wo"], "tp", None)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_params_shape(d_model: int, d_ff: int, kind: str = "swiglu"):
+    if kind == "gelu":
+        return {"wi": (d_model, d_ff), "wo": (d_ff, d_model)}
+    return {"wi": (d_model, d_ff), "wg": (d_model, d_ff), "wo": (d_ff, d_model)}
+
+
+def swiglu_mlp(params: Params, x: jax.Array) -> jax.Array:
+    if "wg" not in params:  # 2-matrix GELU MLP (starcoder2, whisper)
+        wi = constrain(params["wi"], None, "tp")
+        wo = constrain(params["wo"], "tp", None)
+        hidden = jax.nn.gelu(constrain(x @ wi, "dp", None, "tp"))
+        return constrain(hidden @ wo, "dp", None, None)
+    wi = constrain(params["wi"], None, "tp")
+    wg = constrain(params["wg"], None, "tp")
+    wo = constrain(params["wo"], "tp", None)
+    gate = jax.nn.silu(constrain(x @ wg, "dp", None, "tp"))
+    hidden = constrain(x @ wi, "dp", None, "tp") * gate
+    return constrain(hidden @ wo, "dp", "sp", None)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def logits(x: jax.Array, table: jax.Array) -> jax.Array:
+    """Tied/untied output projection. x: [B,S,d], table: [V,d] -> [B,S,V]."""
+    return jnp.einsum("bsd,vd->bsv", x, table)
+
+
+def cross_entropy(logits_: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token cross-entropy. logits: [B,S,V] f32, labels: i32[B,S]."""
+    lz = jax.nn.log_softmax(logits_.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(lz, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)

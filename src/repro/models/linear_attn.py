@@ -1,0 +1,332 @@
+"""Chunked linear-attention machinery: Mamba2 (SSD) and RWKV-6 blocks.
+
+Both architectures are instances of one recurrence
+    S_t = Diag(w_t) S_{t-1} + k_t^T v_t,     y_t = q_t S_t (+ diag terms)
+with different decay shapes (Mamba2: scalar per head; RWKV-6:
+data-dependent per key channel). Training/prefill uses the chunkwise
+parallel form (intra-chunk attention matrix + inter-chunk state carry, the
+standard GLA/SSD scheme) — O(T * chunk) memory, scan over chunks, MXU
+matmuls inside. Decode is the O(1) recurrent step on a [dk, dv] state.
+
+These give the sub-quadratic path required for the `long_500k` shape
+(rwkv6-3b, zamba2-1.2b).
+
+Simplifications vs the reference CUDA implementations are noted in
+DESIGN.md §7 (single B/C group for Mamba2; static token-shift +
+low-rank data-dependent decay for RWKV-6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.utils.meshctx import constrain
+
+Params = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# Core chunked recurrence
+# ---------------------------------------------------------------------------
+
+def chunked_linear_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                             log_w: jax.Array, *,
+                             u: Optional[jax.Array] = None,
+                             s0: Optional[jax.Array] = None,
+                             chunk: int = 64
+                             ) -> Tuple[jax.Array, jax.Array]:
+    """Chunkwise parallel linear attention.
+
+    q, k:   f32[B, T, H, dk]
+    v:      f32[B, T, H, dv]
+    log_w:  f32[B, T, H, dk] log decay (<= 0), applied to the key dim
+    u:      optional f32[H, dk] RWKV "bonus" for the current token; if
+            given, the recurrence reads S_{t-1} (strict causality) and adds
+            (q_t . (u*k_t)) v_t; otherwise reads S_t (inclusive, Mamba).
+    s0:     optional initial state f32[B, H, dk, dv]
+    Returns (y f32[B, T, H, dv], final state f32[B, H, dk, dv]).
+    """
+    b, t, h, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, t)
+    assert t % c == 0, (t, c)
+    n = t // c
+
+    strict = u is not None
+    mask = (np.tril(np.ones((c, c)), k=-1 if strict else 0) > 0)
+    mask = jnp.asarray(mask)
+
+    # Memory discipline (EXPERIMENTS iteration 5): inputs are sliced per
+    # chunk from the [B, T, H, *] layout (no materialized [n, B, H, c, *]
+    # f32 copies — those alone were 4 x T x d_inner f32 per layer) and the
+    # body is rematerialized, so the backward saves only the per-chunk
+    # carried state instead of every intra-chunk intermediate.
+    def body(s, j):
+        def sl(a, width):
+            return jax.lax.dynamic_slice_in_dim(a, j * c, c, axis=1)
+        qi = sl(q, dk).astype(jnp.float32).transpose(0, 2, 1, 3)  # [B,H,c,dk]
+        ki = sl(k, dk).astype(jnp.float32).transpose(0, 2, 1, 3)
+        vi = sl(v, dv).astype(jnp.float32).transpose(0, 2, 1, 3)
+        wi = sl(log_w, dk).astype(jnp.float32).transpose(0, 2, 1, 3)
+        logp = jnp.cumsum(wi, axis=2)               # inclusive cumulative
+        p_end = logp[:, :, -1:, :]                  # [B,H,1,dk]
+        # query-side decay: inclusive (mamba) or exclusive (rwkv strict)
+        q_dec = logp - wi if strict else logp
+        qt = qi * jnp.exp(q_dec)
+        kt = ki * jnp.exp(-logp)
+        a = jnp.einsum("bhqd,bhkd->bhqk", qt, kt)
+        a = jnp.where(mask[None, None], a, 0.0)
+        y = jnp.einsum("bhqk,bhkv->bhqv", a, vi)
+        y = y + jnp.einsum("bhqd,bhdv->bhqv", qt, s)
+        if strict:
+            diag = jnp.einsum("bhtd,bhtd->bht", qi, ki * u[None, :, None, :])
+            y = y + diag[..., None] * vi
+        k_for_state = ki * jnp.exp(p_end - logp)
+        s_new = s * jnp.exp(p_end).transpose(0, 1, 3, 2) + jnp.einsum(
+            "bhtd,bhtv->bhdv", k_for_state, vi)
+        return s_new, y.transpose(0, 2, 1, 3)        # y: [B, c, H, dv]
+
+    if s0 is None:
+        s0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    s_fin, ys = jax.lax.scan(jax.checkpoint(body), s0, jnp.arange(n))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, t, h, dv)
+    return y, s_fin
+
+
+def linear_attention_step(q: jax.Array, k: jax.Array, v: jax.Array,
+                          log_w: jax.Array, s: jax.Array, *,
+                          u: Optional[jax.Array] = None
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """O(1) decode step. q/k/log_w: [B, H, dk]; v: [B, H, dv];
+    s: [B, H, dk, dv]. Returns (y [B, H, dv], new state)."""
+    kv = jnp.einsum("bhd,bhv->bhdv", k, v)
+    if u is not None:
+        read = s + u[None, :, :, None] * kv
+    else:
+        read = s * jnp.exp(log_w)[..., None] + kv
+    y = jnp.einsum("bhd,bhdv->bhv", q, read)
+    s_new = s * jnp.exp(log_w)[..., None] + kv
+    return y, s_new
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Dims:
+    d_model: int
+    d_inner: int
+    num_heads: int
+    d_state: int
+    conv_width: int = 4
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.num_heads
+
+
+def mamba2_params_shape(dims: Mamba2Dims):
+    d, di, hs, dk = dims.d_model, dims.d_inner, dims.num_heads, dims.d_state
+    return {
+        "in_proj": (d, 2 * di + 2 * dk + hs),   # z, x, B, C, dt
+        "conv_w": (dims.conv_width, di + 2 * dk),
+        "dt_bias": (hs,),
+        "a_log": (hs,),
+        "d_skip": (hs,),
+        "norm_scale": (di,),
+        "out_proj": (di, d),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: [B, T, C], w: [W, C]."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(width))
+    return out
+
+
+def mamba2_block(params: Params, x: jax.Array, dims: Mamba2Dims, *,
+                 chunk: int = 64) -> jax.Array:
+    """Full-sequence Mamba2 mixer. x: [B, T, d] -> [B, T, d]."""
+    b, t, _ = x.shape
+    di, hs, dk = dims.d_inner, dims.num_heads, dims.d_state
+    hd = dims.head_dim
+    proj = x @ constrain(params["in_proj"], None, None)
+    z, xin, bmat, cmat, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + dk, 2 * di + 2 * dk], axis=-1)
+    xbc = _causal_conv(jnp.concatenate([xin, bmat, cmat], -1),
+                       params["conv_w"])
+    xbc = jax.nn.silu(xbc)
+    xin, bmat, cmat = jnp.split(xbc, [di, di + dk], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,T,H]
+    log_w = (-jnp.exp(params["a_log"].astype(jnp.float32)) * dt)      # [B,T,H]
+    v = (xin.reshape(b, t, hs, hd).astype(jnp.float32)
+         * dt[..., None]).astype(x.dtype)                # B*dt*x scaling
+    q = jnp.broadcast_to(cmat[:, :, None, :], (b, t, hs, dk))
+    k = jnp.broadcast_to(bmat[:, :, None, :], (b, t, hs, dk))
+    lw = jnp.broadcast_to(log_w[..., None], (b, t, hs, dk))
+
+    y, _ = chunked_linear_attention(q, k, v, lw, chunk=chunk)
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * \
+        xin.reshape(b, t, hs, hd).astype(jnp.float32)
+    y = y.reshape(b, t, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = layers.rmsnorm(y, params["norm_scale"])
+    return (y @ constrain(params["out_proj"], None, None)).astype(x.dtype)
+
+
+def mamba2_decode(params: Params, x: jax.Array, state: Dict[str, jax.Array],
+                  dims: Mamba2Dims
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode. x: [B, 1, d]; state: {"ssm": [B,H,dk,hd],
+    "conv": [B, W-1, di+2dk]}."""
+    b = x.shape[0]
+    di, hs, dk = dims.d_inner, dims.num_heads, dims.d_state
+    hd = dims.head_dim
+    proj = x[:, 0] @ params["in_proj"]
+    z, xin, bmat, cmat, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + dk, 2 * di + 2 * dk], axis=-1)
+    xbc_in = jnp.concatenate([xin, bmat, cmat], -1)          # [B, C]
+    conv_buf = jnp.concatenate([state["conv"], xbc_in[:, None, :]], axis=1)
+    w = params["conv_w"]
+    xbc = sum(conv_buf[:, i, :] * w[i][None, :] for i in range(w.shape[0]))
+    xbc = jax.nn.silu(xbc)
+    xin, bmat, cmat = jnp.split(xbc, [di, di + dk], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,H]
+    log_w = (-jnp.exp(params["a_log"].astype(jnp.float32)) * dt)
+    v = xin.reshape(b, hs, hd).astype(jnp.float32) * dt[..., None]
+    q = jnp.broadcast_to(cmat[:, None, :], (b, hs, dk)).astype(jnp.float32)
+    k = jnp.broadcast_to(bmat[:, None, :], (b, hs, dk)).astype(jnp.float32)
+    lw = jnp.broadcast_to(log_w[..., None], (b, hs, dk))
+    y, s_new = linear_attention_step(q, k, v, lw, state["ssm"])
+    y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * \
+        xin.reshape(b, hs, hd).astype(jnp.float32)
+    y = y.reshape(b, di) * jax.nn.silu(z.astype(jnp.float32))
+    y = layers.rmsnorm(y, params["norm_scale"])
+    out = (y @ params["out_proj"]).astype(x.dtype)[:, None, :]
+    return out, {"ssm": s_new, "conv": conv_buf[:, 1:, :]}
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 block
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6Dims:
+    d_model: int
+    num_heads: int
+    d_ff: int
+    decay_rank: int = 64
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.num_heads
+
+
+def rwkv6_params_shape(dims: RWKV6Dims):
+    d, r = dims.d_model, dims.decay_rank
+    return {
+        # time-mix
+        "mu_r": (d,), "mu_k": (d,), "mu_v": (d,), "mu_w": (d,), "mu_g": (d,),
+        "wr": (d, d), "wk": (d, d), "wv": (d, d), "wg": (d, d),
+        "w0": (d,), "w_lora_a": (d, r), "w_lora_b": (r, d),
+        "bonus_u": (dims.num_heads, dims.head_dim),
+        "ln_x_scale": (d,),
+        "wo": (d, d),
+        # channel-mix
+        "mu_ck": (d,), "mu_cr": (d,),
+        "ck": (d, dims.d_ff), "cv": (dims.d_ff, d), "cr": (d, d),
+    }
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array] = None) -> jax.Array:
+    """x_{t-1} (zeros / supplied carry for t=0). x: [B, T, d]."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _ddecay(params: Params, xw: jax.Array) -> jax.Array:
+    """Data-dependent per-channel log decay (low-rank, <= 0)."""
+    lora = jnp.tanh(xw @ params["w_lora_a"]) @ params["w_lora_b"]
+    return -jnp.exp(params["w0"].astype(jnp.float32) + lora.astype(jnp.float32))
+
+
+def rwkv6_time_mix(params: Params, x: jax.Array, dims: RWKV6Dims, *,
+                   chunk: int = 64) -> jax.Array:
+    b, t, d = x.shape
+    h, hd = dims.num_heads, dims.head_dim
+    xs = _token_shift(x)
+
+    def mix(mu):
+        return x + (xs - x) * mu[None, None, :]
+
+    r = (mix(params["mu_r"]) @ constrain(params["wr"], None, "tp")
+         ).reshape(b, t, h, hd)
+    k = (mix(params["mu_k"]) @ constrain(params["wk"], None, "tp")
+         ).reshape(b, t, h, hd)
+    v = (mix(params["mu_v"]) @ constrain(params["wv"], None, "tp")
+         ).reshape(b, t, h, hd)
+    g = jax.nn.silu(mix(params["mu_g"]) @ constrain(params["wg"], None, "tp"))
+    log_w = _ddecay(params, mix(params["mu_w"])).reshape(b, t, h, hd)
+
+    y, _ = chunked_linear_attention(
+        r, k, v, log_w, u=params["bonus_u"].astype(jnp.float32), chunk=chunk)
+    y = y.reshape(b, t, d)
+    y = layers.rmsnorm(y, params["ln_x_scale"])
+    return ((y * g) @ constrain(params["wo"], "tp", None)).astype(x.dtype)
+
+
+def rwkv6_channel_mix(params: Params, x: jax.Array) -> jax.Array:
+    xs = _token_shift(x)
+    xk = x + (xs - x) * params["mu_ck"][None, None, :]
+    xr = x + (xs - x) * params["mu_cr"][None, None, :]
+    kk = jnp.square(jax.nn.relu(xk @ constrain(params["ck"], None, "tp")))
+    return (jax.nn.sigmoid(xr @ constrain(params["cr"], None, "tp"))
+            * (kk @ constrain(params["cv"], "tp", None))).astype(x.dtype)
+
+
+def rwkv6_time_mix_step(params: Params, x: jax.Array,
+                        state: Dict[str, jax.Array], dims: RWKV6Dims
+                        ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Decode step. x: [B, d]; state: {"shift": [B, d], "wkv": [B,H,hd,hd]}."""
+    b, d = x.shape
+    h, hd = dims.num_heads, dims.head_dim
+    xs = state["shift"]
+
+    def mix(mu):
+        return x + (xs - x) * mu[None, :]
+
+    r = (mix(params["mu_r"]) @ params["wr"]).reshape(b, h, hd)
+    k = (mix(params["mu_k"]) @ params["wk"]).reshape(b, h, hd)
+    v = (mix(params["mu_v"]) @ params["wv"]).reshape(b, h, hd)
+    g = jax.nn.silu(mix(params["mu_g"]) @ params["wg"])
+    log_w = _ddecay(params, mix(params["mu_w"])).reshape(b, h, hd)
+    y, s_new = linear_attention_step(
+        r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        log_w, state["wkv"], u=params["bonus_u"].astype(jnp.float32))
+    y = layers.rmsnorm(y.reshape(b, d), params["ln_x_scale"])
+    out = ((y * g) @ params["wo"]).astype(x.dtype)
+    return out, {"shift": x, "wkv": s_new}
+
+
+def rwkv6_channel_mix_step(params: Params, x: jax.Array,
+                           state: Dict[str, jax.Array]
+                           ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    xs = state["shift"]
+    xk = x + (xs - x) * params["mu_ck"][None, :]
+    xr = x + (xs - x) * params["mu_cr"][None, :]
+    kk = jnp.square(jax.nn.relu(xk @ params["ck"]))
+    out = (jax.nn.sigmoid(xr @ params["cr"]) * (kk @ params["cv"])
+           ).astype(x.dtype)
+    return out, {"shift": x}

@@ -1,0 +1,486 @@
+"""Model zoo: ArchConfig -> parameter trees, init, and the three lowered
+entry points (train_step loss fwd, prefill, decode) for every assigned
+family. All block params are stacked on a leading layer axis for lax.scan.
+
+Param dtype: bf16 storage for giant MoE (kimi) per DESIGN.md §7, f32
+otherwise; compute casts to bf16 inside blocks where MXU-bound.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import layers, linear_attn, moe as moe_lib, transformer
+from repro.utils.meshctx import constrain
+
+Params = Dict[str, Any]
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Shapes
+# ---------------------------------------------------------------------------
+
+def _norm_shape(cfg: ArchConfig):
+    return None if cfg.norm == "nonparam_ln" else {"scale": (cfg.d_model,)}
+
+
+def _attn_block_shapes(cfg: ArchConfig, cross: bool = False):
+    d = cfg.d_model
+    s: Dict[str, Any] = {}
+    if _norm_shape(cfg):
+        s["attn_norm"] = _norm_shape(cfg)
+        s["mlp_norm"] = _norm_shape(cfg)
+    s["attn"] = layers.attn_params_shape(d, transformer.attn_dims(cfg))
+    if cross:
+        if _norm_shape(cfg):
+            s["cross_norm"] = _norm_shape(cfg)
+        s["cross"] = layers.attn_params_shape(d, transformer.attn_dims(cfg))
+    if cfg.num_experts:
+        s["moe"] = moe_lib.moe_params_shape(d, cfg.moe_d_ff or cfg.d_ff,
+                                            cfg.num_experts)
+    else:
+        s["mlp"] = layers.mlp_params_shape(d, cfg.d_ff, cfg.mlp)
+    return s
+
+
+def _rwkv_block_shapes(cfg: ArchConfig):
+    dims = transformer.rwkv_dims(cfg)
+    d, r = cfg.d_model, dims.decay_rank
+    tm = {
+        "mu_r": (d,), "mu_k": (d,), "mu_v": (d,), "mu_w": (d,), "mu_g": (d,),
+        "wr": (d, d), "wk": (d, d), "wv": (d, d), "wg": (d, d),
+        "w0": (d,), "w_lora_a": (d, r), "w_lora_b": (r, d),
+        "bonus_u": (dims.num_heads, dims.head_dim),
+        "ln_x_scale": (d,),
+        "wo": (d, d),
+    }
+    cm = {"mu_ck": (d,), "mu_cr": (d,),
+          "ck": (d, cfg.d_ff), "cv": (cfg.d_ff, d), "cr": (d, d)}
+    return {"attn_norm": _norm_shape(cfg), "mlp_norm": _norm_shape(cfg),
+            "time_mix": tm, "channel_mix": cm}
+
+
+def _mamba_block_shapes(cfg: ArchConfig):
+    dims = transformer.mamba_dims(cfg)
+    return {"attn_norm": _norm_shape(cfg),
+            "mamba": linear_attn.mamba2_params_shape(dims)}
+
+
+def _stack(shapes: PyTree, n: int) -> PyTree:
+    return jax.tree.map(lambda s: (n,) + s, shapes,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def param_shapes(cfg: ArchConfig) -> PyTree:
+    """Nested dict of shape tuples for the full model."""
+    d, v = cfg.d_model, cfg.vocab_size
+    tree: Dict[str, Any] = {"embed": (v, d)}
+    if not cfg.tie_embeddings:
+        tree["out_head"] = (v, d)
+    if _norm_shape(cfg):
+        tree["final_norm"] = _norm_shape(cfg)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        tree["blocks"] = _stack(_attn_block_shapes(cfg), cfg.num_layers)
+        if cfg.family == "vlm":
+            tree["connector"] = (cfg.frontend_dim, d)
+    elif cfg.family == "ssm":
+        tree["blocks"] = _stack(_rwkv_block_shapes(cfg), cfg.num_layers)
+    elif cfg.family == "hybrid":
+        g = cfg.attn_every
+        n_groups = cfg.num_layers // g
+        tail = cfg.num_layers - n_groups * g
+        tree["groups"] = _stack(_stack(_mamba_block_shapes(cfg), g), n_groups)
+        if tail:
+            tree["tail"] = _stack(_mamba_block_shapes(cfg), tail)
+        tree["shared_attn"] = _attn_block_shapes(cfg)
+    elif cfg.family == "audio":
+        tree["blocks"] = _stack(_attn_block_shapes(cfg, cross=True),
+                                cfg.num_layers)
+        tree["encoder"] = {
+            "blocks": _stack(_attn_block_shapes(cfg), cfg.encoder_layers),
+            "final_norm": _norm_shape(cfg),
+            "in_proj": (cfg.frontend_dim, d),
+        }
+    else:
+        raise ValueError(cfg.family)
+    return _prune_none(tree)
+
+
+def _prune_none(t):
+    if isinstance(t, dict):
+        return {k: _prune_none(v) for k, v in t.items() if v is not None}
+    return t
+
+
+def param_dtype(cfg: ArchConfig) -> jnp.dtype:
+    return jnp.bfloat16 if cfg.name.startswith("kimi") else jnp.float32
+
+
+def abstract_params(cfg: ArchConfig) -> PyTree:
+    dt = param_dtype(cfg)
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s, dt),
+                        param_shapes(cfg),
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+_SPECIAL_INIT = {
+    "a_log": lambda s, k: jnp.zeros(s, jnp.float32),
+    "dt_bias": lambda s, k: jnp.full(s, -2.0, jnp.float32),
+    "d_skip": lambda s, k: jnp.ones(s, jnp.float32),
+    "w0": lambda s, k: jnp.zeros(s, jnp.float32),
+    "bonus_u": lambda s, k: jnp.full(s, 0.5, jnp.float32),
+    "scale": lambda s, k: jnp.ones(s, jnp.float32),
+    "ln_x_scale": lambda s, k: jnp.ones(s, jnp.float32),
+    "norm_scale": lambda s, k: jnp.ones(s, jnp.float32),
+}
+
+
+def init_params(cfg: ArchConfig, key: jax.Array,
+                init_scale: float = 0.02) -> PyTree:
+    """Materialize parameters (smoke tests / examples; the dry-run never
+    allocates)."""
+    shapes = param_shapes(cfg)
+    leaves, treedef = jax.tree.flatten_with_path(
+        shapes, is_leaf=lambda x: isinstance(x, tuple))
+    dt = param_dtype(cfg)
+    out = []
+    for i, (path, shape) in enumerate(leaves):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in _SPECIAL_INIT:
+            arr = _SPECIAL_INIT[name](shape, None).astype(dt)
+        elif name.startswith("mu_"):
+            arr = jnp.full(shape, 0.5, dt)
+        else:
+            sub = jax.random.fold_in(key, i)
+            arr = (jax.random.normal(sub, shape, jnp.float32)
+                   * init_scale).astype(dt)
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Loss / forward
+# ---------------------------------------------------------------------------
+
+def _out_table(cfg: ArchConfig, params: Params) -> jax.Array:
+    return params["embed"] if cfg.tie_embeddings else params["out_head"]
+
+
+def chunked_ce_loss(x: jax.Array, table: jax.Array, labels: jax.Array,
+                    weights: Optional[jax.Array] = None,
+                    chunk: int = 512) -> jax.Array:
+    """Cross-entropy without materializing [B, S, V]: scan over seq chunks.
+    x: [B,S,d], table: [V,d], labels: i32[B,S], weights: f32[B,S] or None."""
+    b, s, d = x.shape
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        w = jnp.ones((b, s), jnp.float32) if weights is None else weights
+        weights = jnp.pad(w, ((0, 0), (0, pad)))
+    n = (s + pad) // c
+    xc = x.reshape(b, n, c, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n, c).transpose(1, 0, 2)
+    if weights is None:
+        weights = jnp.ones((b, s), jnp.float32)
+    wc = weights.reshape(b, n, c).transpose(1, 0, 2)
+
+    table_c = table.astype(x.dtype)  # one cast, hoisted out of the scan
+
+    def body(acc, inp):
+        xi, li, wi = inp
+        logits = constrain(
+            jnp.einsum("bcd,vd->bcv", xi, table_c,
+                       preferred_element_type=jnp.float32), "dp", None, "tp")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * wi
+        return (acc[0] + nll.sum(), acc[1] + wi.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 (xc, lc, wc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def _embed_inputs(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array]
+                  ) -> Tuple[jax.Array, Optional[jax.Array],
+                             Optional[jax.Array]]:
+    """Returns (x [B,S,d], loss_weights or None, encoder_out or None)."""
+    compute = jnp.bfloat16
+    tokens = batch["tokens"]
+    x = constrain(layers.embed(tokens, params["embed"]).astype(compute),
+                  "dp", "sp", None)
+    weights = None
+    enc = None
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(compute)  # [B, P, Dv]
+        proj = (patches @ params["connector"].astype(compute))
+        p = proj.shape[1]
+        x = jnp.concatenate([proj, x[:, : x.shape[1] - p]], axis=1)
+        weights = jnp.concatenate(
+            [jnp.zeros((x.shape[0], p), jnp.float32),
+             jnp.ones((x.shape[0], x.shape[1] - p), jnp.float32)], axis=1)
+    elif cfg.family == "audio":
+        enc = encode_audio(cfg, params, batch["frames"])
+    return x, weights, enc
+
+
+def _sinusoidal(s: int, d: int) -> np.ndarray:
+    pos = np.arange(s)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (2 * i / d))
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=1).astype(np.float32)
+
+
+def encode_audio(cfg: ArchConfig, params: Params,
+                 frames: jax.Array) -> jax.Array:
+    """Whisper encoder over stub frame embeddings [B, F, Df]."""
+    compute = jnp.bfloat16
+    enc_p = params["encoder"]
+    x = (frames.astype(compute) @ enc_p["in_proj"].astype(compute))
+    x = x + jnp.asarray(_sinusoidal(x.shape[1], cfg.d_model)).astype(compute)
+
+    def body(h, p):
+        h, _ = transformer.attn_block(cfg, p, h, causal=False)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, enc_p["blocks"])
+    return layers.apply_norm(cfg.norm, x, enc_p.get("final_norm"))
+
+
+def forward(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array], *,
+            remat: bool = True, chunk: int = 512
+            ) -> Tuple[jax.Array, Optional[jax.Array], Dict[str, jax.Array]]:
+    """Full causal forward -> (hidden [B,S,d], loss weights, metrics)."""
+    x, weights, enc = _embed_inputs(cfg, params, batch)
+    metrics: Dict[str, jax.Array] = {}
+    if cfg.family in ("dense", "moe", "vlm"):
+        x, metrics = transformer.dense_stack(cfg, params["blocks"], x,
+                                             causal=True, remat=remat,
+                                             chunk=chunk)
+    elif cfg.family == "ssm":
+        if cfg.rope_theta == 0:
+            x = x + jnp.asarray(_sinusoidal(x.shape[1], cfg.d_model)
+                                ).astype(x.dtype)
+        x = transformer.rwkv_stack(cfg, params["blocks"], x, remat=remat)
+    elif cfg.family == "hybrid":
+        x = transformer.zamba_stack(cfg, params, x, remat=remat,
+                                    attn_chunk=chunk)
+    elif cfg.family == "audio":
+        x = x + jnp.asarray(_sinusoidal(x.shape[1], cfg.d_model)
+                            ).astype(x.dtype)
+
+        def body(h, p):
+            h, _ = transformer.attn_block(cfg, p, h, enc=enc, causal=True,
+                                          chunk=chunk)
+            return h, None
+        fn = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(fn, x, params["blocks"])
+    else:
+        raise ValueError(cfg.family)
+    x = layers.apply_norm(cfg.norm, x, params.get("final_norm"))
+    return x, weights, metrics
+
+
+def loss_fn(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array], *,
+            remat: bool = True, chunk: int = 512
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    x, weights, metrics = forward(cfg, params, batch, remat=remat,
+                                  chunk=chunk)
+    loss = chunked_ce_loss(x, _out_table(cfg, params), batch["labels"],
+                           weights)
+    if "moe_aux_loss" in metrics:
+        loss = loss + 0.01 * metrics["moe_aux_loss"]
+    metrics["ce_loss"] = loss
+    return loss, metrics
+
+
+def prefill(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array], *,
+            chunk: int = 512) -> jax.Array:
+    """Prefill forward; returns last-position logits [B, V]."""
+    x, _, _ = forward(cfg, params, batch, remat=False, chunk=chunk)
+    last = x[:, -1, :]
+    return jnp.einsum("bd,vd->bv", last.astype(jnp.float32),
+                      _out_table(cfg, params).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def make_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               abstract: bool = False) -> PyTree:
+    """Cache pytree (zeros or ShapeDtypeStruct)."""
+    dims = transformer.attn_dims(cfg)
+    dt = jnp.bfloat16
+
+    def mk(shape, dtype=dt):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype)
+
+    l = cfg.num_layers
+    if cfg.family in ("dense", "moe", "vlm"):
+        kv = (l, batch, max_seq, dims.num_kv_heads, dims.head_dim)
+        return {"k": mk(kv), "v": mk(kv)}
+    if cfg.family == "audio":
+        kv = (l, batch, max_seq, dims.num_kv_heads, dims.head_dim)
+        ckv = (l, batch, cfg.frontend_len, dims.num_kv_heads, dims.head_dim)
+        return {"k": mk(kv), "v": mk(kv), "ck": mk(ckv), "cv": mk(ckv)}
+    if cfg.family == "ssm":
+        rd = transformer.rwkv_dims(cfg)
+        return {
+            "att_shift": mk((l, batch, cfg.d_model), jnp.float32),
+            "ffn_shift": mk((l, batch, cfg.d_model), jnp.float32),
+            "wkv": mk((l, batch, rd.num_heads, rd.head_dim, rd.head_dim),
+                      jnp.float32),
+        }
+    if cfg.family == "hybrid":
+        md = transformer.mamba_dims(cfg)
+        g = cfg.attn_every
+        n_groups = cfg.num_layers // g
+        tail = cfg.num_layers - n_groups * g
+        conv_c = md.d_inner + 2 * md.d_state
+        cache = {
+            "groups": {
+                "ssm": mk((n_groups, g, batch, md.num_heads, md.d_state,
+                           md.head_dim), jnp.float32),
+                "conv": mk((n_groups, g, batch, md.conv_width - 1, conv_c),
+                           jnp.float32),
+            },
+            "shared_k": mk((n_groups, batch, max_seq, dims.num_kv_heads,
+                            dims.head_dim)),
+            "shared_v": mk((n_groups, batch, max_seq, dims.num_kv_heads,
+                            dims.head_dim)),
+        }
+        if tail:
+            cache["tail"] = {
+                "ssm": mk((tail, batch, md.num_heads, md.d_state,
+                           md.head_dim), jnp.float32),
+                "conv": mk((tail, batch, md.conv_width - 1, conv_c),
+                           jnp.float32),
+            }
+        return cache
+    raise ValueError(cfg.family)
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: PyTree,
+                tokens: jax.Array, pos: jax.Array
+                ) -> Tuple[jax.Array, PyTree]:
+    """One-token serve step. tokens: i32[B, 1]; pos: i32[] current length.
+    Returns (logits [B, V], new cache)."""
+    compute = jnp.bfloat16
+    x = layers.embed(tokens, params["embed"]).astype(compute)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(h, inp):
+            p, ck, cv = inp
+            h, nc = transformer.attn_block_decode(cfg, p, h,
+                                                  {"k": ck, "v": cv}, pos)
+            return h, (nc["k"], nc["v"])
+        x, (nk, nv) = jax.lax.scan(body, x,
+                                   (params["blocks"], cache["k"], cache["v"]))
+        new_cache = {"k": nk, "v": nv}
+    elif cfg.family == "audio":
+        x = x + jnp.asarray(_sinusoidal(1, cfg.d_model)).astype(x.dtype)
+
+        def body(h, inp):
+            p, ck, cv, cck, ccv = inp
+            h, nc = transformer.attn_block_decode(
+                cfg, p, h, {"k": ck, "v": cv}, pos, enc_kv=(cck, ccv))
+            return h, (nc["k"], nc["v"])
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["blocks"], cache["k"], cache["v"],
+                      cache["ck"], cache["cv"]))
+        new_cache = dict(cache, k=nk, v=nv)
+    elif cfg.family == "ssm":
+        def body(h, inp):
+            p, sa, sf, wkv = inp
+            h, nc = transformer.rwkv_block_decode(
+                cfg, p, h, {"att_shift": sa, "ffn_shift": sf, "wkv": wkv})
+            return h, (nc["att_shift"], nc["ffn_shift"], nc["wkv"])
+        x, (na, nf, nw) = jax.lax.scan(
+            body, x, (params["blocks"], cache["att_shift"],
+                      cache["ffn_shift"], cache["wkv"]))
+        new_cache = {"att_shift": na, "ffn_shift": nf, "wkv": nw}
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def group_body(h, inp):
+            gp, ssm, conv, sk, sv = inp
+
+            def mamba_body(hh, binp):
+                p, s1, c1 = binp
+                hh, st = transformer.mamba_block_decode(
+                    cfg, p, hh, {"ssm": s1, "conv": c1})
+                return hh, (st["ssm"], st["conv"])
+            h, (ns, ncv) = jax.lax.scan(mamba_body, h, (gp, ssm, conv))
+            h, nc = transformer.attn_block_decode(cfg, shared, h,
+                                                  {"k": sk, "v": sv}, pos)
+            return h, (ns, ncv, nc["k"], nc["v"])
+
+        x, (ns, ncv, nsk, nsv) = jax.lax.scan(
+            group_body, x, (params["groups"], cache["groups"]["ssm"],
+                            cache["groups"]["conv"], cache["shared_k"],
+                            cache["shared_v"]))
+        new_cache = {"groups": {"ssm": ns, "conv": ncv},
+                     "shared_k": nsk, "shared_v": nsv}
+        if "tail" in params:
+            def tail_body(h, binp):
+                p, s1, c1 = binp
+                h, st = transformer.mamba_block_decode(
+                    cfg, p, h, {"ssm": s1, "conv": c1})
+                return h, (st["ssm"], st["conv"])
+            x, (ts, tc) = jax.lax.scan(
+                tail_body, x, (params["tail"], cache["tail"]["ssm"],
+                               cache["tail"]["conv"]))
+            new_cache["tail"] = {"ssm": ts, "conv": tc}
+    else:
+        raise ValueError(cfg.family)
+
+    x = layers.apply_norm(cfg.norm, x, params.get("final_norm"))
+    logits = jnp.einsum("bd,vd->bv", x[:, 0].astype(jnp.float32),
+                        _out_table(cfg, params).astype(jnp.float32))
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# input_specs (dry-run stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, seq_len: int, global_batch: int,
+                kind: str) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell."""
+    b, s = global_batch, seq_len
+    i32 = jnp.int32
+
+    def tok(shape):
+        return jax.ShapeDtypeStruct(shape, i32)
+
+    if kind in ("train", "prefill"):
+        batch: Dict[str, Any] = {"tokens": tok((b, s))}
+        if kind == "train":
+            batch["labels"] = tok((b, s))
+        if cfg.family == "vlm":
+            batch["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_len, cfg.frontend_dim), jnp.bfloat16)
+        if cfg.family == "audio":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_len, cfg.frontend_dim), jnp.bfloat16)
+        return {"batch": batch}
+    if kind == "decode":
+        return {
+            "tokens": tok((b, 1)),
+            "cache": make_cache(cfg, b, s, abstract=True),
+            "pos": jax.ShapeDtypeStruct((), i32),
+        }
+    raise ValueError(kind)

@@ -1,0 +1,163 @@
+"""Mixture-of-Experts FFN with grouped, sort-based token dispatch (EP).
+
+Dispatch is permutation-based (not GShard one-hot einsums, which are
+infeasible at 128-384 experts): top-k routing -> stable sort by expert ->
+capacity-rank within expert -> gather to [G, E, C, D] -> batched expert
+GEMM -> weighted scatter-add back. All shapes static; overflow tokens are
+dropped (capacity-factor routing) with the drop fraction exposed.
+
+Tokens are dispatched in G groups (G = number of data-parallel shards,
+from the active mesh): each group routes its own tokens to ALL experts, so
+under pjit the [G@dp, E, C, D] -> [G, E@tp, C, D] resharding between the
+per-group scatter and the expert GEMM lowers to exactly the EP all-to-all.
+Without grouping the dispatch buffer covers the global batch on every
+device (9.4 GB/device for kimi-k2 train_4k; EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils import meshctx
+from repro.utils.meshctx import constrain
+
+Params = Dict[str, jax.Array]
+
+
+def moe_params_shape(d_model: int, d_ff: int, num_experts: int):
+    return {
+        "router": (d_model, num_experts),
+        "wi": (num_experts, d_model, d_ff),
+        "wg": (num_experts, d_model, d_ff),
+        "wo": (num_experts, d_ff, d_model),
+    }
+
+
+def capacity(tokens_per_group: int, num_experts: int, experts_per_token: int,
+             capacity_factor: float) -> int:
+    c = int(np.ceil(tokens_per_group * experts_per_token * capacity_factor
+                    / num_experts))
+    return max(8, -(-c // 8) * 8)
+
+
+def _dp_groups(total_tokens: int) -> int:
+    """Dispatch group count. Preferred: one group per DEVICE (dp x tp) so
+    the dispatch boundary is a true all-to-all with tokens fully sharded
+    (perf iteration 4, EXPERIMENTS.md: the dp-only grouping left tokens
+    replicated across the tp row -> GSPMD lowered the boundary as tp-wide
+    all-gathers, 16x the volume on kimi-k2). Falls back dp-only, then 1."""
+    mesh = meshctx.current_mesh()
+    if mesh is None:
+        return 1
+    dp = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            dp *= mesh.shape[ax]
+    # NOTE (EXPERIMENTS.md perf iteration 4a, REFUTED): grouping over
+    # dp x tp (tokens fully sharded) made the combine scatter replicate
+    # under GSPMD (38 TB of all-gathers on kimi-k2). dp-only grouping it is;
+    # the tp-wide dispatch a2a is revisited in iteration 4b.
+    for g in (dp,):
+        if g > 1 and total_tokens % g == 0 and total_tokens // g >= 8:
+            return g
+    return 1
+
+
+def _dp_only_groups() -> int:
+    mesh = meshctx.current_mesh()
+    if mesh is None:
+        return 1
+    dp = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            dp *= mesh.shape[ax]
+    return dp
+
+
+def moe_ffn(params: Params, x: jax.Array, *, experts_per_token: int,
+            capacity_factor: float = 1.25
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: [B, S, D] -> (out [B, S, D], metrics)."""
+    b, s, d = x.shape
+    e = params["router"].shape[1]
+    t = b * s
+    k = experts_per_token
+    g = _dp_groups(t)
+    tg = t // g
+    cap = capacity(tg, e, k, capacity_factor)
+
+    full_shard = g > _dp_only_groups()
+    tok_axis = "dpt" if full_shard else "dp"
+    xg = constrain(x.reshape(g, tg, d), tok_axis, None, None)
+    logits = (xg.astype(jnp.float32)
+              @ params["router"].astype(jnp.float32))        # [G, Tg, E]
+    gates = jax.nn.softmax(logits, axis=-1)
+    topw, tope = jax.lax.top_k(gates, k)                     # [G, Tg, K]
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # Flatten (token, choice) pairs per group; rank within expert.
+    flat_e = tope.reshape(g, tg * k)
+    flat_w = topw.reshape(g, tg * k)
+    flat_t = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(tg, dtype=jnp.int32), k)[None], (g, tg * k))
+    order = jnp.argsort(flat_e, axis=1, stable=True)
+    se = jnp.take_along_axis(flat_e, order, axis=1)
+    st_ = jnp.take_along_axis(flat_t, order, axis=1)
+    pos = jnp.broadcast_to(jnp.arange(tg * k)[None], (g, tg * k))
+    expert_start = jax.vmap(
+        lambda row: jnp.searchsorted(row, jnp.arange(e)))(se)  # [G, E]
+    rank = pos - jnp.take_along_axis(expert_start, se, axis=1)
+    keep = rank < cap
+    drop_frac = 1.0 - keep.mean()
+
+    # Dispatch: slot (expert, rank) <- token index (+1 so 0 = empty).
+    # Dropped pairs are routed to the out-of-bounds slot e*cap, which
+    # mode="drop" discards (a clipped in-bounds index would race with the
+    # kept occupant of the expert's last slot).
+    slot_idx = jnp.where(keep, se * cap + jnp.clip(rank, 0, cap - 1),
+                         e * cap)                              # [G, Tg*K]
+    grow = jnp.arange(g)[:, None]
+    slot_tok = jnp.zeros((g, e * cap), jnp.int32).at[
+        grow, slot_idx].set(st_ + 1, mode="drop")
+
+    xg_pad = jnp.pad(xg, ((0, 0), (1, 0), (0, 0)))
+    gathered = jnp.take_along_axis(
+        xg_pad, slot_tok[..., None], axis=1).reshape(g, e, cap, d)
+    # [G@tok, E, C, D] -> [G@dp, E@tp, C, D]: the EP all-to-all boundary.
+    gathered = constrain(gathered, "dp", "tp", None, None)
+
+    wg_ = constrain(params["wg"], "tp", None, None)
+    wi_ = constrain(params["wi"], "tp", None, None)
+    wo_ = constrain(params["wo"], "tp", None, None)
+    gate = jax.nn.silu(jnp.einsum("gecd,edf->gecf", gathered, wg_))
+    hidden = jnp.einsum("gecd,edf->gecf", gathered, wi_) * gate
+    expert_out = jnp.einsum("gecf,efd->gecd", hidden, wo_)
+    # Combine boundary: back to token-major sharding in bf16 (converting to
+    # f32 before the resharding doubled its wire bytes — EXPERIMENTS 4b).
+    expert_out = constrain(expert_out.astype(x.dtype),
+                           tok_axis, None, None, None)
+
+    # Combine via GATHER, not scatter-add: each (token, choice) pair reads
+    # its slot and the weighted sum happens in registers. (The scatter-add
+    # combine replicated across tp under GSPMD: 2 x 1.8 TB all-reduce per
+    # step on kimi-k2 train_4k — EXPERIMENTS iteration 4b.)
+    inv_order = jnp.argsort(order, axis=1)
+    slot_pair = jnp.take_along_axis(slot_idx, inv_order, axis=1)
+    eo_flat = jnp.concatenate(
+        [expert_out.reshape(g, e * cap, d),
+         jnp.zeros((g, 1, d), expert_out.dtype)], axis=1)
+    picked = jnp.take_along_axis(eo_flat, slot_pair[..., None], axis=1)
+    picked = picked.reshape(g, tg, k, d).astype(jnp.float32)
+    out = (picked * topw[..., None]).sum(axis=2)         # [G, Tg, D] f32
+    out = constrain(out, tok_axis, None, None).reshape(b, s, d)
+
+    me = gates.mean(axis=(0, 1))
+    ce_ = jnp.zeros((e,), jnp.float32).at[flat_e.reshape(-1)].add(1.0) \
+        / (t * k)
+    aux_loss = e * jnp.sum(me * ce_)          # switch-style load balance
+    return out.astype(x.dtype), {"moe_drop_frac": drop_frac,
+                                 "moe_aux_loss": aux_loss}

@@ -1,0 +1,233 @@
+"""Model assembly: family-specific blocks stacked under lax.scan.
+
+Families (DESIGN.md §5):
+  dense / vlm-backbone / moe : pre-norm GQA attention + SwiGLU-or-MoE FFN
+  ssm (rwkv6)                : time-mix + channel-mix
+  hybrid (zamba2)            : Mamba2 backbone, one SHARED attention block
+                               applied after every `attn_every` Mamba layers
+  audio (whisper)            : enc-dec, sinusoidal positions, cross-attn
+
+All stacks scan over a single block body with stacked params
+(leading L axis) so the 512-device dry-run compiles one block regardless
+of depth. `jax.checkpoint` wraps the body for training.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import layers, linear_attn, moe as moe_lib
+from repro.utils.meshctx import constrain
+
+Params = Dict[str, Any]
+
+
+def attn_dims(cfg: ArchConfig) -> layers.AttnDims:
+    return layers.AttnDims(num_heads=cfg.num_heads,
+                           num_kv_heads=cfg.num_kv_heads,
+                           head_dim=cfg.resolved_head_dim)
+
+
+def mamba_dims(cfg: ArchConfig) -> linear_attn.Mamba2Dims:
+    return linear_attn.Mamba2Dims(
+        d_model=cfg.d_model, d_inner=2 * cfg.d_model,
+        num_heads=(2 * cfg.d_model) // 64, d_state=cfg.ssm_state)
+
+
+def rwkv_dims(cfg: ArchConfig) -> linear_attn.RWKV6Dims:
+    return linear_attn.RWKV6Dims(d_model=cfg.d_model,
+                                 num_heads=cfg.num_heads, d_ff=cfg.d_ff)
+
+
+def _norm(cfg: ArchConfig, p: Optional[Params], x: jax.Array) -> jax.Array:
+    return layers.apply_norm(cfg.norm, x, p)
+
+
+def _cast(p: Params, dtype) -> Params:
+    """Cast block params to the compute dtype (weights stored f32/bf16;
+    numerically-sensitive paths re-promote to f32 internally)."""
+    return jax.tree.map(lambda a: a.astype(dtype), p)
+
+
+# ---------------------------------------------------------------------------
+# Attention-family block (dense / moe / vlm / whisper-decoder)
+# ---------------------------------------------------------------------------
+
+def attn_block(cfg: ArchConfig, p: Params, x: jax.Array, *,
+               positions: Optional[jax.Array] = None,
+               enc: Optional[jax.Array] = None, causal: bool = True,
+               chunk: int = 512) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    p = _cast(p, x.dtype)
+    use_rope = cfg.rope_theta > 0
+    h = x + layers.gqa_attention(
+        p["attn"], _norm(cfg, p.get("attn_norm"), x), attn_dims(cfg),
+        positions=positions, causal=causal, rope_theta=cfg.rope_theta or 1e4,
+        chunk=chunk, use_rope=use_rope)
+    if enc is not None:
+        h = h + layers.cross_attention(
+            p["cross"], _norm(cfg, p.get("cross_norm"), h), enc,
+            attn_dims(cfg), chunk=chunk)
+    metrics: Dict[str, jax.Array] = {}
+    hn = _norm(cfg, p.get("mlp_norm"), h)
+    if cfg.num_experts:
+        out, metrics = moe_lib.moe_ffn(
+            p["moe"], hn, experts_per_token=cfg.experts_per_token,
+            capacity_factor=cfg.capacity_factor)
+        h = h + out
+    else:
+        h = h + layers.swiglu_mlp(p["mlp"], hn)
+    return h, metrics
+
+
+def attn_block_decode(cfg: ArchConfig, p: Params, x: jax.Array,
+                      cache: Dict[str, jax.Array], pos: jax.Array, *,
+                      enc_kv: Optional[Tuple[jax.Array, jax.Array]] = None
+                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    p = dict(p, **_cast({k: v for k, v in p.items() if k != "moe"}, x.dtype))
+    use_rope = cfg.rope_theta > 0
+    a, ck, cv = layers.gqa_decode(
+        p["attn"], _norm(cfg, p.get("attn_norm"), x), cache["k"], cache["v"],
+        pos, attn_dims(cfg), rope_theta=cfg.rope_theta or 1e4,
+        use_rope=use_rope)
+    h = x + a
+    new_cache = dict(cache, k=ck, v=cv)
+    if enc_kv is not None:
+        # cross-attn with precomputed enc K/V (whisper decode)
+        dims = attn_dims(cfg)
+        b = x.shape[0]
+        q = (_norm(cfg, p.get("cross_norm"), h) @ p["cross"]["wq"]).reshape(
+            b, 1, dims.num_heads, dims.head_dim)
+        kk = layers._repeat_kv(enc_kv[0], dims.num_heads // dims.num_kv_heads)
+        vv = layers._repeat_kv(enc_kv[1], dims.num_heads // dims.num_kv_heads)
+        o = layers.chunked_attention(q, kk, vv, causal=False)
+        h = h + o.reshape(b, 1, dims.num_heads * dims.head_dim) @ p["cross"]["wo"]
+    hn = _norm(cfg, p.get("mlp_norm"), h)
+    if cfg.num_experts:
+        out, _ = moe_lib.moe_ffn(p["moe"], hn,
+                                 experts_per_token=cfg.experts_per_token,
+                                 capacity_factor=cfg.capacity_factor)
+        h = h + out
+    else:
+        h = h + layers.swiglu_mlp(p["mlp"], hn)
+    return h, new_cache
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 block
+# ---------------------------------------------------------------------------
+
+def rwkv_block(cfg: ArchConfig, p: Params, x: jax.Array, *,
+               chunk: int = 64) -> jax.Array:
+    p = _cast(p, x.dtype)
+    dims = rwkv_dims(cfg)
+    h = x + linear_attn.rwkv6_time_mix(
+        p["time_mix"], _norm(cfg, p.get("attn_norm"), x), dims, chunk=chunk)
+    h = h + linear_attn.rwkv6_channel_mix(
+        p["channel_mix"], _norm(cfg, p.get("mlp_norm"), h))
+    return h
+
+
+def rwkv_block_decode(cfg: ArchConfig, p: Params, x: jax.Array,
+                      cache: Dict[str, jax.Array]
+                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    p = _cast(p, x.dtype)
+    dims = rwkv_dims(cfg)
+    xn = _norm(cfg, p.get("attn_norm"), x)[:, 0]
+    a, tm_state = linear_attn.rwkv6_time_mix_step(
+        p["time_mix"], xn, {"shift": cache["att_shift"],
+                            "wkv": cache["wkv"]}, dims)
+    h = x + a[:, None, :]
+    hn = _norm(cfg, p.get("mlp_norm"), h)[:, 0]
+    c, cm_state = linear_attn.rwkv6_channel_mix_step(
+        p["channel_mix"], hn, {"shift": cache["ffn_shift"]})
+    h = h + c[:, None, :]
+    return h, {"att_shift": tm_state["shift"], "wkv": tm_state["wkv"],
+               "ffn_shift": cm_state["shift"]}
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (zamba2 backbone)
+# ---------------------------------------------------------------------------
+
+def mamba_block(cfg: ArchConfig, p: Params, x: jax.Array, *,
+                chunk: int = 64) -> jax.Array:
+    p = _cast(p, x.dtype)
+    h = x + linear_attn.mamba2_block(
+        p["mamba"], _norm(cfg, p.get("attn_norm"), x), mamba_dims(cfg),
+        chunk=chunk)
+    return h
+
+
+def mamba_block_decode(cfg: ArchConfig, p: Params, x: jax.Array,
+                       cache: Dict[str, jax.Array]
+                       ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    p = _cast(p, x.dtype)
+    out, st = linear_attn.mamba2_decode(
+        p["mamba"], _norm(cfg, p.get("attn_norm"), x), cache, mamba_dims(cfg))
+    return x + out, st
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+# ---------------------------------------------------------------------------
+
+def _scan_blocks(body, x: jax.Array, stacked: Params, *,
+                 remat: bool = False) -> Tuple[jax.Array, Any]:
+    fn = jax.checkpoint(body) if remat else body
+    return jax.lax.scan(fn, x, stacked)
+
+
+def dense_stack(cfg: ArchConfig, blocks: Params, x: jax.Array, *,
+                causal: bool = True, remat: bool = False,
+                chunk: int = 512) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Attention-family stack (dense/moe/vlm). blocks: stacked params."""
+    def body(h, p):
+        h, m = attn_block(cfg, p, h, causal=causal, chunk=chunk)
+        return constrain(h, "dp", "sp", None), m
+    x, ms = _scan_blocks(body, x, blocks, remat=remat)
+    metrics = {k: v.mean() for k, v in ms.items()} if ms else {}
+    return x, metrics
+
+
+def rwkv_stack(cfg: ArchConfig, blocks: Params, x: jax.Array, *,
+               remat: bool = False, chunk: int = 64) -> jax.Array:
+    def body(h, p):
+        return constrain(rwkv_block(cfg, p, h, chunk=chunk),
+                         "dp", None, None), None
+    x, _ = _scan_blocks(body, x, blocks, remat=remat)
+    return x
+
+
+def zamba_stack(cfg: ArchConfig, params: Params, x: jax.Array, *,
+                remat: bool = False, chunk: int = 64,
+                attn_chunk: int = 512) -> jax.Array:
+    """Mamba2 backbone with one shared attention block every attn_every
+    layers. Layout: groups of (attn_every mamba + shared attn), then a tail
+    of leftover mamba layers."""
+    g = cfg.attn_every
+    n_groups = cfg.num_layers // g
+    shared = params["shared_attn"]
+
+    def group_body(h, group_params):
+        def mamba_body(hh, p):
+            return constrain(mamba_block(cfg, p, hh, chunk=chunk),
+                             "dp", None, None), None
+        h, _ = jax.lax.scan(mamba_body, h, group_params)
+        h, _ = attn_block(cfg, shared, h, causal=True, chunk=attn_chunk)
+        return constrain(h, "dp", None, None), None
+
+    fn = jax.checkpoint(group_body) if remat else group_body
+    x, _ = jax.lax.scan(fn, x, params["groups"])  # [G, g, ...]
+    if "tail" in params and params["tail"]:
+        def tail_body(h, p):
+            return constrain(mamba_block(cfg, p, h, chunk=chunk),
+                             "dp", None, None), None
+        tb = jax.checkpoint(tail_body) if remat else tail_body
+        x, _ = jax.lax.scan(tb, x, params["tail"])
+    return x

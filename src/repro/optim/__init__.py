@@ -1,0 +1,6 @@
+from repro.optim import grad_compress, schedule
+from repro.optim.adamw import (AdafactorConfig, AdamWConfig, adafactor_init,
+                               adafactor_update, adamw_init, adamw_update)
+
+__all__ = ["AdamWConfig", "AdafactorConfig", "adamw_init", "adamw_update",
+           "adafactor_init", "adafactor_update", "schedule", "grad_compress"]

@@ -1,0 +1,132 @@
+"""Optimizers from scratch (no optax in this container): AdamW and
+Adafactor (factored second moment — required for the 1T-param MoE at 512
+chips, DESIGN.md §7). Pure-pytree, shardable: optimizer state inherits the
+parameter sharding leaf-for-leaf."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWConfig(NamedTuple):
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: Any = jnp.float32
+
+
+def adamw_init(params: PyTree, cfg: AdamWConfig = AdamWConfig()) -> PyTree:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads: PyTree, state: PyTree, params: PyTree, lr: jax.Array,
+                 cfg: AdamWConfig = AdamWConfig()
+                 ) -> Tuple[PyTree, PyTree]:
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1**t
+    bc2 = 1.0 - cfg.b2**t
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+        v_new = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * gf * gf
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * \
+            p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return (p_new.astype(p.dtype), m_new.astype(m.dtype),
+                v_new.astype(v.dtype))
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    p_new = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    m_new = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    v_new = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return p_new, {"m": m_new, "v": v_new, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018), simplified: factored v for >=2D leaves,
+# bf16 first moment. State for a [.., R, C] leaf: v_row [.., R], v_col [.., C].
+# ---------------------------------------------------------------------------
+
+class AdafactorConfig(NamedTuple):
+    decay: float = 0.99
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    momentum: float = 0.9
+    moment_dtype: Any = jnp.bfloat16
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params: PyTree,
+                   cfg: AdafactorConfig = AdafactorConfig()) -> PyTree:
+    def init_leaf(p):
+        if _factored(p.shape):
+            return {
+                "v_row": jnp.zeros(p.shape[:-1], jnp.float32),
+                "v_col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                "m": jnp.zeros(p.shape, cfg.moment_dtype),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32),
+                "m": jnp.zeros(p.shape, cfg.moment_dtype)}
+
+    return {"leaves": jax.tree.map(init_leaf, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads: PyTree, state: PyTree, params: PyTree,
+                     lr: jax.Array,
+                     cfg: AdafactorConfig = AdafactorConfig()
+                     ) -> Tuple[PyTree, PyTree]:
+    step = state["step"] + 1
+    beta = cfg.decay
+
+    def upd(g, s, p):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + cfg.eps
+        if _factored(p.shape):
+            v_row = beta * s["v_row"] + (1 - beta) * g2.mean(-1)
+            v_col = beta * s["v_col"] + (1 - beta) * g2.mean(-2)
+            row_mean = v_row.mean(-1, keepdims=True)
+            r = v_row / jnp.maximum(row_mean, cfg.eps)
+            update = gf / (jnp.sqrt(r)[..., None] *
+                           jnp.sqrt(v_col)[..., None, :])
+            new_s = {"v_row": v_row, "v_col": v_col}
+        else:
+            v = beta * s["v"] + (1 - beta) * g2
+            update = gf / jnp.sqrt(v)
+            new_s = {"v": v}
+        rms = jnp.sqrt(jnp.mean(update * update))
+        update = update / jnp.maximum(1.0, rms / cfg.clip_threshold)
+        m = cfg.momentum * s["m"].astype(jnp.float32) + \
+            (1 - cfg.momentum) * update
+        new_s["m"] = m.astype(cfg.moment_dtype)
+        p_new = (p.astype(jnp.float32) - lr * (m + cfg.weight_decay *
+                                               p.astype(jnp.float32)))
+        return p_new.astype(p.dtype), new_s
+
+    g_leaves, treedef = jax.tree.flatten(grads)
+    p_leaves = treedef.flatten_up_to(params)
+    s_leaves = treedef.flatten_up_to(state["leaves"])
+    out = [upd(g, s, p) for g, s, p in zip(g_leaves, s_leaves, p_leaves)]
+    p_new = jax.tree.unflatten(treedef, [o[0] for o in out])
+    s_new = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return p_new, {"leaves": s_new, "step": step}

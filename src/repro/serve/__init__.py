@@ -1,0 +1,4 @@
+from repro.serve import engine
+from repro.serve.engine import DarthServer, ServeStats
+
+__all__ = ["engine", "DarthServer", "ServeStats"]

@@ -1,0 +1,181 @@
+"""DARTH serving engine: slot pool + batch compaction (DESIGN.md §2).
+
+On SPMD hardware a lone early-terminated query inside a fixed batch saves
+nothing — the batch keeps stepping. Compaction converts DARTH's per-query
+termination into throughput: terminated queries leave their slot, queued
+queries are spliced in (state surgery via tree-select), and the engine
+keeps every slot busy. This is the systems contribution that makes the
+paper's speedups real on TPU; `benchmarks/serving.py` measures
+slot-step savings vs a no-compaction baseline.
+
+Every query carries its own declared recall target (mixed-target batches
+are native — per-slot R_t, per-slot adaptive intervals).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import darth_search, engines as engines_lib
+from repro.core.intervals import IntervalParams
+from repro.core.predictor import RecallPredictor
+
+PyTree = Any
+
+
+def _select_slots(mask: jax.Array, new: PyTree, old: PyTree) -> PyTree:
+    """Per-slot tree select: where mask[b], take `new`, else `old`.
+    Leaves without a leading slot dim are kept from `old`."""
+    b = mask.shape[0]
+
+    def sel(n, o):
+        if hasattr(o, "ndim") and o.ndim >= 1 and o.shape[0] == b:
+            m = mask.reshape((b,) + (1,) * (o.ndim - 1))
+            return jnp.where(m, n, o)
+        return o
+    return jax.tree.map(sel, new, old)
+
+
+@dataclasses.dataclass
+class ServeStats:
+    completed: int = 0
+    slot_steps: int = 0          # engine steps x slots (cost proxy)
+    engine_steps: int = 0
+    refills: int = 0
+
+
+class DarthServer:
+    """Continuous-batching declarative-recall search server."""
+
+    def __init__(self, engine: engines_lib.Engine,
+                 predictor: RecallPredictor,
+                 interval_for_target,        # fn: r_t array -> IntervalParams
+                 num_slots: int = 64, steps_per_sync: int = 4):
+        self.engine = engine
+        self.predictor = predictor
+        self.interval_for_target = interval_for_target
+        self.num_slots = num_slots
+        self.steps_per_sync = steps_per_sync
+
+        eng = engine
+        pred = predictor
+
+        @jax.jit
+        def run_chunk(st: darth_search.DarthState, r_t: jax.Array,
+                      ipi: jax.Array, mpi: jax.Array):
+            body = darth_search.make_darth_body(
+                eng, pred, IntervalParams(ipi=ipi, mpi=mpi), r_t)
+
+            def do(i, s):
+                return body(s)
+            return jax.lax.fori_loop(0, steps_per_sync, do, st)
+
+        @jax.jit
+        def init_chunk(q: jax.Array, ipi: jax.Array):
+            return darth_search.init_darth_state(
+                eng, q, IntervalParams(ipi=ipi, mpi=ipi))
+
+        @jax.jit
+        def splice(mask, new_st, old_st):
+            return _select_slots(mask, new_st, old_st)
+
+        self._run_chunk = run_chunk
+        self._init_chunk = init_chunk
+        self._splice = splice
+
+    def serve(self, queries: np.ndarray, r_targets: np.ndarray,
+              max_engine_steps: int = 100_000
+              ) -> Tuple[List[Optional[Tuple[np.ndarray, np.ndarray]]],
+                         ServeStats]:
+        """Process all queries; returns per-query (dists, ids) + stats."""
+        n, d = queries.shape
+        b = self.num_slots
+        stats = ServeStats()
+        results: List[Optional[Tuple[np.ndarray, np.ndarray]]] = [None] * n
+
+        queue = list(range(n))
+        slot_query = np.full((b,), -1, np.int64)   # which query occupies slot
+
+        def take_batch(count):
+            ids = [queue.pop(0) for _ in range(min(count, len(queue)))]
+            return ids
+
+        # initial fill
+        ids = take_batch(b)
+        qb = np.zeros((b, d), np.float32)
+        rt = np.zeros((b,), np.float32)
+        for s, qid in enumerate(ids):
+            qb[s] = queries[qid]
+            rt[s] = r_targets[qid]
+            slot_query[s] = qid
+        ip = self.interval_for_target(rt)
+        ipi = np.broadcast_to(np.asarray(ip.ipi, np.float32), (b,)).copy()
+        mpi = np.broadcast_to(np.asarray(ip.mpi, np.float32), (b,)).copy()
+        st = self._init_chunk(jnp.asarray(qb), jnp.asarray(ipi))
+        # slots with no query: deactivate
+        occupied = slot_query >= 0
+        st = dataclasses.replace(
+            st, inner=engines_lib.set_active(
+                st.inner, st.inner.active & jnp.asarray(occupied)))
+        rt_dev = jnp.asarray(rt)
+
+        while True:
+            st = self._run_chunk(st, rt_dev, jnp.asarray(ipi),
+                                 jnp.asarray(mpi))
+            stats.engine_steps += self.steps_per_sync
+            stats.slot_steps += self.steps_per_sync * int(occupied.sum())
+            active = np.asarray(jax.device_get(st.inner.active))
+            finished = occupied & ~active
+            if finished.any():
+                # harvest results
+                topk_d = np.asarray(jax.device_get(
+                    self.engine.topk_d(st.inner)))
+                topk_i = np.asarray(jax.device_get(
+                    self.engine.topk_i(st.inner)))
+                for s in np.nonzero(finished)[0]:
+                    qid = slot_query[s]
+                    results[qid] = (topk_d[s], topk_i[s])
+                    stats.completed += 1
+                    slot_query[s] = -1
+                occupied = slot_query >= 0
+                # refill
+                if queue:
+                    free = np.nonzero(~occupied)[0]
+                    ids = take_batch(len(free))
+                    if ids:
+                        stats.refills += 1
+                        mask = np.zeros((b,), bool)
+                        qb2 = np.zeros((b, d), np.float32)
+                        rt2 = rt.copy()
+                        for s, qid in zip(free, ids):
+                            mask[s] = True
+                            qb2[s] = queries[qid]
+                            rt2[s] = r_targets[qid]
+                            slot_query[s] = qid
+                        ip2 = self.interval_for_target(rt2)
+                        ipi2 = np.broadcast_to(
+                            np.asarray(ip2.ipi, np.float32), (b,))
+                        mpi2 = np.broadcast_to(
+                            np.asarray(ip2.mpi, np.float32), (b,))
+                        ipi = np.where(mask, ipi2, ipi)
+                        mpi = np.where(mask, mpi2, mpi)
+                        rt = np.where(mask, rt2, rt)
+                        rt_dev = jnp.asarray(rt)
+                        fresh = self._init_chunk(jnp.asarray(qb2),
+                                                 jnp.asarray(ipi))
+                        st = self._splice(jnp.asarray(mask), fresh, st)
+                        occupied = slot_query >= 0
+                # deactivate empty slots
+                st = dataclasses.replace(
+                    st, inner=engines_lib.set_active(
+                        st.inner, st.inner.active & jnp.asarray(occupied)))
+            if not occupied.any() and not queue:
+                break
+            if stats.engine_steps >= max_engine_steps:
+                break
+        return results, stats

@@ -1,0 +1,7 @@
+from repro.train import loop, step
+from repro.train.loop import SimulatedFailure, train
+from repro.train.step import (make_prefill_step, make_serve_step,
+                              make_train_step, optimizer_for)
+
+__all__ = ["loop", "step", "train", "SimulatedFailure", "make_train_step",
+           "make_prefill_step", "make_serve_step", "optimizer_for"]

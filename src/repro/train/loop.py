@@ -1,0 +1,83 @@
+"""Training loop with fault tolerance: checkpoint/restart, failure
+injection, restart-exact data order (counter-based pipeline).
+
+Contract exercised in tests/test_train_loop.py:
+  * kill the loop at step K (REPRO_FAIL_AT_STEP or fail_at), restart,
+    and the loss trajectory continues bit-identically vs an uninterrupted
+    run (same pipeline stream, same optimizer state).
+  * checkpoints are atomic: a crash mid-save never corrupts the latest
+    committed step.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro import ckpt
+from repro.configs.base import ArchConfig
+from repro.data.synthetic import PipelineConfig, TokenPipeline
+from repro.models import model_zoo
+from repro.train import step as step_lib
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+def train(cfg: ArchConfig, *, steps: int, global_batch: int, seq_len: int,
+          ckpt_dir: str, ckpt_every: int = 50, keep: int = 3,
+          peak_lr: float = 3e-4, seed: int = 0,
+          fail_at: Optional[int] = None, log_every: int = 10,
+          compress_grads: bool = False,
+          metrics_sink: Optional[List[Dict[str, float]]] = None
+          ) -> Dict[str, Any]:
+    """Single-host training driver (the multi-pod variant is launch/train.py
+    with pjit shardings; this loop is the logic both share)."""
+    pipe = TokenPipeline(PipelineConfig(
+        vocab_size=cfg.vocab_size, seq_len=seq_len,
+        global_batch=global_batch, seed=seed))
+    init_opt, train_step_fn = step_lib.make_train_step(
+        cfg, peak_lr=peak_lr, compress_grads=compress_grads)
+    train_step_fn = jax.jit(train_step_fn, donate_argnums=(0, 1))
+
+    params = model_zoo.init_params(cfg, jax.random.PRNGKey(seed))
+    opt_state = init_opt(params)
+    start_step = 0
+
+    latest = ckpt.latest_step(ckpt_dir)
+    if latest is not None:
+        (params, opt_state), meta = ckpt.restore(
+            ckpt_dir, (params, opt_state))
+        start_step = int(meta["extra"]["next_step"])
+
+    env_fail = os.environ.get("REPRO_FAIL_AT_STEP")
+    fail_at = fail_at if fail_at is not None else (
+        int(env_fail) if env_fail else None)
+
+    history: List[Dict[str, float]] = (metrics_sink if metrics_sink
+                                       is not None else [])
+    t0 = time.time()
+    for s in range(start_step, steps):
+        if fail_at is not None and s == fail_at:
+            raise SimulatedFailure(f"injected failure at step {s}")
+        batch = pipe.get_batch(s)
+        params, opt_state, metrics = train_step_fn(params, opt_state, batch)
+        if s % log_every == 0 or s == steps - 1:
+            m = {k: float(np.asarray(v)) for k, v in metrics.items()}
+            m["step"] = s
+            history.append(m)
+        if ckpt_every and (s + 1) % ckpt_every == 0:
+            ckpt.save(ckpt_dir, s + 1, (params, opt_state),
+                      extra={"next_step": s + 1,
+                             "pipeline": pipe.state_dict(s + 1)},
+                      keep=keep)
+    if ckpt_every:
+        ckpt.save(ckpt_dir, steps, (params, opt_state),
+                  extra={"next_step": steps,
+                         "pipeline": pipe.state_dict(steps)}, keep=keep)
+    return {"history": history, "params": params, "opt_state": opt_state,
+            "seconds": time.time() - t0}

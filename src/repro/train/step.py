@@ -1,0 +1,114 @@
+"""Train-step factory: value_and_grad + global-norm clip + optimizer,
+with optional int8 error-feedback gradient compression (the wire-format
+roundtrip; the shard_map DP reduction lives in optim/grad_compress.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model_zoo
+from repro.optim import (AdafactorConfig, AdamWConfig, adafactor_init,
+                         adafactor_update, adamw_init, adamw_update,
+                         grad_compress, schedule as sched_lib)
+
+PyTree = Any
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def make_optimizer(name: str):
+    if name == "adamw":
+        return (lambda p: adamw_init(p),
+                lambda g, s, p, lr: adamw_update(g, s, p, lr))
+    if name == "adafactor":
+        return (lambda p: adafactor_init(p),
+                lambda g, s, p, lr: adafactor_update(g, s, p, lr))
+    raise ValueError(name)
+
+
+def optimizer_for(cfg: ArchConfig) -> str:
+    """Adafactor for the 1T MoE (f32 Adam moments do not fit 512 chips at
+    16 GB HBM — DESIGN.md §7); AdamW otherwise."""
+    return "adafactor" if cfg.name.startswith("kimi") else "adamw"
+
+
+def make_train_step(cfg: ArchConfig, *, optimizer: Optional[str] = None,
+                    peak_lr: float = 3e-4, warmup_steps: int = 100,
+                    total_steps: int = 10_000, clip_norm: float = 1.0,
+                    compress_grads: bool = False, remat: bool = True,
+                    attn_chunk: int = 512
+                    ) -> Tuple[Callable, Callable]:
+    """Returns (init_opt_state, train_step).
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+    """
+    opt_name = optimizer or optimizer_for(cfg)
+    opt_init, opt_update = make_optimizer(opt_name)
+
+    def init_opt_state(params: PyTree) -> PyTree:
+        state = opt_init(params)
+        if compress_grads:
+            state = dict(state, ef=jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        return state
+
+    def train_step(params: PyTree, opt_state: PyTree,
+                   batch: Dict[str, jax.Array]):
+        def lf(p):
+            return model_zoo.loss_fn(cfg, p, batch, remat=remat,
+                                     chunk=attn_chunk)
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+
+        if compress_grads:
+            ef = opt_state["ef"]
+
+            def comp(g, e):
+                gf = g.astype(jnp.float32) + e
+                sent = grad_compress.compress_roundtrip(gf)
+                return sent.astype(g.dtype), gf - sent
+            out = jax.tree.map(comp, grads, ef)
+            grads = jax.tree.map(lambda o: o[0], out,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+            new_ef = jax.tree.map(lambda o: o[1], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+            opt_state = dict(opt_state, ef=new_ef)
+
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                        ).astype(g.dtype), grads)
+        step = opt_state["step"]
+        lr = sched_lib.warmup_cosine(step, peak_lr=peak_lr,
+                                     warmup_steps=warmup_steps,
+                                     total_steps=total_steps)
+        ef_saved = opt_state.get("ef")
+        core_state = {k: v for k, v in opt_state.items() if k != "ef"}
+        params, core_state = opt_update(grads, core_state, params, lr)
+        if ef_saved is not None:
+            core_state = dict(core_state, ef=opt_state["ef"])
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+        return params, core_state, metrics
+
+    return init_opt_state, train_step
+
+
+def make_prefill_step(cfg: ArchConfig, attn_chunk: int = 512) -> Callable:
+    def prefill_step(params, batch):
+        return model_zoo.prefill(cfg, params, batch, chunk=attn_chunk)
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig) -> Callable:
+    def serve_step(params, cache, tokens, pos):
+        return model_zoo.decode_step(cfg, params, cache, tokens, pos)
+    return serve_step

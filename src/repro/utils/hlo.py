@@ -1,0 +1,274 @@
+"""Post-SPMD HLO analysis: collective-traffic accounting for the roofline.
+
+`compiled.cost_analysis()` gives FLOPs/bytes but NOT collective volume, so
+we parse `compiled.as_text()`: sum result sizes of every all-reduce /
+all-gather / reduce-scatter / all-to-all / collective-permute, with
+while-loop trip counts resolved from the loop-condition constants so
+collectives inside the layer scan are multiplied by depth (DESIGN.md;
+approximation notes in EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{") and "->" in stripped and "=" not in \
+                stripped.split("->")[0].split("(")[0]:
+            m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)", stripped)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(stripped)
+    return comps
+
+
+def _find_entry(hlo: str) -> str:
+    m = re.search(r"ENTRY\s+%?([\w\.\-]+)", hlo)
+    return m.group(1) if m else ""
+
+
+def _while_edges(comps: Dict[str, List[str]]
+                 ) -> Dict[str, List[Tuple[str, str]]]:
+    """comp -> [(body, cond)] for each while instruction in it."""
+    edges: Dict[str, List[Tuple[str, str]]] = {}
+    for name, lines in comps.items():
+        for ln in lines:
+            if " while(" in ln:
+                mb = re.search(r"body=%?([\w\.\-]+)", ln)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ln)
+                if mb and mc:
+                    edges.setdefault(name, []).append(
+                        (mb.group(1), mc.group(1)))
+    return edges
+
+
+def _call_edges(comps: Dict[str, List[str]]) -> Dict[str, List[str]]:
+    edges: Dict[str, List[str]] = {}
+    for name, lines in comps.items():
+        for ln in lines:
+            for m in re.finditer(r"(?:calls|call|to_apply)=%?([\w\.\-]+)", ln):
+                edges.setdefault(name, []).append(m.group(1))
+            m = re.search(r" (?:conditional)\(", ln)
+            if m:
+                for b in re.finditer(
+                        r"(?:branch_computations=\{([^}]*)\}|"
+                        r"(?:true|false)_computation=%?([\w\.\-]+))", ln):
+                    names = b.group(1) or b.group(2) or ""
+                    for nm in names.split(","):
+                        nm = nm.strip().lstrip("%")
+                        if nm:
+                            edges.setdefault(name, []).append(nm)
+    return edges
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Largest integer constant in the condition (loop bound heuristic)."""
+    best = 1
+    for ln in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", ln):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _build_multipliers(comps, whiles, calls, entry) -> Dict[str, float]:
+    mult: Dict[str, float] = {}
+
+    def visit(name: str, m: float, depth: int = 0):
+        if depth > 50 or name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for body, cond in whiles.get(name, []):
+            tc = _trip_count(comps.get(cond, []))
+            visit(body, m * tc, depth + 1)
+            visit(cond, m * (tc + 1), depth + 1)
+        for callee in calls.get(name, []):
+            if callee in comps and callee != name:
+                visit(callee, m, depth + 1)
+
+    if entry:
+        visit(entry, 1.0)
+    else:
+        for name in comps:
+            mult.setdefault(name, 1.0)
+    return mult
+
+
+_DEF_RE = re.compile(r"(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\([^=]*?\))|"
+                     r"(?:[\w]+\[[\d,]*\]\S*))\s+([\w\-]+)\(")
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "iota", "after-all", "partition-id",
+                   "replica-id", "while", "conditional", "call", "custom-call",
+                   "broadcast", "reshape", "transpose", "copy-start",
+                   "copy-done"}
+
+
+def _instruction_bytes(iname: str, itype: str, op: str, ln: str,
+                       types: Dict[str, str]) -> int:
+    """HBM traffic model per top-level (post-fusion) instruction.
+
+    dynamic(-update)-slice (and fusions rooted in them) touch only
+    slice-sized data, not their giant loop-carried operands; everything
+    else reads operands + writes result once.
+    """
+    res = _shape_bytes(itype)
+    slicey = ("dynamic-slice" in ln or "dynamic_slice" in iname
+              or "dynamic-update-slice" in ln or "dynamic_update" in iname)
+    total = res
+    for om in re.finditer(r"%([\w\.\-]+)", ln.split("(", 1)[-1]):
+        if om.group(1) in types:
+            b = _shape_bytes(types[om.group(1)])
+            if slicey and b > 8 * max(res, 1):
+                continue  # aliased big buffer; only the slice moves
+            total += b
+    return total
+
+
+def analyze(hlo: str) -> Dict[str, float]:
+    """Trip-count-weighted per-device analysis of post-SPMD HLO:
+
+      flops      2*M*N*K over every dot (loop-weighted; XLA cost_analysis
+                 counts loop bodies ONCE, which under-counts scan-based
+                 models by ~depth x)
+      hbm_bytes  sum of operand+result bytes of top-level instructions
+                 (post-fusion, each top-level op ~= one kernel <-> HBM trip;
+                 fusion-internal and scalar-reducer computations excluded)
+      collectives  as collective_bytes()
+    """
+    comps = _split_computations(hlo)
+    entry = _find_entry(hlo)
+    whiles = _while_edges(comps)
+    calls = _call_edges(comps)
+    mult = _build_multipliers(comps, whiles, calls, entry)
+
+    # fusion-internal computations: flops YES, hbm bytes NO
+    fusion_callees = set()
+    for lines in comps.values():
+        for ln in lines:
+            if " fusion(" in ln:
+                m = re.search(r"calls=%?([\w\.\-]+)", ln)
+                if m:
+                    fusion_callees.add(m.group(1))
+
+    flops = 0.0
+    hbm = 0.0
+    for name, lines in comps.items():
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        # symbol table: instruction name -> type string
+        types: Dict[str, str] = {}
+        parsed = []
+        for ln in lines:
+            dm = _DEF_RE.search(ln)
+            if dm:
+                types[dm.group(1)] = dm.group(2)
+                parsed.append((dm.group(1), dm.group(2), dm.group(3), ln))
+        for iname, itype, op, ln in parsed:
+            if op == "dot":
+                out_elems = 1
+                sm = _SHAPE_RE.search(itype)
+                if sm and sm.group(2):
+                    for d in sm.group(2).split(","):
+                        out_elems *= int(d)
+                # contraction size from lhs operand shape
+                om = re.search(r"\(\s*%([\w\.\-]+)", ln[ln.index("dot("):])
+                cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ln)
+                csize = 1
+                if om and cdims and om.group(1) in types:
+                    lshape = _SHAPE_RE.search(types[om.group(1)])
+                    if lshape and lshape.group(2):
+                        dims = [int(x) for x in lshape.group(2).split(",")]
+                        for ci in cdims.group(1).split(","):
+                            if ci != "" and int(ci) < len(dims):
+                                csize *= dims[int(ci)]
+                flops += 2.0 * out_elems * csize * m
+            if name not in fusion_callees and op not in _SKIP_BYTES_OPS:
+                hbm += _instruction_bytes(iname, itype, op, ln, types) * m
+
+    out = collective_bytes(hlo)
+    out["flops"] = flops
+    out["hbm_bytes"] = hbm
+    return out
+
+
+def collective_bytes(hlo: str) -> Dict[str, float]:
+    """Total bytes moved by collectives, by op kind, trip-count weighted."""
+    comps = _split_computations(hlo)
+    entry = _find_entry(hlo)
+    whiles = _while_edges(comps)
+    calls = _call_edges(comps)
+
+    mult: Dict[str, float] = {}
+
+    def visit(name: str, m: float, depth: int = 0):
+        if depth > 50 or name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for body, cond in whiles.get(name, []):
+            tc = _trip_count(comps.get(cond, []))
+            visit(body, m * tc, depth + 1)
+            visit(cond, m * (tc + 1), depth + 1)
+        for callee in calls.get(name, []):
+            if callee in comps and callee != name:
+                visit(callee, m, depth + 1)
+
+    if entry:
+        visit(entry, 1.0)
+    else:
+        for name in comps:
+            mult.setdefault(name, 1.0)
+
+    out = {k: 0.0 for k in COLLECTIVES}
+    out["num_ops"] = 0.0
+    for name, lines in comps.items():
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        for ln in lines:
+            for op in COLLECTIVES:
+                # match '<type> op-name(' with optional leading %name =
+                mm = re.search(r"=\s*([^=]*?)\s" + op + r"(?:\.\d+)?\(", ln)
+                if mm and (" " + op + "(" in ln or " " + op + "." in ln
+                           or ln.startswith(op)):
+                    out[op] += _shape_bytes(mm.group(1)) * m
+                    out["num_ops"] += m
+                    break
+    out["total"] = sum(out[k] for k in COLLECTIVES)
+    return out

@@ -1,0 +1,79 @@
+"""Activation-sharding context: model code calls `constrain(x, ...logical
+axes...)`; when a mesh is active (set by the launcher/dry-run) this becomes
+jax.lax.with_sharding_constraint, otherwise a no-op (single-device tests).
+
+Why this exists (EXPERIMENTS.md §Perf iteration 1): without activation
+constraints GSPMD resolved the FSDP-weight vs batch-sharding conflict by
+all-gathering full-batch activations (4 GB per layer per step on
+smollm/train_4k). Constraints pin activations to [batch@dp, ...] and let
+weights be the thing that moves.
+
+Logical axis vocabulary: "dp" (data || pod x data), "tp" (model), None.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], sp: bool = False):
+    prev = current_mesh()
+    prev_sp = getattr(_state, "sp", False)
+    _state.mesh = mesh
+    _state.sp = sp
+    try:
+        yield
+    finally:
+        _state.mesh = prev
+        _state.sp = prev_sp
+
+
+def _resolve(mesh: Mesh, axis: Optional[str]):
+    if axis is None:
+        return None
+    if axis == "dp":
+        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        return axes if axes else None
+    if axis == "tp":
+        return "model" if "model" in mesh.axis_names else None
+    if axis == "dpt":  # every mesh axis (fully-sharded token dim)
+        axes = tuple(a for a in ("pod", "data", "model")
+                     if a in mesh.axis_names)
+        return axes if axes else None
+    if axis == "sp":   # sequence parallelism: model axis iff enabled
+        if getattr(_state, "sp", False) and "model" in mesh.axis_names:
+            return "model"
+        return None
+    return axis if axis in mesh.axis_names else None
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Apply a sharding constraint if a mesh is active and dims divide."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    if len(logical) != x.ndim:
+        return x
+    import numpy as np
+    spec = []
+    for dim, ax in zip(x.shape, logical):
+        r = _resolve(mesh, ax)
+        if r is None:
+            spec.append(None)
+            continue
+        axes = r if isinstance(r, tuple) else (r,)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        spec.append(r if (size > 0 and dim % size == 0) else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,67 @@
+"""Competitor implementations: REM sweep, LAET, fixed-budget Baseline."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import api, baselines, darth_search, engines, training
+from repro.index import flat, ivf
+
+
+@pytest.fixture(scope="module")
+def setup():
+    from repro.data import vectors
+    ds = vectors.make_dataset(n=5000, d=16, num_learn=512, num_queries=128,
+                              clusters=25, cluster_std=1.0, seed=2)
+    index = ivf.build(ds.base, nlist=25, seed=2)
+    q_learn = jnp.asarray(ds.learn[:256])
+    _, gt_learn = flat.search(q_learn, jnp.asarray(ds.base), 10)
+    eng = engines.ivf_engine(index, k=10, nprobe=25)
+    log = training.generate_observations(eng, q_learn, gt_learn, batch=256)
+    return ds, index, eng, log
+
+
+def test_rem_mapping_monotone(setup):
+    ds, index, eng, log = setup
+    q_val = jnp.asarray(ds.learn[256:384])
+    _, gt_val = flat.search(q_val, jnp.asarray(ds.base), 10)
+    rem = baselines.fit_rem(
+        lambda p: engines.ivf_engine(index, k=10, nprobe=p),
+        q_val, gt_val, param_grid=[2, 4, 8, 16, 25],
+        targets=[0.8, 0.9, 0.99])
+    # sweep recall is monotone in nprobe
+    ps = sorted(rem.sweep)
+    recs = [rem.sweep[p] for p in ps]
+    assert all(b >= a - 0.02 for a, b in zip(recs, recs[1:]))
+    # higher target -> no smaller parameter
+    assert rem.mapping[0.99] >= rem.mapping[0.8]
+
+
+def test_laet_budget_and_tuning(setup):
+    ds, index, eng, log = setup
+    laet = baselines.fit_laet(log, n0=2)
+    q = jnp.asarray(ds.queries[:64])
+    inner = baselines.laet_search(laet, eng, q, multiplier=1.0)
+    nd = np.asarray(inner.ndis)
+    assert (nd > 0).all()
+    # bigger multiplier -> more work, better or equal recall
+    inner2 = baselines.laet_search(laet, eng, q, multiplier=2.0)
+    assert np.asarray(inner2.ndis).mean() >= nd.mean()
+
+    q_val = jnp.asarray(ds.learn[256:384])
+    _, gt_val = flat.search(q_val, jnp.asarray(ds.base), 10)
+    tuned = baselines.tune_laet(laet, eng, q_val, gt_val, targets=[0.9],
+                                steps=4)
+    assert 0.9 in tuned.multipliers
+
+
+def test_baseline_fixed_budget(setup):
+    ds, index, eng, log = setup
+    from repro.core import intervals
+    d90 = float(np.mean(intervals.dists_to_target(
+        log.recall, log.ndis, log.valid, 0.9)))
+    inner = darth_search.budget_search(eng, jnp.asarray(ds.queries[:64]), d90)
+    gt_d, gt_i = flat.search(jnp.asarray(ds.queries[:64]),
+                             jnp.asarray(ds.base), 10)
+    rec = float(flat.recall_at_k(eng.topk_i(inner), gt_i).mean())
+    # Baseline roughly hits the target on average on easy data
+    assert rec > 0.6

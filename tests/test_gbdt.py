@@ -1,0 +1,66 @@
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import gbdt
+
+
+def _toy(n=5000, f=11, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, f)).astype(np.float32)
+    y = (np.sin(x[:, 0]) + 0.5 * (x[:, 1] > 0.3) * x[:, 2]
+         + 0.1 * rng.normal(size=n)).astype(np.float32)
+    return x, y
+
+
+def test_gbdt_fits_nonlinear_target():
+    x, y = _toy()
+    p = gbdt.fit(x, y, gbdt.GBDTConfig(num_trees=40, depth=5))
+    pred = np.asarray(gbdt.predict_jit(p, jnp.asarray(x)))
+    mse = float(np.mean((pred - y) ** 2))
+    assert mse < 0.05, mse          # noise floor ~0.01, var(y) ~0.5
+
+
+def test_gbdt_deterministic():
+    x, y = _toy(2000)
+    p1 = gbdt.fit(x, y, gbdt.GBDTConfig(num_trees=10, depth=4))
+    p2 = gbdt.fit(x, y, gbdt.GBDTConfig(num_trees=10, depth=4))
+    np.testing.assert_array_equal(np.asarray(p1.leaf), np.asarray(p2.leaf))
+    np.testing.assert_array_equal(np.asarray(p1.feat), np.asarray(p2.feat))
+
+
+def test_model_selection_ordering():
+    """Paper §4.1.5: GBDT <= RF < linear on nonlinear targets."""
+    x, y = _toy(4000)
+    g = gbdt.fit(x, y, gbdt.GBDTConfig(num_trees=40, depth=5))
+    lin = gbdt.fit_linear(x, y)
+    mse_g = float(np.mean((np.asarray(gbdt.predict_jit(g, jnp.asarray(x))) - y) ** 2))
+    mse_l = float(np.mean((np.asarray(lin.predict(jnp.asarray(x))) - y) ** 2))
+    assert mse_g < mse_l
+
+
+def test_predict_paths_agree():
+    x, y = _toy(2000)
+    p = gbdt.fit(x, y, gbdt.GBDTConfig(num_trees=15, depth=4))
+    a = np.asarray(gbdt.predict(p, jnp.asarray(x[:64])))
+    b = np.asarray(gbdt.predict_efficient(p, jnp.asarray(x[:64])))
+    np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_state_dict_roundtrip():
+    x, y = _toy(1000)
+    p = gbdt.fit(x, y, gbdt.GBDTConfig(num_trees=5, depth=3))
+    p2 = gbdt.from_state_dict(gbdt.to_state_dict(p))
+    a = np.asarray(gbdt.predict_efficient(p, jnp.asarray(x[:32])))
+    b = np.asarray(gbdt.predict_efficient(p2, jnp.asarray(x[:32])))
+    np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_decision_tree_and_rf():
+    x, y = _toy(3000)
+    dt = gbdt.fit_decision_tree(x, y, depth=6)
+    rf = gbdt.fit_random_forest(x, y, num_trees=10, depth=5)
+    for p in (dt, rf):
+        pred = np.asarray(gbdt.predict_jit(p, jnp.asarray(x)))
+        assert np.isfinite(pred).all()
+        assert float(np.mean((pred - y) ** 2)) < float(np.var(y))

@@ -1,0 +1,98 @@
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.index import flat, hnsw, ivf
+
+
+def test_flat_exact(clustered_vectors):
+    ds = clustered_vectors
+    q = jnp.asarray(ds.queries[:16])
+    x = jnp.asarray(ds.base)
+    d, i = flat.search(q, x, 5)
+    # brute force check on a few rows
+    for r in range(4):
+        full = ((ds.base - ds.queries[r]) ** 2).sum(1)
+        order = np.argsort(full)[:5]
+        np.testing.assert_allclose(np.asarray(d)[r], np.sort(full)[:5],
+                                   rtol=1e-4)
+        assert set(np.asarray(i)[r].tolist()) == set(order.tolist())
+
+
+def test_recall_at_k():
+    found = jnp.asarray([[1, 2, 3], [4, 5, -1]])
+    true = jnp.asarray([[3, 2, 9], [7, 8, 9]])
+    r = np.asarray(flat.recall_at_k(found, true))
+    np.testing.assert_allclose(r, [2 / 3, 0.0])
+
+
+def test_ivf_recall_and_counters(clustered_vectors):
+    ds = clustered_vectors
+    index = ivf.build(ds.base, nlist=32, seed=0)
+    assert index.num_vectors == ds.base.shape[0]
+    q = jnp.asarray(ds.queries[:64])
+    gt_d, gt_i = flat.search(q, jnp.asarray(ds.base), 10)
+    d, i, s = ivf.search(index, q, k=10, nprobe=8)
+    rec = float(flat.recall_at_k(i, gt_i).mean())
+    assert rec > 0.9, rec
+    # counters: ndis equals the sum of probed bucket sizes
+    sizes = np.asarray(index.bucket_sizes)
+    order = np.asarray(s.probe_order)[:, :8]
+    expect = sizes[order].sum(axis=1)
+    np.testing.assert_array_equal(np.asarray(s.ndis), expect)
+    # exhaustive probe = exact
+    d2, i2, _ = ivf.search(index, q, k=10, nprobe=32)
+    assert float(flat.recall_at_k(i2, gt_i).mean()) == 1.0
+
+
+def test_hnsw_recall(clustered_vectors):
+    ds = clustered_vectors
+    index = hnsw.build(ds.base, m=12, passes=1, ef_construction=48)
+    q = jnp.asarray(ds.queries[:64])
+    gt_d, gt_i = flat.search(q, jnp.asarray(ds.base), 10)
+    d, i, s = hnsw.search(index, q, k=10, ef=96)
+    rec = float(flat.recall_at_k(i, gt_i).mean())
+    assert rec > 0.85, rec
+    nd = np.asarray(s.ndis)
+    assert (nd > 0).all() and (nd < ds.base.shape[0]).all()
+    # frontier sorted ascending
+    cd = np.asarray(s.cand_d)
+    assert (np.diff(cd, axis=1) >= -1e-5).all()
+
+
+def test_hnsw_batch_equals_single(clustered_vectors):
+    ds = clustered_vectors
+    index = hnsw.build(ds.base[:2000], m=8, passes=1)
+    q = jnp.asarray(ds.queries[:8])
+    d_b, i_b, _ = hnsw.search(index, q, k=5, ef=32)
+    for r in range(4):
+        d_s, i_s, _ = hnsw.search(index, q[r:r + 1], k=5, ef=32)
+        np.testing.assert_array_equal(np.asarray(i_b)[r], np.asarray(i_s)[0])
+
+
+def test_ivf_sq8_quantized(clustered_vectors):
+    """SQ8 storage: 4x less memory, recall within a few points of f32, and
+    DARTH composes unchanged (same engine protocol)."""
+    ds = clustered_vectors
+    idx_f = ivf.build(ds.base, nlist=32, seed=0)
+    idx_q = ivf.build(ds.base, nlist=32, seed=0, quantize=True)
+    assert idx_q.quantized and not idx_f.quantized
+    assert idx_q.bucket_vecs.dtype == jnp.int8
+
+    q = jnp.asarray(ds.queries[:64])
+    gt_d, gt_i = flat.search(q, jnp.asarray(ds.base), 10)
+    _, i_f, _ = ivf.search(idx_f, q, k=10, nprobe=8)
+    _, i_q, _ = ivf.search(idx_q, q, k=10, nprobe=8)
+    rec_f = float(flat.recall_at_k(i_f, gt_i).mean())
+    rec_q = float(flat.recall_at_k(i_q, gt_i).mean())
+    assert rec_q > rec_f - 0.05, (rec_f, rec_q)
+
+    # DARTH over the quantized engine still meets a target
+    from repro.core import api, engines
+    d = api.Darth(
+        make_engine=lambda **kw: engines.ivf_engine(idx_q, **kw),
+        engine=engines.ivf_engine(idx_q, k=10, nprobe=32))
+    d.fit(jnp.asarray(ds.learn), jnp.asarray(ds.base), batch=256)
+    _, ii, st = d.search(q, 0.9)
+    rec = float(flat.recall_at_k(ii, gt_i).mean())
+    assert rec >= 0.85, rec

@@ -1,0 +1,94 @@
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (AdamWConfig, adafactor_init, adafactor_update,
+                         adamw_init, adamw_update, grad_compress)
+
+
+def _quad_problem():
+    target = {"w": jnp.asarray([[1.0, -2.0], [3.0, 0.5]]),
+              "b": jnp.asarray([0.1, -0.3])}
+
+    def loss(p):
+        return (jnp.sum((p["w"] - target["w"]) ** 2)
+                + jnp.sum((p["b"] - target["b"]) ** 2))
+    p0 = jax.tree.map(jnp.zeros_like, target)
+    return loss, p0
+
+
+@pytest.mark.parametrize("opt", ["adamw", "adafactor"])
+def test_optimizers_minimize_quadratic(opt):
+    loss, p = _quad_problem()
+    if opt == "adamw":
+        state = adamw_init(p)
+        update = adamw_update
+    else:
+        state = adafactor_init(p)
+        update = adafactor_update
+    l0 = float(loss(p))
+    for _ in range(200):
+        g = jax.grad(loss)(p)
+        p, state = update(g, state, p, jnp.asarray(0.05))
+    assert float(loss(p)) < 0.05 * l0
+
+
+def test_adamw_weight_decay_shrinks():
+    p = {"w": jnp.ones((4,)) * 10.0}
+    cfg = AdamWConfig(weight_decay=0.1)
+    state = adamw_init(p, cfg)
+    g = {"w": jnp.zeros((4,))}
+    p2, _ = adamw_update(g, state, p, jnp.asarray(0.1), cfg)
+    assert float(p2["w"][0]) < 10.0
+
+
+@settings(deadline=None, max_examples=20)
+@given(n=st.integers(5, 2000), scale=st.floats(1e-4, 1e3))
+def test_int8_compression_error_bounded(n, scale):
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.normal(size=(n,)) * scale, jnp.float32)
+    y = grad_compress.compress_roundtrip(x)
+    # blockwise int8: error per element <= blockmax/127 (half-step rounding)
+    err = np.abs(np.asarray(x - y))
+    blocks = np.asarray(jnp.pad(x, (0, (-n) % grad_compress.BLOCK))
+                        ).reshape(-1, grad_compress.BLOCK)
+    bound = np.repeat(np.abs(blocks).max(1) / 127.0,
+                      grad_compress.BLOCK)[:n] * 0.5 + 1e-9
+    assert (err <= bound + 1e-6).all()
+
+
+def test_error_feedback_telescopes():
+    """sum of sent values + final error == sum of true grads (per element):
+    the compression never loses mass over time."""
+    rng = np.random.default_rng(0)
+    true = [jnp.asarray(rng.normal(size=(300,)), jnp.float32)
+            for _ in range(10)]
+    e = jnp.zeros((300,))
+    sent_total = jnp.zeros((300,))
+    for g in true:
+        gf = g + e
+        sent = grad_compress.compress_roundtrip(gf)
+        e = gf - sent
+        sent_total = sent_total + sent
+    total_true = sum(true)
+    np.testing.assert_allclose(np.asarray(sent_total + e),
+                               np.asarray(total_true), atol=1e-4)
+
+
+def test_compressed_train_step_runs():
+    from repro import configs
+    from repro.models import model_zoo
+    from repro.train import step as step_lib
+    from tests.conftest import small_config
+    cfg = small_config(configs.get_config("olmo-1b"))
+    init_opt, train_step = step_lib.make_train_step(cfg, compress_grads=True)
+    params = model_zoo.init_params(cfg, jax.random.PRNGKey(0))
+    opt_state = init_opt(params)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, 256, (2, 16)), jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, 256, (2, 16)), jnp.int32)}
+    params, opt_state, m = jax.jit(train_step)(params, opt_state, batch)
+    assert np.isfinite(float(m["loss"]))
+    assert "ef" in opt_state

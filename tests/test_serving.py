@@ -1,0 +1,67 @@
+"""DARTH serving engine: completeness, correctness, compaction savings."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import api, engines, intervals
+from repro.index import flat, ivf
+from repro.serve import DarthServer
+
+
+@pytest.fixture(scope="module")
+def served_setup():
+    from repro.data import vectors
+    ds = vectors.make_dataset(n=5000, d=16, num_learn=512, num_queries=200,
+                              clusters=25, cluster_std=1.0, seed=1)
+    index = ivf.build(ds.base, nlist=25, seed=1)
+    eng = engines.ivf_engine(index, k=10, nprobe=25)
+    d = api.Darth(make_engine=lambda **kw: engines.ivf_engine(index, **kw),
+                  engine=eng)
+    d.fit(jnp.asarray(ds.learn), jnp.asarray(ds.base), batch=256)
+    return ds, index, d
+
+
+def test_server_completes_all_queries(served_setup):
+    ds, index, d = served_setup
+    def interval_for_target(rt):
+        p = [d.interval_params(float(r)) for r in np.atleast_1d(rt)]
+        return intervals.IntervalParams(
+            ipi=np.array([x.ipi for x in p], np.float32),
+            mpi=np.array([x.mpi for x in p], np.float32))
+
+    server = DarthServer(d.engine, d.trained.predictor, interval_for_target,
+                         num_slots=32, steps_per_sync=2)
+    rts = np.full((200,), 0.9, np.float32)
+    results, stats = server.serve(ds.queries, rts)
+    assert stats.completed == 200
+    assert all(r is not None for r in results)
+
+    # quality: recall against ground truth
+    gt_d, gt_i = flat.search(jnp.asarray(ds.queries), jnp.asarray(ds.base), 10)
+    ids = np.stack([r[1] for r in results])
+    rec = float(np.asarray(flat.recall_at_k(jnp.asarray(ids), gt_i)).mean())
+    assert rec >= 0.85, rec
+
+
+def test_server_compaction_saves_slot_steps(served_setup):
+    """With compaction, total slot-steps must be well below
+    num_queries x natural-termination steps (the no-compaction cost)."""
+    ds, index, d = served_setup
+    from repro.core import darth_search
+    q = jnp.asarray(ds.queries)
+    inner = darth_search.plain_search(d.engine, q)
+    natural_steps = float(np.asarray(inner.probe_pos).mean())
+
+    def interval_for_target(rt):
+        p = d.interval_params(0.9)
+        b = np.atleast_1d(rt).shape[0]
+        return intervals.IntervalParams(
+            ipi=np.full((b,), p.ipi, np.float32),
+            mpi=np.full((b,), p.mpi, np.float32))
+
+    server = DarthServer(d.engine, d.trained.predictor, interval_for_target,
+                         num_slots=32, steps_per_sync=2)
+    results, stats = server.serve(ds.queries, np.full((200,), 0.9, np.float32))
+    per_query_steps = stats.slot_steps / stats.completed
+    assert per_query_steps < natural_steps, \
+        (per_query_steps, natural_steps)

@@ -1,0 +1,82 @@
+"""End-to-end behaviour tests for the paper's system (deliverable c).
+
+The paper's contract: ANNS(q, G, k, R_t) returns approximate k-NN with
+recall >= R_t (w.h.p.), faster than plain search, with no per-target
+tuning. These tests exercise the full pipeline on both supported indexes.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import api, engines
+from repro.data import vectors
+from repro.index import flat, hnsw, ivf
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return vectors.make_dataset(n=6000, d=24, num_learn=600, num_queries=128,
+                                clusters=32, cluster_std=1.2, seed=0)
+
+
+def _check_declarative_recall(d, ds, targets=(0.8, 0.9)):
+    q = jnp.asarray(ds.queries)
+    gt_d, gt_i = flat.search(q, jnp.asarray(ds.base), d.engine.k)
+    _, _, plain = d.search_plain(q)
+    plain_nd = float(np.asarray(plain.ndis).mean())
+    prev_nd = 0.0
+    for rt in targets:
+        dd, ii, st = d.search(q, rt)
+        rec = float(flat.recall_at_k(ii, gt_i).mean())
+        nd = float(np.asarray(st.inner.ndis).mean())
+        assert rec >= rt - 0.03, (rt, rec)
+        assert nd <= plain_nd
+        assert nd >= prev_nd - 1e-6   # higher target -> no less work
+        prev_nd = nd
+        # diagnostics coherent
+        assert np.asarray(st.npred).min() >= 0
+        early = np.asarray(st.early)
+        assert early.mean() > 0.5     # most queries early-terminate
+
+
+def test_darth_ivf_end_to_end(ds):
+    index = ivf.build(ds.base, nlist=32, seed=0)
+    eng = engines.ivf_engine(index, k=10, nprobe=32)
+    d = api.Darth(make_engine=lambda **kw: engines.ivf_engine(index, **kw),
+                  engine=eng)
+    trained = d.fit(jnp.asarray(ds.learn), jnp.asarray(ds.base), batch=256)
+    assert trained.metrics["mse"] < 0.02
+    _check_declarative_recall(d, ds)
+
+
+def test_darth_hnsw_end_to_end(ds):
+    index = hnsw.build(ds.base, m=12, passes=1, ef_construction=48)
+    eng = engines.hnsw_engine(index, k=10, ef=96)
+    d = api.Darth(make_engine=lambda **kw: engines.hnsw_engine(index, **kw),
+                  engine=eng)
+    d.fit(jnp.asarray(ds.learn), jnp.asarray(ds.base), batch=200)
+    q = jnp.asarray(ds.queries)
+    gt_d, gt_i = flat.search(q, jnp.asarray(ds.base), 10)
+    _, _, plain = d.search_plain(q)
+    plain_rec = float(flat.recall_at_k(plain.cand_i[:, :10], gt_i).mean())
+    rt = min(0.85, plain_rec - 0.02)   # attainable target (paper §2.3)
+    dd, ii, st = d.search(q, rt)
+    rec = float(flat.recall_at_k(ii, gt_i).mean())
+    assert rec >= rt - 0.04, (rt, rec, plain_rec)
+    assert float(np.asarray(st.inner.ndis).mean()) <= \
+        float(np.asarray(plain.ndis).mean())
+
+
+def test_tuning_free_targets_without_refit(ds):
+    """Any attainable target works from ONE fit — the paper's headline."""
+    index = ivf.build(ds.base, nlist=32, seed=0)
+    eng = engines.ivf_engine(index, k=10, nprobe=32)
+    d = api.Darth(make_engine=lambda **kw: engines.ivf_engine(index, **kw),
+                  engine=eng)
+    d.fit(jnp.asarray(ds.learn), jnp.asarray(ds.base), batch=256)
+    q = jnp.asarray(ds.queries)
+    gt_d, gt_i = flat.search(q, jnp.asarray(ds.base), 10)
+    for rt in (0.82, 0.87, 0.93, 0.97):   # arbitrary targets, no refit
+        _, ii, _ = d.search(q, rt)
+        rec = float(flat.recall_at_k(ii, gt_i).mean())
+        assert rec >= rt - 0.04, (rt, rec)
