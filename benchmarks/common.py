@@ -4,14 +4,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import os
 import time
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import api, engines, training
+from repro.core import api, engines
 from repro.data import vectors
 from repro.index import flat, hnsw, ivf
 

@@ -15,7 +15,7 @@ from repro.core import (baselines, darth_search, engines, features,
                         intervals, metrics, training)
 from repro.data import vectors
 from repro.index import flat
-from repro.core.predictor import RecallPredictor, regression_metrics
+from repro.core.predictor import regression_metrics
 
 Rows = List[Dict]
 

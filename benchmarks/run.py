@@ -10,9 +10,10 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import paper_tables as pt
+    from benchmarks import dist_search, paper_tables as pt
 
     benches = [
+        ("dist_sharded_search", dist_search.dist_sharded_search),
         ("table5_predictor_quality", pt.table5_predictor_quality),
         ("table4_training_cost", pt.table4_training_cost),
         ("fig5_interval_ablation", pt.fig5_interval_ablation),

@@ -25,18 +25,41 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import msgpack
 import numpy as np
+from jax.sharding import Mesh, NamedSharding
 
 PyTree = Any
 
 
-def _flatten(tree: PyTree) -> Tuple[List[Tuple[str, np.ndarray]], Any]:
+def _spec_entry(e) -> Any:
+    return list(e) if isinstance(e, tuple) else e
+
+
+def _leaf_sharding_meta(leaf) -> Optional[Dict[str, Any]]:
+    """Serializable record of a leaf's NamedSharding (logical spec + mesh),
+    so elastic restore can re-derive placement on a different mesh."""
+    sh = getattr(leaf, "sharding", None)
+    if not isinstance(sh, NamedSharding):
+        return None
+    return {
+        "spec": [_spec_entry(e) for e in sh.spec],
+        "mesh_axes": list(sh.mesh.axis_names),
+        "mesh_shape": [int(sh.mesh.shape[a]) for a in sh.mesh.axis_names],
+    }
+
+
+def _flatten(tree: PyTree) -> Tuple[List[Tuple[str, np.ndarray]], Any,
+                                    Dict[str, Any]]:
     leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = []
+    shardings: Dict[str, Any] = {}
     for path, leaf in leaves:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in path)
+        meta = _leaf_sharding_meta(leaf)
+        if meta is not None:
+            shardings[key] = meta
         out.append((key, np.asarray(jax.device_get(leaf))))
-    return out, treedef
+    return out, treedef, shardings
 
 
 def save(directory: str, step: int, tree: PyTree,
@@ -45,13 +68,14 @@ def save(directory: str, step: int, tree: PyTree,
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
     try:
-        leaves, _ = _flatten(tree)
+        leaves, _, shardings = _flatten(tree)
         np.savez(os.path.join(tmp, "arrays.npz"),
                  **{k: v for k, v in leaves})
         meta = {
             "step": step,
             "keys": [k for k, _ in leaves],
             "dtypes": [str(v.dtype) for _, v in leaves],
+            "shardings": shardings,
             "extra": extra or {},
         }
         with open(os.path.join(tmp, "meta.msgpack"), "wb") as f:
@@ -96,11 +120,30 @@ def latest_step(directory: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def _respec(saved: Dict[str, Any], mesh: Mesh, shape) -> NamedSharding:
+    """Re-derive a NamedSharding on a *different* mesh from the logical
+    spec recorded at save time: axes the new mesh lacks, or whose size no
+    longer divides the dimension, degrade to replication (elastic). The
+    degrade rule is dist.sharding.spec_for — one implementation shared
+    with the placement path (local import: dist pulls in the kernels)."""
+    from repro.dist.sharding import spec_for
+    spec = saved.get("spec", [])
+    logical = [tuple(e) if isinstance(e, list) else e for e in spec]
+    logical += [None] * (len(shape) - len(logical))
+    return NamedSharding(mesh, spec_for(mesh, shape, logical))
+
+
 def restore(directory: str, like: PyTree, step: Optional[int] = None,
-            shardings: Optional[PyTree] = None
+            shardings: Optional[Any] = None
             ) -> Tuple[PyTree, Dict[str, Any]]:
     """Restore into the structure of `like` (arrays or ShapeDtypeStructs).
-    `shardings`: optional tree of NamedSharding to place leaves (elastic)."""
+
+    `shardings` places leaves for elastic restore; either
+      * a tree of NamedSharding (matching `like` leaf-for-leaf), or
+      * a Mesh: each leaf is re-placed using the logical PartitionSpec
+        recorded at save time, re-resolved against the new mesh shape
+        (the (4,2) -> (2,4) reshard path; unknown axes replicate).
+    """
     step = step if step is not None else latest_step(directory)
     assert step is not None, f"no committed checkpoint in {directory}"
     path = os.path.join(directory, f"step_{step:08d}")
@@ -109,13 +152,18 @@ def restore(directory: str, like: PyTree, step: Optional[int] = None,
     z = np.load(os.path.join(path, "arrays.npz"))
 
     leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    mesh = shardings if isinstance(shardings, Mesh) else None
     shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
-                    if shardings is not None else [None] * len(leaves))
+                    if shardings is not None and mesh is None
+                    else [None] * len(leaves))
+    saved_sh = meta.get("shardings") or {}
     out = []
     for (pth, leaf), shd in zip(leaves, shard_leaves):
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in pth)
         arr = z[key]
+        if mesh is not None:
+            shd = _respec(saved_sh.get(key, {}), mesh, leaf.shape)
         assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape,
                                                        leaf.shape)
         arr = arr.astype(leaf.dtype)

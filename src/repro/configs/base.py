@@ -7,7 +7,7 @@ rules (long_500k needs sub-quadratic attention; see DESIGN.md §5).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 
 @dataclasses.dataclass(frozen=True)

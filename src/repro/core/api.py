@@ -8,10 +8,9 @@ declared per query with NO further tuning — the paper's headline property.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Sequence, Tuple, Union
+from typing import Callable, Optional, Sequence, Tuple, Union
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import darth_search, engines as engines_lib

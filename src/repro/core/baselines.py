@@ -13,7 +13,7 @@
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, NamedTuple, Sequence, Tuple
+from typing import Callable, Dict, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,7 @@ per-query targets are a vector, so one batch can mix declared recalls.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Tuple, Union
+from typing import Any, Callable, Union
 
 import jax
 import jax.numpy as jnp

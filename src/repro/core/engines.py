@@ -11,7 +11,6 @@ import dataclasses
 from typing import Any, Callable, NamedTuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.index import hnsw as hnsw_lib
 from repro.index import ivf as ivf_lib

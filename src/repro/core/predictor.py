@@ -9,11 +9,8 @@ Two inference paths, numerically identical (tests assert it):
 from __future__ import annotations
 
 import dataclasses
-import io
-from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import gbdt

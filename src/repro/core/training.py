@@ -13,7 +13,7 @@ Byproducts used elsewhere (all free, as the paper notes):
 from __future__ import annotations
 
 import time
-from typing import Dict, NamedTuple, Optional, Sequence, Tuple
+from typing import Dict, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp

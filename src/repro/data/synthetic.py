@@ -12,7 +12,7 @@ enough structure for a loss to fall during example training runs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,15 @@
+"""Distributed sharding subsystem: mesh-aware placement rules for model
+parameters / optimizer state (dist.sharding), cross-shard search
+collectives (dist.collectives), and index placement helpers.
+
+Everything degrades to replication on axes that do not divide, so the
+same code path runs on the single-device host mesh and the production
+pod mesh (see launch/mesh.py).
+"""
+from repro.dist import collectives, sharding
+from repro.dist.collectives import make_sharded_flat_search
+from repro.dist.sharding import (opt_shardings, param_shardings, place_index,
+                                 replicated)
+
+__all__ = ["collectives", "sharding", "make_sharded_flat_search",
+           "param_shardings", "opt_shardings", "place_index", "replicated"]

@@ -1,0 +1,106 @@
+"""Cross-shard search collectives: the database is row-sharded over the
+"model" mesh axis, each shard runs the fused l2_topk kernel on its local
+rows, and the per-shard candidates are merged with one small all-gather —
+collective volume O(B * k * shards * 8 bytes), independent of N.
+
+Padding contract: N is padded up to a multiple of the shard count; padded
+rows carry x_sqnorm = +inf so they can never enter a top-k, and any slot
+whose distance is +inf reports id -1 (same convention as index/flat.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.kernels import ops
+
+SHARD_AXIS = "model"
+
+
+def shard_count(mesh: Mesh, axis: str = SHARD_AXIS) -> int:
+    return int(mesh.shape[axis]) if axis in mesh.axis_names else 1
+
+
+def merge_topk(cand_d: jax.Array, cand_i: jax.Array, k: int
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Merge [B, M] candidate (dist, id) lists to the best k per row.
+    +inf candidates (shard padding) are masked back to id -1."""
+    neg, pos = jax.lax.top_k(-cand_d, k)
+    d = -neg
+    i = jnp.take_along_axis(cand_i, pos, axis=1)
+    return d, jnp.where(jnp.isfinite(d), i, -1)
+
+
+def make_sharded_flat_search(mesh: Mesh, k: int, *, axis: str = SHARD_AXIS,
+                             use_kernel: bool = True, interpret: bool = True
+                             ) -> Callable[[jax.Array, jax.Array],
+                                           Tuple[jax.Array, jax.Array]]:
+    """Exact flat k-NN over a database sharded on `axis`.
+
+    Returns fn(q [B, D], x [N, D]) -> (dist [B, k] ascending, idx [B, k]),
+    numerically matching index.flat.search on any shard count (including
+    the 1-device host mesh). Queries are replicated; per-shard local
+    top-k uses the fused Pallas kernel (interpret-mode on CPU), the
+    cross-shard merge is one tiled all-gather of [B, k] + top_k.
+    """
+    nshards = shard_count(mesh, axis)
+
+    def local_topk(q, x_loc, sqn_loc):
+        if use_kernel:
+            d_loc, i_loc = ops.l2_topk(q, x_loc, k=k, x_sqnorm=sqn_loc,
+                                       interpret=interpret)
+        else:  # pure-XLA: padded rows enter with sqn=+inf, never win
+            qf = q.astype(jnp.float32)
+            d2 = (jnp.sum(qf ** 2, 1)[:, None] + sqn_loc[None, :]
+                  - 2.0 * qf @ x_loc.astype(jnp.float32).T)
+            if d2.shape[1] < k:  # fewer local rows than k: pad candidates
+                d2 = jnp.pad(d2, ((0, 0), (0, k - d2.shape[1])),
+                             constant_values=jnp.inf)
+            neg, i_loc = jax.lax.top_k(-d2, k)
+            d_loc = jnp.maximum(-neg, 0.0)
+        rows = x_loc.shape[0]
+        base = jax.lax.axis_index(axis) * rows
+        i_glob = jnp.where(jnp.isfinite(d_loc) & (i_loc >= 0),
+                           i_loc + base, -1)
+        cand_d = jax.lax.all_gather(d_loc, axis, axis=1, tiled=True)
+        cand_i = jax.lax.all_gather(i_glob, axis, axis=1, tiled=True)
+        return merge_topk(cand_d, cand_i, k)
+
+    sharded = shard_map(
+        local_topk, mesh=mesh,
+        in_specs=(P(), P(axis, None), P(axis)),
+        out_specs=(P(), P()),
+        check_rep=False)
+
+    @jax.jit
+    def search(q: jax.Array, x: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+        n = x.shape[0]
+        per_shard = -(-n // nshards)
+        pad = per_shard * nshards - n
+        sqn = jnp.sum(x.astype(jnp.float32) ** 2, axis=1)
+        xp = jnp.pad(x, ((0, pad), (0, 0)))
+        sqnp = jnp.pad(sqn, (0, pad), constant_values=jnp.inf)
+        return sharded(q, xp, sqnp)
+
+    return search
+
+
+@functools.lru_cache(maxsize=8)
+def _cached_search(mesh: Mesh, k: int):
+    return make_sharded_flat_search(mesh, k)
+
+
+def sharded_flat_search(q: jax.Array, x: jax.Array, k: int, mesh: Mesh
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """One-shot convenience wrapper (builds + caches the jitted fn)."""
+    return _cached_search(mesh, k)(q, x)
+
+
+__all__ = ["make_sharded_flat_search", "sharded_flat_search", "merge_topk",
+           "shard_count", "SHARD_AXIS"]

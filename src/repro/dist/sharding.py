@@ -1,0 +1,234 @@
+"""Mesh-aware PartitionSpec rules for parameter trees, optimizer state,
+and ANN index placement.
+
+The rules mirror the activation constraints in utils/meshctx.py: "tp"
+resolves to the "model" axis, "dp" to ("pod", "data") — whichever of
+those axes the mesh actually has. Every rule is divisibility-checked
+per dimension: an axis that does not evenly divide the dimension is
+dropped from the spec (replication), so the single-device host mesh
+(1, 1) and odd shard counts never error, they just replicate more.
+
+Weight layout convention (matches the matmuls in models/layers.py):
+  * input projections  [.., d_in, d_out]: d_in over dp (FSDP), d_out
+    over tp (Megatron column-parallel);
+  * output projections [.., d_out, d_in] (wo / out_proj / cv): the
+    contracted dim over tp (row-parallel), the other over dp;
+  * leading stacked axes (lax.scan layer stacks, expert stacks) are
+    never sharded — they are scanned over, not contracted;
+  * vectors / scalars / norm scales / small depthwise convs replicate.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# Row-parallel (output) projections: first of the trailing two dims is
+# the contracted one.
+_OUT_PROJ_NAMES = frozenset({"wo", "out_proj", "cv"})
+
+# Always replicated regardless of shape: per-channel gains, SSM/RWKV
+# per-head scalars, depthwise conv stencils, router logits tables.
+_REPLICATED_NAMES = frozenset({
+    "scale", "ln_x_scale", "norm_scale", "w0", "dt_bias", "a_log",
+    "d_skip", "bonus_u", "conv_w", "router",
+})
+
+
+def _resolve_logical(mesh: Mesh, logical) -> Optional[Tuple[str, ...]]:
+    """Logical axis name (or tuple of concrete mesh-axis names) -> tuple
+    of mesh axes present on this mesh."""
+    if logical is None:
+        return None
+    if isinstance(logical, (tuple, list)):
+        axes = tuple(a for a in logical if a in mesh.axis_names)
+        return axes or None
+    if logical == "dp":
+        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        return axes or None
+    if logical == "tp":
+        return ("model",) if "model" in mesh.axis_names else None
+    return (logical,) if logical in mesh.axis_names else None
+
+
+def spec_for(mesh: Mesh, shape: Sequence[int],
+             logical: Sequence[Optional[str]]) -> P:
+    """Divisibility-checked PartitionSpec from per-dim logical axes."""
+    entries = []
+    for dim, ax in zip(shape, logical):
+        axes = _resolve_logical(mesh, ax)
+        if axes is None:
+            entries.append(None)
+            continue
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        if size > 1 and dim % size == 0:
+            entries.append(axes[0] if len(axes) == 1 else axes)
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def _leaf_name(path) -> str:
+    if not path:
+        return ""
+    last = path[-1]
+    return str(getattr(last, "key", getattr(last, "idx", last)))
+
+
+def _param_logical(name: str, ndim: int) -> Tuple[Optional[str], ...]:
+    """Logical axes for one parameter leaf, by name and rank."""
+    if ndim < 2 or name in _REPLICATED_NAMES or name.startswith("mu_"):
+        return (None,) * ndim
+    trailing = ("tp", "dp") if name in _OUT_PROJ_NAMES else ("dp", "tp")
+    return (None,) * (ndim - 2) + trailing
+
+
+def param_spec(name: str, shape: Sequence[int], mesh: Mesh) -> P:
+    return spec_for(mesh, shape, _param_logical(name, len(shape)))
+
+
+def param_shardings(tree: PyTree, mesh: Mesh) -> PyTree:
+    """NamedSharding tree matching `tree` leaf-for-leaf.
+
+    `tree` may hold arrays or ShapeDtypeStructs (abstract_params)."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = [NamedSharding(mesh, param_spec(_leaf_name(path), leaf.shape, mesh))
+           for path, leaf in leaves]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _padded_spec(sharding: NamedSharding, ndim: int) -> Tuple:
+    spec = tuple(sharding.spec)
+    return spec + (None,) * (ndim - len(spec))
+
+
+def _factored_shardings(p_sharding: NamedSharding, state_leaf: dict,
+                        mesh: Mesh) -> dict:
+    """Shardings for one adafactor per-leaf dict ({v_row, v_col, m} for
+    factored leaves, {v, m} otherwise): derived from the param spec so
+    moments stay colocated with their parameter shards. v_row/v_col drop
+    one reduced param dim each, so their specs drop that dim's entry."""
+    out = {}
+    for key, arr in state_leaf.items():
+        spec = _padded_spec(p_sharding, arr.ndim + 1)  # the param's rank
+        if key == "v_row":      # param [.., R, C] -> [.., R]
+            out[key] = NamedSharding(mesh, P(*spec[:-1]))
+        elif key == "v_col":    # param [.., R, C] -> [.., C]
+            out[key] = NamedSharding(mesh, P(*(spec[:-2] + spec[-1:])))
+        else:  # "m", "v": full parameter shape
+            out[key] = p_sharding
+    return out
+
+
+def opt_shardings(opt_state: PyTree, params: PyTree, mesh: Mesh) -> PyTree:
+    """Shardings for an optimizer-state dict (adamw / adafactor / ef),
+    leaf-for-leaf colocated with `param_shardings(params, mesh)`.
+
+    Understands the repro.optim layouts:
+      adamw:     {"m": <params>, "v": <params>, "step": scalar}
+      adafactor: {"leaves": <params-of-{v_row,v_col,m}|{v,m}>, "step": ..}
+      plus the optional error-feedback buffer "ef" (params structure).
+    """
+    p_sh = param_shardings(params, mesh)
+    rep = replicated(mesh)
+    out = {}
+    for key, sub in opt_state.items():
+        if key == "leaves":
+            sh_leaves, treedef = jax.tree_util.tree_flatten(p_sh)
+            state_dicts = treedef.flatten_up_to(sub)
+            out[key] = jax.tree_util.tree_unflatten(
+                treedef, [_factored_shardings(s, d, mesh)
+                          for s, d in zip(sh_leaves, state_dicts)])
+        elif key in ("m", "v", "ef"):
+            out[key] = jax.tree.map(lambda _, s: s, sub, p_sh)
+        else:  # "step" and any other bookkeeping scalars
+            out[key] = jax.tree.map(lambda _: rep, sub)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Batch / decode-cache placement (launch/dryrun.py contract)
+# ---------------------------------------------------------------------------
+
+_KV_CACHE_NAMES = frozenset({"k", "v", "ck", "cv", "shared_k", "shared_v"})
+
+
+def batch_shardings(batch: PyTree, mesh: Mesh, kind: str = "train"
+                    ) -> PyTree:
+    """Input batches shard the leading (global-batch) dim over dp; all
+    other dims (seq, patch/frame features) stay replicated — sequence
+    sharding is an *activation* concern (meshctx "sp"), not an input
+    placement. `kind` is accepted for symmetry across train / prefill /
+    decode; the rule is the same."""
+    del kind
+
+    def leaf(x):
+        logical = ("dp",) + (None,) * (x.ndim - 1)
+        return NamedSharding(mesh, spec_for(mesh, x.shape, logical))
+
+    return jax.tree.map(leaf, batch)
+
+
+def cache_shardings(cache: PyTree, mesh: Mesh) -> PyTree:
+    """Decode caches: batch dim over dp, kv-head dim of attention caches
+    over tp (matching the attention weight sharding). The batch dim is 1
+    past the leading stacked layer axes — 2 under the hybrid "groups"
+    subtree (layout [n_groups, group, batch, ..]), 1 everywhere else."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = []
+    for path, x in leaves:
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        bdim = 2 if "groups" in keys[:-1] else 1
+        logical = [None] * x.ndim
+        if x.ndim > bdim:
+            logical[bdim] = "dp"
+        if keys and keys[-1] in _KV_CACHE_NAMES and x.ndim >= 5:
+            logical[-2] = "tp"
+        out.append(NamedSharding(mesh, spec_for(mesh, x.shape, logical)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Index placement
+# ---------------------------------------------------------------------------
+
+def database_sharding(mesh: Mesh, n_rows: int) -> NamedSharding:
+    """Row-shard an [N, D] vector database over the "model" axis
+    (replicates when the axis is absent or does not divide N)."""
+    return NamedSharding(mesh, spec_for(mesh, (n_rows, 1), ("tp", None)))
+
+
+def place_index(index: Any, mesh: Mesh) -> Any:
+    """Place an IVF index dataclass onto `mesh`: the per-bucket arrays
+    are sharded over the "model" axis on the bucket (nlist) dim, the
+    small centroid / dequant tables replicate. Degrades to full
+    replication on a 1-device mesh, so the serve path is identical."""
+    import dataclasses
+
+    def place(name: str, arr: jax.Array) -> jax.Array:
+        if name.startswith("bucket_"):
+            logical = ("tp",) + (None,) * (arr.ndim - 1)
+        else:
+            logical = (None,) * arr.ndim
+        sh = NamedSharding(mesh, spec_for(mesh, arr.shape, logical))
+        return jax.device_put(arr, sh)
+
+    if dataclasses.is_dataclass(index):
+        return dataclasses.replace(index, **{
+            f.name: place(f.name, getattr(index, f.name))
+            for f in dataclasses.fields(index)
+            if hasattr(getattr(index, f.name), "ndim")})
+    return jax.tree.map(lambda a: place("", a), index)
+
+
+__all__ = ["param_shardings", "opt_shardings", "batch_shardings",
+           "cache_shardings", "param_spec", "spec_for", "replicated",
+           "database_sharding", "place_index"]

@@ -9,12 +9,10 @@ of N.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-
-from repro.kernels import ref
 
 
 @functools.partial(jax.jit, static_argnames=("k", "chunk"))
@@ -49,6 +47,14 @@ def search(q: jax.Array, x: jax.Array, k: int,
     (best_d, best_i), _ = jax.lax.scan(body, init, (xc, xsqc, offs))
     best_d = jnp.where(best_i >= 0, jnp.maximum(best_d + qsq, 0.0), jnp.inf)
     return best_d, best_i
+
+
+def search_sharded(q: jax.Array, x: jax.Array, k: int, mesh
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Exact top-k with the database row-sharded over mesh axis "model"
+    (dist/collectives.py); numerically matches `search`."""
+    from repro.dist import collectives  # local import: dist uses kernels
+    return collectives.sharded_flat_search(q, x, k, mesh)
 
 
 def recall_at_k(found_ids: jax.Array, true_ids: jax.Array) -> jax.Array:

@@ -32,8 +32,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.index import flat
-
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass

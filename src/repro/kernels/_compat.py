@@ -1,0 +1,11 @@
+"""jax version compatibility for the Pallas kernels (single definition
+site — the three kernel modules all import from here)."""
+from jax.experimental.pallas import tpu as pltpu
+
+# renamed TPUCompilerParams -> CompilerParams across jax releases
+COMPILER_PARAMS = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+if COMPILER_PARAMS is None:  # pragma: no cover
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; unsupported jax version")

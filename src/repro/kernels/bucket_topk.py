@@ -20,7 +20,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels._compat import COMPILER_PARAMS as _COMPILER_PARAMS
 
 
 def _bucket_topk_kernel(q_ref, vecs_ref, sqn_ref, ids_ref, ind_ref, ini_ref,
@@ -93,7 +93,7 @@ def bucket_topk_padded(q: jax.Array, vecs: jax.Array, sqn: jax.Array,
             jax.ShapeDtypeStruct((b, k), jnp.float32),
             jax.ShapeDtypeStruct((b, k), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(q, vecs, sqn, ids, run_d, run_i)

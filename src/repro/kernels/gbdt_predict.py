@@ -18,9 +18,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
-
-from repro.gbdt.model import GBDTParams
+from repro.kernels._compat import COMPILER_PARAMS as _COMPILER_PARAMS
 
 
 def _gbdt_kernel(x_ref, feat_ref, thr_ref, leaf_ref, out_ref, *,
@@ -76,7 +74,7 @@ def gbdt_predict_padded(x: jax.Array, feat: jax.Array, thr: jax.Array,
         ],
         out_specs=pl.BlockSpec((bq, 1), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((b, 1), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x, feat, thr, leaf)

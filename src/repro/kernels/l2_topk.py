@@ -27,7 +27,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels._compat import COMPILER_PARAMS as _COMPILER_PARAMS
 
 _NEG_INF = float("-inf")
 
@@ -113,7 +113,7 @@ def l2_topk_padded(q: jax.Array, x: jax.Array, x_sqnorm: jax.Array, *,
             jax.ShapeDtypeStruct((b, k), jnp.float32),
             jax.ShapeDtypeStruct((b, k), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(q, x, xsq2d)

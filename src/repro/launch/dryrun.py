@@ -109,6 +109,8 @@ def lower_cell(arch: str, shape: str, *, multi_pod: bool,
         t_compile = time.time() - t0 - t_lower
 
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax<=0.4.x: one entry per program
+        ca = ca[0] if ca else {}
     try:
         ma = compiled.memory_analysis()
         mem = {

@@ -7,7 +7,6 @@ placeholders)."""
 from __future__ import annotations
 
 import jax
-import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -20,6 +19,21 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """Single-device mesh with the production axis names (smoke tests)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_search_mesh(num_shards: int = 0):
+    """1-D ("model",) mesh for sharded ANN search (dist/collectives.py).
+
+    `num_shards` 0 means "all visible devices"; the database rows are
+    sharded over this axis, queries replicate. On the 1-CPU test host
+    this is a (1,) mesh and the search path is identical."""
+    n = num_shards or jax.device_count()
+    if jax.device_count() < n:
+        raise ValueError(
+            f"--shards {n} needs {n} devices but only "
+            f"{jax.device_count()} visible; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n} for a smoke run")
+    return jax.make_mesh((n,), ("model",))
 
 
 def describe(mesh) -> str:

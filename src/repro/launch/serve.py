@@ -5,6 +5,11 @@ targets through the compaction engine.
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --n 30000 --queries 512 \
       --targets 0.8,0.9,0.95
+
+Sharded serving (--shards N row-shards the index over a ("model",) mesh;
+N=0 uses every visible device — on a multi-chip host, or under
+XLA_FLAGS=--xla_force_host_platform_device_count=8 for a smoke run):
+  PYTHONPATH=src python -m repro.launch.serve --shards 0
 """
 from __future__ import annotations
 
@@ -14,10 +19,13 @@ import time
 import numpy as np
 import jax.numpy as jnp
 
+from repro import dist
 from repro.core import api, engines, intervals
 from repro.data import vectors
 from repro.index import flat, ivf
+from repro.launch import mesh as mesh_lib
 from repro.serve import DarthServer
+from repro.utils import hlo as hlo_lib
 
 
 def main() -> None:
@@ -29,6 +37,9 @@ def main() -> None:
     ap.add_argument("--nlist", type=int, default=128)
     ap.add_argument("--slots", type=int, default=64)
     ap.add_argument("--targets", type=str, default="0.8,0.9,0.95")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="row-shard the index over a ('model',) mesh; "
+                         "0 = all visible devices (default: unsharded)")
     args = ap.parse_args()
 
     targets = [float(t) for t in args.targets.split(",")]
@@ -39,6 +50,12 @@ def main() -> None:
     index = ivf.build(ds.base, nlist=args.nlist, seed=0)
     print(f"[serve] index built: {index.num_vectors} vecs "
           f"({time.time()-t0:.1f}s)")
+
+    mesh = None
+    if args.shards is not None:
+        mesh = mesh_lib.make_search_mesh(args.shards)
+        index = dist.place_index(index, mesh)
+        print(f"[serve] index placed on {mesh_lib.describe(mesh)}")
 
     darth = api.Darth(
         make_engine=lambda **kw: engines.ivf_engine(index, **kw),
@@ -57,7 +74,8 @@ def main() -> None:
     rng = np.random.default_rng(0)
     r_targets = rng.choice(targets, size=args.queries).astype(np.float32)
     server = DarthServer(darth.engine, darth.trained.predictor,
-                         interval_for_target, num_slots=args.slots)
+                         interval_for_target, num_slots=args.slots,
+                         mesh=mesh)
     t0 = time.time()
     results, stats = server.serve(ds.queries, r_targets)
     dt = time.time() - t0
@@ -65,8 +83,18 @@ def main() -> None:
           f"({stats.completed/dt:.0f} qps host-side; "
           f"{stats.engine_steps} engine steps, {stats.refills} refills)")
 
-    gt_d, gt_i = flat.search(jnp.asarray(ds.queries), jnp.asarray(ds.base),
-                             args.k)
+    if mesh is not None:
+        sfn = dist.make_sharded_flat_search(mesh, args.k)
+        q_dev, x_dev = jnp.asarray(ds.queries), jnp.asarray(ds.base)
+        compiled = sfn.lower(q_dev, x_dev).compile()  # one compile: run+HLO
+        gt_d, gt_i = compiled(q_dev, x_dev)
+        coll = hlo_lib.collective_bytes(compiled.as_text())
+        print(f"[serve] sharded ground truth: "
+              f"{coll['total']/1e3:.1f} kB collectives "
+              f"({coll['num_ops']:.0f} ops) per batch")
+    else:
+        gt_d, gt_i = flat.search(jnp.asarray(ds.queries),
+                                 jnp.asarray(ds.base), args.k)
     ids = np.stack([r[1] for r in results])
     rec = np.asarray(flat.recall_at_k(jnp.asarray(ids), gt_i))
     for t in targets:

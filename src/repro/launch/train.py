@@ -13,11 +13,9 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import os
 import time
 
 import jax
-import numpy as np
 
 from repro import ckpt, configs
 from repro.data.synthetic import PipelineConfig, TokenPipeline

@@ -7,8 +7,6 @@ otherwise; compute casts to bf16 inside blocks where MXU-bound.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -148,7 +146,7 @@ def init_params(cfg: ArchConfig, key: jax.Array,
     """Materialize parameters (smoke tests / examples; the dry-run never
     allocates)."""
     shapes = param_shapes(cfg)
-    leaves, treedef = jax.tree.flatten_with_path(
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(
         shapes, is_leaf=lambda x: isinstance(x, tuple))
     dt = param_dtype(cfg)
     out = []

@@ -15,8 +15,7 @@ device (9.4 GB/device for kimi-k2 train_4k; EXPERIMENTS.md §Perf).
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -13,13 +13,9 @@ of depth. `jax.checkpoint` wraps the body for training.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import layers, linear_attn, moe as moe_lib

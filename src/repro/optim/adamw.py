@@ -4,9 +4,7 @@ chips, DESIGN.md §7). Pure-pytree, shardable: optimizer state inherits the
 parameter sharding leaf-for-leaf."""
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,6 @@ unbiased-ish and bounded) and the dry-run checks lowering.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional, Tuple
 
 import jax

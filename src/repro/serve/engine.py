@@ -14,8 +14,9 @@ are native — per-slot R_t, per-slot adaptive intervals).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
+
+import contextlib
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +25,7 @@ import numpy as np
 from repro.core import darth_search, engines as engines_lib
 from repro.core.intervals import IntervalParams
 from repro.core.predictor import RecallPredictor
+from repro.utils import meshctx
 
 PyTree = Any
 
@@ -55,12 +57,17 @@ class DarthServer:
     def __init__(self, engine: engines_lib.Engine,
                  predictor: RecallPredictor,
                  interval_for_target,        # fn: r_t array -> IntervalParams
-                 num_slots: int = 64, steps_per_sync: int = 4):
+                 num_slots: int = 64, steps_per_sync: int = 4,
+                 mesh=None):
         self.engine = engine
         self.predictor = predictor
         self.interval_for_target = interval_for_target
         self.num_slots = num_slots
         self.steps_per_sync = steps_per_sync
+        # When the engine's index was placed on a mesh (dist.place_index),
+        # the slot-pool chunks run SPMD over it; use_mesh also activates
+        # the activation constraints inside any model-side feature code.
+        self.mesh = mesh
 
         eng = engine
         pred = predictor
@@ -93,6 +100,15 @@ class DarthServer:
               ) -> Tuple[List[Optional[Tuple[np.ndarray, np.ndarray]]],
                          ServeStats]:
         """Process all queries; returns per-query (dists, ids) + stats."""
+        ctx = (meshctx.use_mesh(self.mesh) if self.mesh is not None
+               else contextlib.nullcontext())
+        with ctx:
+            return self._serve(queries, r_targets, max_engine_steps)
+
+    def _serve(self, queries: np.ndarray, r_targets: np.ndarray,
+               max_engine_steps: int = 100_000
+               ) -> Tuple[List[Optional[Tuple[np.ndarray, np.ndarray]]],
+                          ServeStats]:
         n, d = queries.shape
         b = self.num_slots
         stats = ServeStats()

@@ -4,7 +4,6 @@ roundtrip; the shard_map DP reduction lives in optim/grad_compress.py).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -12,9 +11,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models import model_zoo
-from repro.optim import (AdafactorConfig, AdamWConfig, adafactor_init,
-                         adafactor_update, adamw_init, adamw_update,
-                         grad_compress, schedule as sched_lib)
+from repro.optim import (adafactor_init, adafactor_update, adamw_init,
+                         adamw_update, grad_compress, schedule as sched_lib)
 
 PyTree = Any
 

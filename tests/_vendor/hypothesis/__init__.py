@@ -1,0 +1,70 @@
+"""Minimal deterministic stand-in for the subset of the `hypothesis` API
+this test-suite uses (given / settings / strategies.integers / floats).
+
+Only importable when the real package is absent: tests/conftest.py adds
+this directory to sys.path as a fallback, so CI (which installs real
+hypothesis from requirements.txt) is unaffected. Sampling is seeded and
+replayable; the first two examples of every strategy are the interval
+endpoints so boundary behavior is always exercised.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+
+from . import strategies  # noqa: F401  (re-export)
+
+__version__ = "0.0-repro-shim"
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def settings(*, max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Decorator recording max_examples on the (already-@given-wrapped)
+    test function; other hypothesis knobs are accepted and ignored."""
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    """Run the test once per drawn example, deterministically."""
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(0xDA27)
+            for i in range(n):
+                drawn = {name: s.draw(rng, i) for name, s in strats.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except _Unsatisfied:  # assume() failed: discard the example
+                    continue
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        if hasattr(fn, "pytestmark"):
+            wrapper.pytestmark = fn.pytestmark
+        # hide the strategy kwargs from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for p in sig.parameters.values() if p.name not in strats])
+        return wrapper
+    return deco
+
+
+def assume(condition) -> bool:
+    """Shim: skip-on-false is not replayed; treat as a plain guard."""
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+__all__ = ["given", "settings", "assume", "strategies"]

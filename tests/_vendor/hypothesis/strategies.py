@@ -1,0 +1,45 @@
+"""Strategy objects for the hypothesis shim: seeded draws, endpoints
+first (example 0 = lo, example 1 = hi, then uniform samples)."""
+from __future__ import annotations
+
+import random
+from typing import Callable
+
+
+class SearchStrategy:
+    def __init__(self, lo, hi, sample: Callable[[random.Random], object]):
+        self._lo, self._hi, self._sample = lo, hi, sample
+
+    def draw(self, rng: random.Random, example_index: int):
+        if example_index == 0:
+            return self._lo
+        if example_index == 1:
+            return self._hi
+        return self._sample(rng)
+
+    def __repr__(self):
+        return f"SearchStrategy({self._lo!r}, {self._hi!r})"
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(min_value, max_value,
+                          lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float, **_ignored) -> SearchStrategy:
+    # log-uniform when the interval spans decades (matches how these
+    # tests use wide scale ranges), uniform otherwise
+    import math
+    if min_value > 0 and max_value / min_value > 1e3:
+        lo, hi = math.log(min_value), math.log(max_value)
+        return SearchStrategy(min_value, max_value,
+                              lambda rng: math.exp(rng.uniform(lo, hi)))
+    return SearchStrategy(min_value, max_value,
+                          lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(False, True, lambda rng: rng.random() < 0.5)
+
+
+__all__ = ["SearchStrategy", "integers", "floats", "booleans"]

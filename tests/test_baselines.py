@@ -3,7 +3,7 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core import api, baselines, darth_search, engines, training
+from repro.core import baselines, darth_search, engines, training
 from repro.index import flat, ivf
 
 

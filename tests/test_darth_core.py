@@ -1,11 +1,9 @@
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (api, darth_search, engines, features, intervals,
-                        training)
+from repro.core import api, darth_search, engines, features, intervals
 from repro.index import flat, ivf
 
 

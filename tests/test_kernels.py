@@ -1,7 +1,6 @@
 """Pallas kernel validation: interpret-mode shape/dtype sweeps against the
 pure-jnp oracles in kernels/ref.py (deliverable c)."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 from hypothesis import given, settings, strategies as st

@@ -4,7 +4,6 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import PartitionSpec as P
 
 from repro.core import metrics
 from repro.utils import hlo as hlo_lib
