@@ -16,7 +16,6 @@ import numpy as np
 from repro.core import darth_search, engines as engines_lib
 from repro.core import intervals as intervals_lib
 from repro.core import training as training_lib
-from repro.index import flat
 
 
 @dataclasses.dataclass
@@ -30,9 +29,11 @@ class Darth:
     def fit(self, q_train: jax.Array, x: jax.Array, *,
             targets: Sequence[float] = (0.8, 0.85, 0.9, 0.95, 0.99),
             max_samples: int = 2_000_000, batch: int = 256,
-            seed: int = 0) -> training_lib.TrainedDarth:
+            seed: int = 0, mesh=None) -> training_lib.TrainedDarth:
+        """One-time fit. With `mesh`, ground-truth generation row-shards
+        the database over the mesh (training.ground_truth)."""
         k = self.engine.k
-        _, gt_i = flat.search(q_train, x, k)
+        _, gt_i = training_lib.ground_truth(q_train, x, k, mesh=mesh)
         log = training_lib.generate_observations(self.engine, q_train, gt_i,
                                                  batch=batch)
         self.trained = training_lib.fit_predictor(

@@ -49,6 +49,37 @@ def ivf_engine(index: ivf_lib.IVFIndex, *, k: int, nprobe: int) -> Engine:
     )
 
 
+def sharded_ivf_engine(index: ivf_lib.IVFIndex, mesh, *, k: int, nprobe: int,
+                       use_kernel: bool = True,
+                       interpret: bool = True) -> Engine:
+    """ShardedIVFEngine: the IVF probe loop over a cap-sharded bucket
+    store (dist.place_index + dist.collectives.make_sharded_probe_step).
+
+    Same Engine protocol and the same IVFSearchState as ivf_engine, so
+    darth_search / budget_search / the slot-pool server drive it
+    unchanged; only the probe step's data movement differs (per-shard
+    bucket_topk + one [B, k] all-gather merge instead of a GSPMD bucket
+    gather). `index` must have been placed with dist.place_index(index,
+    mesh) so its bucket cap divides the shard count."""
+    from repro.dist import collectives as dist_collectives
+
+    # make_sharded_probe_step returns a jitted step(index, state): the
+    # index goes through the jit boundary as an argument so its committed
+    # cap-axis sharding is respected (a closure const would replicate).
+    step = dist_collectives.make_sharded_probe_step(
+        mesh, use_kernel=use_kernel, interpret=interpret)
+    return Engine(
+        init=lambda q: ivf_lib.init_state(index, q, k=k, nprobe=nprobe),
+        step=lambda s: step(index, s),
+        topk_d=lambda s: s.topk_d,
+        topk_i=lambda s: s.topk_i,
+        nstep=lambda s: s.probe_pos,
+        max_steps=nprobe,
+        name="ivf-sharded",
+        k=k,
+    )
+
+
 def hnsw_engine(index: hnsw_lib.HNSWIndex, *, k: int, ef: int,
                 max_steps: int = 0) -> Engine:
     limit = max_steps or 8 * ef

@@ -13,7 +13,7 @@ Byproducts used elsewhere (all free, as the paper notes):
 from __future__ import annotations
 
 import time
-from typing import Dict, NamedTuple, Sequence
+from typing import Dict, NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +33,20 @@ class TrainLog(NamedTuple):
     ndis: np.ndarray      # i32[T, B]
     valid: np.ndarray     # bool[T, B] (query was active going into step)
     gen_seconds: float
+
+
+def ground_truth(q: jax.Array, x: jax.Array, k: int, mesh=None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Exact k-NN ground truth for training-data generation.
+
+    With a mesh, the database rows are sharded over the "model" axis and
+    each shard runs the fused l2_topk kernel on its slice
+    (dist.make_sharded_flat_search) — DARTH fit scales with the mesh
+    instead of scanning all N rows per device."""
+    if mesh is not None:
+        from repro.dist import collectives
+        return collectives.sharded_flat_search(q, x, k, mesh)
+    return flat.search(q, x, k)
 
 
 def generate_observations(engine: engines_lib.Engine, q: jax.Array,

@@ -3,14 +3,26 @@
 rows, and the per-shard candidates are merged with one small all-gather —
 collective volume O(B * k * shards * 8 bytes), independent of N.
 
-Padding contract: N is padded up to a multiple of the shard count; padded
-rows carry x_sqnorm = +inf so they can never enter a top-k, and any slot
-whose distance is +inf reports id -1 (same convention as index/flat.py).
+Two sharded entry points:
+  * make_sharded_flat_search — exact flat k-NN over a row-sharded [N, D]
+    database (ground truth / brute-force baseline).
+  * make_sharded_probe_step — one IVF probe over a CAP-sharded bucket
+    store [nlist, cap, D] (dist.sharding.place_index splits the cap dim
+    over "model"): each shard scans its local slice of the probed bucket
+    with the fused bucket_topk kernel, candidates merge via one tiled
+    [B, k] all-gather + merge_topk, insert counters psum. Per-probe
+    traffic drops from the GSPMD gather's O(B*cap*D) to O(B*k*shards).
+
+Padding contract: the sharded dim (N rows / bucket cap) is padded up to a
+multiple of the shard count; padded slots carry sqnorm = +inf so they can
+never enter a top-k, and any slot whose distance is +inf reports id -1
+(same convention as index/flat.py and index/ivf.py).
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Tuple
+import collections
+import dataclasses
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -91,9 +103,32 @@ def make_sharded_flat_search(mesh: Mesh, k: int, *, axis: str = SHARD_AXIS,
     return search
 
 
-@functools.lru_cache(maxsize=8)
+# Keyed on the mesh GEOMETRY + device ids, not the Mesh object: a Mesh
+# key would hold the mesh (and through jit caches, its device buffers)
+# alive across tests, and two equivalent meshes would compile twice.
+# Equivalent-mesh hits reuse the first mesh's compiled fn — same axes
+# over the same devices in the same order means identical placement;
+# meshes over different device subsets get their own entries.
+_SEARCH_CACHE: "collections.OrderedDict[tuple, Callable]" = \
+    collections.OrderedDict()
+_SEARCH_CACHE_MAX = 8
+
+
+def _mesh_key(mesh: Mesh) -> tuple:
+    return (tuple(mesh.shape.items()),              # ordered (axis, size)
+            tuple(d.id for d in mesh.devices.flat))
+
+
 def _cached_search(mesh: Mesh, k: int):
-    return make_sharded_flat_search(mesh, k)
+    key = (_mesh_key(mesh), k)
+    fn = _SEARCH_CACHE.get(key)
+    if fn is None:
+        while len(_SEARCH_CACHE) >= _SEARCH_CACHE_MAX:
+            _SEARCH_CACHE.popitem(last=False)
+        fn = _SEARCH_CACHE[key] = make_sharded_flat_search(mesh, k)
+    else:
+        _SEARCH_CACHE.move_to_end(key)
+    return fn
 
 
 def sharded_flat_search(q: jax.Array, x: jax.Array, k: int, mesh: Mesh
@@ -102,5 +137,134 @@ def sharded_flat_search(q: jax.Array, x: jax.Array, k: int, mesh: Mesh
     return _cached_search(mesh, k)(q, x)
 
 
-__all__ = ["make_sharded_flat_search", "sharded_flat_search", "merge_topk",
-           "shard_count", "SHARD_AXIS"]
+# ---------------------------------------------------------------------------
+# Sharded IVF probe
+# ---------------------------------------------------------------------------
+
+# Same geometry-keyed caching rationale as _SEARCH_CACHE: a fresh jitted
+# step per call would defeat jit's function-identity cache and recompile
+# the shard_map program on every search_sharded invocation.
+_PROBE_CACHE: "collections.OrderedDict[tuple, Callable]" = \
+    collections.OrderedDict()
+
+
+def make_sharded_probe_step(mesh: Mesh, *, axis: str = SHARD_AXIS,
+                            use_kernel: bool = True, interpret: bool = True
+                            ) -> Callable[[Any, Any], Any]:
+    """One IVF probe step over a cap-sharded bucket store.
+
+    Returns step(index, state) -> state, a drop-in replacement for
+    index.ivf.probe_step when the index was placed with
+    dist.sharding.place_index(index, mesh): bucket_vecs [nlist, cap, D],
+    bucket_ids / bucket_sqnorm [nlist, cap] are split on the cap dim over
+    `axis`; centroids, bucket_sizes and the SQ8 dequant tables replicate.
+
+    Per shard the probed bucket's local slice [B, cap/S, D] is scanned
+    with the fused bucket_topk kernel (pure-XLA fallback when
+    use_kernel=False) into per-shard top-k candidates; the only
+    cross-shard traffic is one tiled [B, k] all-gather of (dist, id)
+    pairs + an insert-count psum. Bookkeeping (probe cursor, active
+    masks, ndis from the replicated bucket_sizes) is replicated and
+    identical to the single-device step, so results match
+    index.ivf.search exactly on any shard count.
+    """
+    key = (_mesh_key(mesh), axis, use_kernel, interpret)
+    cached = _PROBE_CACHE.get(key)
+    if cached is not None:
+        _PROBE_CACHE.move_to_end(key)
+        return cached
+    nshards = shard_count(mesh, axis)
+
+    def probe_step(index: Any, s: Any) -> Any:
+        b, k = s.topk_d.shape
+        nprobe = s.probe_order.shape[1]
+        cap = index.bucket_vecs.shape[1]
+        if cap % nshards:
+            raise ValueError(
+                f"bucket cap {cap} not divisible by {nshards} shards; "
+                f"place the index with dist.place_index(index, mesh) "
+                f"(it pads cap to a shard multiple)")
+        pos = jnp.minimum(s.probe_pos, nprobe - 1)
+        bucket = jnp.take_along_axis(s.probe_order, pos[:, None],
+                                     axis=1)[:, 0]
+        sizes = index.bucket_sizes[bucket]       # replicated [B]
+
+        if index.quantized:
+            # asymmetric SQ8 via the kernel's bias term:
+            # ||x_hat - q||^2 = sqn - 2[(q*scale).x8 + q.offset] + ||q||^2
+            q_eff = s.q * index.scale[None, :]
+            bias = s.qsq - 2.0 * (s.q @ index.offset)[:, None]
+        else:
+            q_eff = s.q
+            bias = s.qsq
+        kth = s.topk_d[:, -1:]
+
+        def scan(q_eff, bias, kth, bucket, vecs, sqn, ids):
+            v = vecs[bucket]                     # [B, capS, D] local gather
+            sq = sqn[bucket]
+            id_ = ids[bucket]
+            if use_kernel:
+                run_d = jnp.full((b, k), jnp.inf, jnp.float32)
+                run_i = jnp.full((b, k), -1, jnp.int32)
+                d_loc, i_loc, cnt = ops.bucket_probe(
+                    q_eff, v, sq, id_, bias, kth, run_d, run_i,
+                    interpret=interpret)
+            else:
+                dist = (sq.astype(jnp.float32)
+                        - 2.0 * jnp.einsum("bd,bcd->bc", q_eff,
+                                           v.astype(jnp.float32))
+                        + bias)
+                dist = jnp.where(id_ >= 0, jnp.maximum(dist, 0.0), jnp.inf)
+                cnt = jnp.sum(dist < kth, axis=1).astype(jnp.int32)
+                if dist.shape[1] < k:   # tiny shard slice: pad candidates
+                    pad = k - dist.shape[1]
+                    dist = jnp.pad(dist, ((0, 0), (0, pad)),
+                                   constant_values=jnp.inf)
+                    id_ = jnp.pad(id_, ((0, 0), (0, pad)),
+                                  constant_values=-1)
+                neg, sel = jax.lax.top_k(-dist, k)
+                d_loc = -neg
+                i_loc = jnp.take_along_axis(id_, sel, axis=1)
+            i_loc = jnp.where(jnp.isfinite(d_loc), i_loc, -1)
+            cand_d = jax.lax.all_gather(d_loc, axis, axis=1, tiled=True)
+            cand_i = jax.lax.all_gather(i_loc, axis, axis=1, tiled=True)
+            return cand_d, cand_i, jax.lax.psum(cnt, axis)
+
+        sharded = shard_map(
+            scan, mesh=mesh,
+            in_specs=(P(), P(), P(), P(),
+                      P(None, axis, None), P(None, axis), P(None, axis)),
+            out_specs=(P(), P(), P()),
+            check_rep=False)
+        cand_d, cand_i, cnt = sharded(
+            q_eff, bias, kth, bucket,
+            index.bucket_vecs, index.bucket_sqnorm, index.bucket_ids)
+
+        new_d, new_i = merge_topk(
+            jnp.concatenate([s.topk_d, cand_d], axis=1),
+            jnp.concatenate([s.topk_i, cand_i], axis=1), k)
+        inserts = jnp.minimum(cnt, k)
+        done_probes = s.probe_pos + s.active.astype(jnp.int32)
+        return dataclasses.replace(
+            s,
+            probe_pos=done_probes,
+            topk_d=jnp.where(s.active[:, None], new_d, s.topk_d),
+            topk_i=jnp.where(s.active[:, None], new_i, s.topk_i),
+            active=s.active & (done_probes < nprobe),
+            ndis=s.ndis + jnp.where(s.active, sizes, 0).astype(jnp.int32),
+            ninserts=s.ninserts + jnp.where(s.active, inserts, 0),
+        )
+
+    # Jitted with the index as an ARGUMENT (not a closure constant):
+    # closure-captured consts drop their committed cap-axis sharding, and
+    # the whole bucket store would be re-laid-out replicated per device.
+    step = jax.jit(probe_step)
+    while len(_PROBE_CACHE) >= _SEARCH_CACHE_MAX:
+        _PROBE_CACHE.popitem(last=False)
+    _PROBE_CACHE[key] = step
+    return step
+
+
+__all__ = ["make_sharded_flat_search", "sharded_flat_search",
+           "make_sharded_probe_step", "merge_topk", "shard_count",
+           "SHARD_AXIS"]

@@ -22,6 +22,7 @@ from __future__ import annotations
 from typing import Any, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -206,16 +207,44 @@ def database_sharding(mesh: Mesh, n_rows: int) -> NamedSharding:
     return NamedSharding(mesh, spec_for(mesh, (n_rows, 1), ("tp", None)))
 
 
+# Bucket-store arrays whose cap dim (axis 1) is split across shards.
+# bucket_sizes [nlist] is NOT here: it replicates so the replicated probe
+# bookkeeping (ndis counters) can read true bucket populations directly.
+_CAP_SHARDED_NAMES = {"bucket_vecs": 0.0, "bucket_ids": -1,
+                      "bucket_sqnorm": np.inf}  # name -> cap-pad value
+
+
 def place_index(index: Any, mesh: Mesh) -> Any:
-    """Place an IVF index dataclass onto `mesh`: the per-bucket arrays
-    are sharded over the "model" axis on the bucket (nlist) dim, the
-    small centroid / dequant tables replicate. Degrades to full
-    replication on a 1-device mesh, so the serve path is identical."""
+    """Place an IVF index dataclass onto `mesh` for the sharded probe
+    (dist.collectives.make_sharded_probe_step): every bucket's row block
+    [cap, D] is split on the cap dim over the "model" axis, so each shard
+    scans its slice of EVERY probed bucket and only [B, k] candidate
+    lists cross shards. The small centroid / dequant tables and the
+    bucket_sizes counters replicate.
+
+    cap is padded up to a shard-count multiple first; padded slots keep
+    the index's own padding contract (vecs 0, ids -1, sqnorm +inf) so
+    they can never surface in a top-k. Degrades to full replication on a
+    1-device mesh, so the serve path is identical."""
     import dataclasses
 
+    from repro.dist import collectives
+
+    nshards = collectives.shard_count(mesh)
+
+    def pad_cap(name: str, arr: jax.Array) -> jax.Array:
+        cap = arr.shape[1]
+        pad = -cap % nshards
+        if not pad:
+            return arr
+        widths = ((0, 0), (0, pad)) + ((0, 0),) * (arr.ndim - 2)
+        return jnp.pad(arr, widths,
+                       constant_values=_CAP_SHARDED_NAMES[name])
+
     def place(name: str, arr: jax.Array) -> jax.Array:
-        if name.startswith("bucket_"):
-            logical = ("tp",) + (None,) * (arr.ndim - 1)
+        if name in _CAP_SHARDED_NAMES:
+            arr = pad_cap(name, arr)
+            logical = (None, "tp") + (None,) * (arr.ndim - 2)
         else:
             logical = (None,) * arr.ndim
         sh = NamedSharding(mesh, spec_for(mesh, arr.shape, logical))

@@ -197,16 +197,28 @@ def probe_step(index: IVFIndex, s: IVFSearchState) -> IVFSearchState:
     )
 
 
+def _drive(step, index: IVFIndex, s: IVFSearchState
+           ) -> Tuple[jax.Array, jax.Array, IVFSearchState]:
+    """Run a probe step to natural termination (all probes exhausted)."""
+    s = jax.lax.while_loop(lambda s: s.active.any(),
+                           lambda s: step(index, s), s)
+    return s.topk_d, s.topk_i, s
+
+
 def search(index: IVFIndex, q: jax.Array, *, k: int,
            nprobe: int) -> Tuple[jax.Array, jax.Array, IVFSearchState]:
     """Plain (no early termination) IVF search: scan all nprobe buckets."""
-    s = init_state(index, q, k=k, nprobe=nprobe)
+    return _drive(probe_step, index, init_state(index, q, k=k, nprobe=nprobe))
 
-    def cond(s):
-        return s.active.any()
 
-    def body(s):
-        return probe_step(index, s)
+def search_sharded(index: IVFIndex, q: jax.Array, *, k: int, nprobe: int,
+                   mesh, use_kernel: bool = True, interpret: bool = True
+                   ) -> Tuple[jax.Array, jax.Array, IVFSearchState]:
+    """Plain IVF search through the shard_map probe step: `index` must be
+    placed with dist.place_index(index, mesh) (cap dim split over the
+    "model" axis). Numerically matches `search` on any shard count."""
+    from repro.dist import collectives  # local import: dist uses kernels
 
-    s = jax.lax.while_loop(cond, body, s)
-    return s.topk_d, s.topk_i, s
+    step = collectives.make_sharded_probe_step(
+        mesh, use_kernel=use_kernel, interpret=interpret)
+    return _drive(step, index, init_state(index, q, k=k, nprobe=nprobe))

@@ -9,8 +9,18 @@ matmul.
 Kernel layout: grid over query tiles; per tile the kernel holds
 q [bq, D], bucket vecs [bq, C, D], squared norms, ids, and the running
 top-k in VMEM (bq=8, C=512, D=128 -> ~2.3 MB), computes
-dist = ||x||^2 - 2 q.x + ||q||^2 via an elementwise multiply-reduce on
+dist = ||x||^2 - 2 q.x + bias via an elementwise multiply-reduce on
 the VPU, then runs the same K-step masked-min merge as l2_topk.
+
+The per-query additive `bias` generalizes the ||q||^2 term so the SAME
+kernel serves both storage formats (ops.py picks the inputs):
+  f32:  pass q,        bias = ||q||^2
+  SQ8:  pass q*scale,  bias = ||q||^2 - 2 q.offset   (asymmetric dequant:
+        ||x_hat - q||^2 = sqn - 2[(q*scale).x8 + q.offset] + ||q||^2)
+
+The kernel also emits the per-query count of bucket distances strictly
+below the incoming k-th (`kth`) — the `ninserts` counter DARTH's feature
+vector needs — so the sharded probe never computes distances twice.
 """
 from __future__ import annotations
 
@@ -23,19 +33,23 @@ from jax.experimental import pallas as pl
 from repro.kernels._compat import COMPILER_PARAMS as _COMPILER_PARAMS
 
 
-def _bucket_topk_kernel(q_ref, vecs_ref, sqn_ref, ids_ref, ind_ref, ini_ref,
-                        outd_ref, outi_ref, *, k: int):
+def _bucket_topk_kernel(q_ref, vecs_ref, sqn_ref, ids_ref, bias_ref, kth_ref,
+                        ind_ref, ini_ref, outd_ref, outi_ref, outc_ref,
+                        *, k: int):
     q = q_ref[...].astype(jnp.float32)            # [bq, D]
     vecs = vecs_ref[...].astype(jnp.float32)      # [bq, C, D]
     sqn = sqn_ref[...].astype(jnp.float32)        # [bq, C]
     ids = ids_ref[...]                            # [bq, C]
+    bias = bias_ref[...].astype(jnp.float32)      # [bq, 1]
+    kth = kth_ref[...].astype(jnp.float32)        # [bq, 1]
     run_d = ind_ref[...].astype(jnp.float32)      # [bq, K]
     run_i = ini_ref[...]                          # [bq, K]
 
-    qsq = jnp.sum(q * q, axis=1, keepdims=True)   # [bq, 1]
     dots = jnp.sum(vecs * q[:, None, :], axis=2)  # [bq, C] (VPU reduce)
-    dist = sqn - 2.0 * dots + qsq
+    dist = sqn - 2.0 * dots + bias
     dist = jnp.where(ids >= 0, jnp.maximum(dist, 0.0), jnp.inf)
+    outc_ref[...] = jnp.sum(dist < kth, axis=1,
+                            keepdims=True).astype(jnp.int32)
 
     cand_d = jnp.concatenate([run_d, dist], axis=1)      # [bq, K+C]
     cand_i = jnp.concatenate([run_i, ids], axis=1)
@@ -64,17 +78,19 @@ def _bucket_topk_kernel(q_ref, vecs_ref, sqn_ref, ids_ref, ind_ref, ini_ref,
 
 @functools.partial(jax.jit, static_argnames=("bq", "interpret"))
 def bucket_topk_padded(q: jax.Array, vecs: jax.Array, sqn: jax.Array,
-                       ids: jax.Array, run_d: jax.Array, run_i: jax.Array,
+                       ids: jax.Array, bias: jax.Array, kth: jax.Array,
+                       run_d: jax.Array, run_i: jax.Array,
                        *, bq: int = 8, interpret: bool = False
-                       ) -> Tuple[jax.Array, jax.Array]:
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Pre-padded fused probe. q: [B, D] (B % bq == 0), vecs: [B, C, D],
-    sqn/ids: [B, C], run_d/run_i: [B, K]. Returns merged (dist, ids)."""
+    sqn/ids: [B, C], bias/kth: [B, 1], run_d/run_i: [B, K]. Returns
+    (merged dist [B, K], merged ids [B, K], inserts i32[B, 1])."""
     b, d = q.shape
     c = vecs.shape[1]
     k = run_d.shape[1]
     assert b % bq == 0, (b, bq)
     kernel = functools.partial(_bucket_topk_kernel, k=k)
-    outd, outi = pl.pallas_call(
+    outd, outi, outc = pl.pallas_call(
         kernel,
         grid=(b // bq,),
         in_specs=[
@@ -82,19 +98,23 @@ def bucket_topk_padded(q: jax.Array, vecs: jax.Array, sqn: jax.Array,
             pl.BlockSpec((bq, c, d), lambda i: (i, 0, 0)),
             pl.BlockSpec((bq, c), lambda i: (i, 0)),
             pl.BlockSpec((bq, c), lambda i: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i: (i, 0)),
             pl.BlockSpec((bq, k), lambda i: (i, 0)),
             pl.BlockSpec((bq, k), lambda i: (i, 0)),
         ],
         out_specs=[
             pl.BlockSpec((bq, k), lambda i: (i, 0)),
             pl.BlockSpec((bq, k), lambda i: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i: (i, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((b, k), jnp.float32),
             jax.ShapeDtypeStruct((b, k), jnp.int32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
         ],
         compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel",)),
         interpret=interpret,
-    )(q, vecs, sqn, ids, run_d, run_i)
-    return outd, outi
+    )(q, vecs, sqn, ids, bias, kth, run_d, run_i)
+    return outd, outi, outc

@@ -75,6 +75,24 @@ def bucket_topk(q: jax.Array, vecs: jax.Array, sqn: jax.Array,
                 ids: jax.Array, run_d: jax.Array, run_i: jax.Array, *,
                 bq: int = 8, interpret: bool = True):
     """Fused IVF probe step (per-query bucket + running top-k merge)."""
+    bias = jnp.sum(q.astype(jnp.float32) ** 2, axis=1, keepdims=True)
+    d, i, _ = bucket_probe(q, vecs, sqn, ids, bias, run_d[:, -1:],
+                           run_d, run_i, bq=bq, interpret=interpret)
+    return d, i
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "interpret"))
+def bucket_probe(q: jax.Array, vecs: jax.Array, sqn: jax.Array,
+                 ids: jax.Array, bias: jax.Array, kth: jax.Array,
+                 run_d: jax.Array, run_i: jax.Array, *,
+                 bq: int = 8, interpret: bool = True
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused probe with explicit per-query bias + insert counting.
+
+    dist = sqn - 2 q.vecs + bias  (bias = ||q||^2 for f32 storage; the SQ8
+    asymmetric form passes q*scale and bias = ||q||^2 - 2 q.offset).
+    Returns (merged dist [B, K], merged ids [B, K], inserts i32[B]) where
+    inserts counts bucket distances strictly below `kth` [B, 1]."""
     b = q.shape[0]
     bq_eff = min(bq, _round_up(b, 4))
     bp = _round_up(b, bq_eff)
@@ -84,8 +102,10 @@ def bucket_topk(q: jax.Array, vecs: jax.Array, sqn: jax.Array,
         vecs = jnp.pad(vecs, ((0, pad), (0, 0), (0, 0)))
         sqn = jnp.pad(sqn, ((0, pad), (0, 0)), constant_values=jnp.inf)
         ids = jnp.pad(ids, ((0, pad), (0, 0)), constant_values=-1)
+        bias = jnp.pad(bias, ((0, pad), (0, 0)))
+        kth = jnp.pad(kth, ((0, pad), (0, 0)))
         run_d = jnp.pad(run_d, ((0, pad), (0, 0)), constant_values=jnp.inf)
         run_i = jnp.pad(run_i, ((0, pad), (0, 0)), constant_values=-1)
-    d, i = bucket_topk_padded(q, vecs, sqn, ids, run_d, run_i,
-                              bq=bq_eff, interpret=interpret)
-    return d[:b], i[:b]
+    d, i, c = bucket_topk_padded(q, vecs, sqn, ids, bias, kth, run_d, run_i,
+                                 bq=bq_eff, interpret=interpret)
+    return d[:b], i[:b], c[:b, 0]

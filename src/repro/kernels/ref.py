@@ -48,12 +48,23 @@ def bucket_topk_ref(q, vecs, sqn, ids, run_d, run_i):
     the running top-k. q: [B,D]; vecs: [B,C,D]; sqn/ids: [B,C];
     run_d/run_i: [B,K] ascending."""
     qf = q.astype(jnp.float32)
+    bias = jnp.sum(qf**2, axis=1, keepdims=True)
+    d, i, _ = bucket_probe_ref(q, vecs, sqn, ids, bias, run_d[:, -1:],
+                               run_d, run_i)
+    return d, i
+
+
+def bucket_probe_ref(q, vecs, sqn, ids, bias, kth, run_d, run_i):
+    """Oracle for the biased fused probe (kernels/bucket_topk.py): returns
+    (merged dist, merged ids, count of bucket dists strictly below kth)."""
+    qf = q.astype(jnp.float32)
     dist = (sqn.astype(jnp.float32)
             - 2.0 * jnp.einsum("bd,bcd->bc", qf, vecs.astype(jnp.float32))
-            + jnp.sum(qf**2, axis=1, keepdims=True))
+            + bias.astype(jnp.float32))
     dist = jnp.where(ids >= 0, jnp.maximum(dist, 0.0), jnp.inf)
+    cnt = jnp.sum(dist < kth.astype(jnp.float32), axis=1).astype(jnp.int32)
     cand_d = jnp.concatenate([run_d, dist], axis=1)
     cand_i = jnp.concatenate([run_i, ids], axis=1)
     k = run_d.shape[1]
     neg, sel = jax.lax.top_k(-cand_d, k)
-    return -neg, jnp.take_along_axis(cand_i, sel, axis=1)
+    return -neg, jnp.take_along_axis(cand_i, sel, axis=1), cnt

@@ -6,9 +6,12 @@ Usage:
   PYTHONPATH=src python -m repro.launch.serve --n 30000 --queries 512 \
       --targets 0.8,0.9,0.95
 
-Sharded serving (--shards N row-shards the index over a ("model",) mesh;
-N=0 uses every visible device — on a multi-chip host, or under
-XLA_FLAGS=--xla_force_host_platform_device_count=8 for a smoke run):
+Sharded serving (--shards N splits every bucket's cap dim over a
+("model",) mesh and probes through the shard_map fast path — per-shard
+fused bucket_topk + one [B, k] all-gather merge; DARTH fit ground truth
+is sharded the same way. N=0 uses every visible device — on a multi-chip
+host, or under XLA_FLAGS=--xla_force_host_platform_device_count=8 for a
+smoke run):
   PYTHONPATH=src python -m repro.launch.serve --shards 0
 """
 from __future__ import annotations
@@ -38,7 +41,8 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=64)
     ap.add_argument("--targets", type=str, default="0.8,0.9,0.95")
     ap.add_argument("--shards", type=int, default=None,
-                    help="row-shard the index over a ('model',) mesh; "
+                    help="split every bucket's cap dim over a ('model',) "
+                         "mesh and probe via the shard_map fast path; "
                          "0 = all visible devices (default: unsharded)")
     args = ap.parse_args()
 
@@ -55,13 +59,18 @@ def main() -> None:
     if args.shards is not None:
         mesh = mesh_lib.make_search_mesh(args.shards)
         index = dist.place_index(index, mesh)
-        print(f"[serve] index placed on {mesh_lib.describe(mesh)}")
+        print(f"[serve] index placed on {mesh_lib.describe(mesh)} "
+              f"(cap {index.cap} split over 'model')")
+        make_engine = lambda **kw: engines.sharded_ivf_engine(  # noqa: E731
+            index, mesh, **kw)
+    else:
+        make_engine = lambda **kw: engines.ivf_engine(index, **kw)  # noqa: E731
 
     darth = api.Darth(
-        make_engine=lambda **kw: engines.ivf_engine(index, **kw),
-        engine=engines.ivf_engine(index, k=args.k, nprobe=args.nlist))
+        make_engine=make_engine,
+        engine=make_engine(k=args.k, nprobe=args.nlist))
     t0 = time.time()
-    darth.fit(jnp.asarray(ds.learn), jnp.asarray(ds.base))
+    darth.fit(jnp.asarray(ds.learn), jnp.asarray(ds.base), mesh=mesh)
     print(f"[serve] DARTH fit ({time.time()-t0:.1f}s) "
           f"mse={darth.trained.metrics['mse']:.5f}")
 

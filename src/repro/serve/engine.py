@@ -10,6 +10,12 @@ slot-step savings vs a no-compaction baseline.
 
 Every query carries its own declared recall target (mixed-target batches
 are native — per-slot R_t, per-slot adaptive intervals).
+
+The server is engine-agnostic through the Engine protocol: handing it
+engines.sharded_ivf_engine (cap-sharded bucket store, shard_map probe)
+instead of engines.ivf_engine changes nothing here — slot compaction,
+splicing and the chunked driver all operate on the replicated search
+state, while the probe's bucket traffic stays on-shard.
 """
 from __future__ import annotations
 

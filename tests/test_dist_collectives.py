@@ -44,6 +44,43 @@ def test_sharded_search_fewer_rows_than_k():
     assert not np.isfinite(np.asarray(d)[:, 3:]).any()
 
 
+def test_cached_search_keys_on_geometry_not_mesh_object():
+    """Regression: the sharded-search cache used to key its lru_cache on
+    the Mesh object, holding meshes (and through the jit cache, their
+    device buffers) alive across tests. Keys must be (axis geometry, k)
+    primitives, and equivalent meshes must share one compiled entry."""
+    from jax.sharding import Mesh
+
+    collectives._SEARCH_CACHE.clear()
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(2, 4)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(16, 4)), jnp.float32)
+
+    mesh_a = Mesh(np.asarray(jax.devices()[:1]), ("model",))
+    mesh_b = Mesh(np.asarray(jax.devices()[:1]), ("model",))
+    d_a, _ = collectives.sharded_flat_search(q, x, 3, mesh_a)
+    d_b, _ = collectives.sharded_flat_search(q, x, 3, mesh_b)
+    np.testing.assert_array_equal(np.asarray(d_a), np.asarray(d_b))
+    assert len(collectives._SEARCH_CACHE) == 1
+
+    def flatten(obj):
+        if isinstance(obj, tuple):
+            for e in obj:
+                yield from flatten(e)
+        else:
+            yield obj
+
+    for key in collectives._SEARCH_CACHE:
+        for leaf in flatten(key):
+            assert isinstance(leaf, (str, int)), key
+            assert not isinstance(leaf, Mesh)
+
+    # a different k is a different entry, same bounded cache
+    collectives.sharded_flat_search(q, x, 2, mesh_a)
+    assert len(collectives._SEARCH_CACHE) == 2
+    collectives._SEARCH_CACHE.clear()
+
+
 def test_sharded_search_xla_fallback_matches():
     mesh = _mesh1()
     fn = collectives.make_sharded_flat_search(mesh, k=4, use_kernel=False)

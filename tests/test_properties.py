@@ -1,0 +1,92 @@
+"""Property-based invariants (hypothesis; deterministic shim in
+tests/_vendor when the real package is absent):
+
+  * collectives.merge_topk — idempotence, permutation-invariance of the
+    candidate columns, and the +inf -> id -1 masking contract that keeps
+    shard padding out of results.
+  * ivf.build SQ8 storage — per-dim affine round-trip error is bounded
+    by half a quantization step, and bucket_sqnorm matches the norms of
+    the DEQUANTIZED vectors (what quantized search actually measures).
+"""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.dist import collectives
+from repro.index import ivf
+
+
+def _candidates(rng, b, m, inf_frac):
+    d = rng.uniform(0.0, 100.0, (b, m)).astype(np.float32)
+    # distinct distances -> unique top-k selection, no tie ambiguity
+    d = d + np.arange(b * m, dtype=np.float32).reshape(b, m) * 1e-3
+    mask = rng.random((b, m)) < inf_frac
+    d = np.where(mask, np.inf, d)
+    ids = np.where(mask, -1, rng.integers(0, 10_000, (b, m))).astype(np.int32)
+    return jnp.asarray(d), jnp.asarray(ids)
+
+
+@settings(deadline=None, max_examples=20)
+@given(b=st.integers(1, 8), m=st.integers(1, 40), k=st.integers(1, 12),
+       inf_frac=st.floats(0.0, 1.0))
+def test_merge_topk_idempotent_and_masked(b, m, k, inf_frac):
+    k = min(k, m)   # merge_topk contract: at least k candidate columns
+    rng = np.random.default_rng(b * 1000 + m * 10 + k)
+    cand_d, cand_i = _candidates(rng, b, m, inf_frac)
+    d1, i1 = collectives.merge_topk(cand_d, cand_i, k)
+    assert d1.shape == (b, k) and i1.shape == (b, k)
+    d_np = np.asarray(d1)
+    # ascending (inf -> finite sentinel: inf-inf diffs are nan), and +inf
+    # slots report id -1 (the shard-padding contract)
+    assert (np.diff(np.nan_to_num(d_np, posinf=3e38), axis=1) >= 0).all()
+    assert (np.asarray(i1)[~np.isfinite(d_np)] == -1).all()
+    # idempotence: merging the merged list again is a fixed point
+    d2, i2 = collectives.merge_topk(d1, i1, k)
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+@settings(deadline=None, max_examples=20)
+@given(b=st.integers(1, 6), m=st.integers(2, 40), k=st.integers(1, 10),
+       seed=st.integers(0, 10_000))
+def test_merge_topk_permutation_invariant(b, m, k, seed):
+    k = min(k, m)
+    rng = np.random.default_rng(seed)
+    cand_d, cand_i = _candidates(rng, b, m, 0.2)
+    perm = rng.permutation(m)
+    d1, i1 = collectives.merge_topk(cand_d, cand_i, k)
+    d2, i2 = collectives.merge_topk(cand_d[:, perm], cand_i[:, perm], k)
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+@settings(deadline=None, max_examples=10)
+@given(n=st.integers(64, 400), d=st.integers(2, 24),
+       scale_pow=st.floats(-2.0, 2.0), seed=st.integers(0, 1000))
+def test_sq8_round_trip_error_bound(n, d, scale_pow, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=(n, d)) * 10.0 ** scale_pow).astype(np.float32)
+    index = ivf.build(x, nlist=4, iters=3, seed=0, quantize=True)
+    assert index.quantized
+
+    ids = np.asarray(index.bucket_ids)
+    vecs = np.asarray(index.bucket_vecs).astype(np.float32)
+    scale = np.asarray(index.scale)
+    offset = np.asarray(index.offset)
+    x_hat = vecs * scale[None, None, :] + offset[None, None, :]
+
+    valid = ids >= 0
+    err = np.abs(x_hat[valid] - x[ids[valid]])
+    # affine SQ8: |x - x_hat| <= scale/2 per dim (0.51 absorbs the f32
+    # rounding of the round-trip itself, which is << scale); in-range
+    # data never clips because scale >= (hi - lo) / 254 maps to ±127.
+    bound = 0.51 * scale[None, :]
+    assert (err <= bound).all(), float((err - bound).max())
+
+    # bucket_sqnorm is computed on the DEQUANTIZED vectors
+    sqn = np.asarray(index.bucket_sqnorm)
+    np.testing.assert_allclose(sqn[valid], (x_hat[valid] ** 2).sum(axis=1),
+                               rtol=1e-4, atol=1e-4)
+    # padding contract survives quantized builds
+    assert np.isposinf(sqn[~valid]).all()
+    assert (np.asarray(index.bucket_vecs)[~valid] == 0).all()

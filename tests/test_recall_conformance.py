@@ -1,0 +1,76 @@
+"""Declarative-recall conformance: the paper's core contract, end to end.
+
+For both engine families (IVF probe loop, HNSW beam loop): train the GBDT
+recall predictor on synthetic data, run darth_search at declared targets
+{0.80, 0.90, 0.95}, and assert that (a) mean achieved recall is within
+0.03 of every declared target and (b) early termination measurably saves
+distance calculations vs plain_search (the speedup that makes the
+contract useful, paper §4.2)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import api, engines
+from repro.index import flat, hnsw, ivf
+
+pytestmark = pytest.mark.slow
+
+TARGETS = (0.80, 0.90, 0.95)
+K = 10
+TOLERANCE = 0.03
+
+
+@pytest.fixture(scope="module")
+def conformance_ds():
+    from repro.data import vectors
+    return vectors.make_dataset(n=6000, d=24, num_learn=512,
+                                num_queries=128, clusters=32,
+                                cluster_std=1.2, seed=0)
+
+
+def _fit_darth(ds, make_engine, engine):
+    d = api.Darth(make_engine=make_engine, engine=engine)
+    d.fit(jnp.asarray(ds.learn), jnp.asarray(ds.base), batch=256)
+    return d
+
+
+def _assert_conformance(d, ds, name):
+    q = jnp.asarray(ds.queries)
+    _, gt_i = flat.search(q, jnp.asarray(ds.base), K)
+    _, _, plain = d.search_plain(q)
+    plain_ndis = float(np.asarray(plain.ndis).mean())
+    plain_rec = float(np.asarray(flat.recall_at_k(
+        d.engine.topk_i(plain), gt_i)).mean())
+    # the declared targets must be attainable by the underlying engine
+    assert plain_rec >= max(TARGETS), (name, plain_rec)
+
+    speedups = []
+    for rt in TARGETS:
+        _, ii, st = d.search(q, rt)
+        rec = float(np.asarray(flat.recall_at_k(ii, gt_i)).mean())
+        nd = float(np.asarray(st.inner.ndis).mean())
+        assert rec >= rt - TOLERANCE, (name, rt, rec)
+        assert nd < plain_ndis, (name, rt, nd, plain_ndis)
+        speedups.append(plain_ndis / max(nd, 1.0))
+    # early termination must be a real speedup somewhere, not epsilon
+    assert max(speedups) > 1.5, (name, speedups)
+
+
+def test_ivf_meets_declared_targets(conformance_ds):
+    ds = conformance_ds
+    index = ivf.build(ds.base, nlist=32, seed=0)
+    d = _fit_darth(
+        ds, lambda **kw: engines.ivf_engine(index, **kw),
+        engines.ivf_engine(index, k=K, nprobe=32))
+    _assert_conformance(d, ds, "ivf")
+
+
+def test_hnsw_meets_declared_targets(conformance_ds):
+    ds = conformance_ds
+    # two insertion passes push the graph's natural recall to ~0.999 at
+    # ef=192, leaving room above the 0.95 target AND for early exit
+    index = hnsw.build(ds.base, m=16, passes=2, ef_construction=96)
+    d = _fit_darth(
+        ds, lambda **kw: engines.hnsw_engine(index, **kw),
+        engines.hnsw_engine(index, k=K, ef=192, max_steps=400))
+    _assert_conformance(d, ds, "hnsw")
