@@ -15,6 +15,7 @@ def main() -> None:
     benches = [
         ("dist_sharded_search", dist_search.dist_sharded_search),
         ("dist_sharded_ivf_probe", dist_search.dist_sharded_ivf_probe),
+        ("dist_sharded_hnsw_beam", dist_search.dist_sharded_hnsw_beam),
         ("table5_predictor_quality", pt.table5_predictor_quality),
         ("table4_training_cost", pt.table4_training_cost),
         ("fig5_interval_ablation", pt.fig5_interval_ablation),

@@ -83,9 +83,9 @@ def fit_laet(log: TrainLog, *, n0: int = 2,
 def laet_search(laet: LAET, engine: engines_lib.Engine, q: jax.Array,
                 multiplier: float):
     """Run LAET: n0 fixed steps, one prediction, fixed budget after."""
-    inner = engine.init(q)
+    inner = engine.init(engine.index, q)
     for _ in range(laet.n0):
-        inner = engine.step(inner)
+        inner = engine.step(engine.index, inner)
     feats = features_lib.extract(
         engine.nstep(inner), inner.ndis, inner.ninserts, inner.first_nn,
         engine.topk_d(inner))
@@ -102,7 +102,7 @@ def _run_with_budget(engine, inner, budget):
 
     def body(carry):
         inner, t = carry
-        inner = engine.step(inner)
+        inner = engine.step(engine.index, inner)
         over = inner.ndis.astype(jnp.float32) >= budget
         inner = engines_lib.set_active(inner, inner.active & ~over)
         return inner, t + 1

@@ -50,7 +50,7 @@ def init_darth_state(engine: engines_lib.Engine, q: jax.Array,
                      params: IntervalParams) -> DarthState:
     b = q.shape[0]
     return DarthState(
-        inner=engine.init(q),
+        inner=engine.init(engine.index, q),
         idis=jnp.zeros((b,), jnp.int32),
         pi=jnp.broadcast_to(jnp.asarray(params.ipi, jnp.float32), (b,)),
         r_pred=jnp.full((b,), -1.0, jnp.float32),
@@ -66,7 +66,7 @@ def make_darth_body(engine: engines_lib.Engine, predictor: PredictorFn,
     engine drives this directly; darth_search wraps it in a while_loop)."""
     def body(st: DarthState) -> DarthState:
         prev_ndis = st.inner.ndis
-        inner = engine.step(st.inner)
+        inner = engine.step(engine.index, st.inner)
         idis = st.idis + (inner.ndis - prev_ndis)
         due = inner.active & (idis.astype(jnp.float32) >= st.pi)
 
@@ -113,7 +113,7 @@ def darth_search(engine: engines_lib.Engine, q: jax.Array,
 
 def plain_search(engine: engines_lib.Engine, q: jax.Array) -> Any:
     """Run the engine to natural termination (no early termination)."""
-    inner0 = engine.init(q)
+    inner0 = engine.init(engine.index, q)
 
     def cond(carry):
         inner, t = carry
@@ -121,7 +121,7 @@ def plain_search(engine: engines_lib.Engine, q: jax.Array) -> Any:
 
     def body(carry):
         inner, t = carry
-        return engine.step(inner), t + 1
+        return engine.step(engine.index, inner), t + 1
 
     inner, _ = jax.lax.while_loop(cond, body,
                                   (inner0, jnp.zeros((), jnp.int32)))
@@ -134,7 +134,7 @@ def budget_search(engine: engines_lib.Engine, q: jax.Array,
     competitor §3.2.2 and LAET's termination primitive)."""
     b = q.shape[0]
     budget = jnp.broadcast_to(jnp.asarray(budget, jnp.float32), (b,))
-    inner0 = engine.init(q)
+    inner0 = engine.init(engine.index, q)
 
     def cond(carry):
         inner, t = carry
@@ -142,7 +142,7 @@ def budget_search(engine: engines_lib.Engine, q: jax.Array,
 
     def body(carry):
         inner, t = carry
-        inner = engine.step(inner)
+        inner = engine.step(engine.index, inner)
         over = inner.ndis.astype(jnp.float32) >= budget
         inner = engines_lib.set_active(inner, inner.active & ~over)
         return inner, t + 1

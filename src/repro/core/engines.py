@@ -21,9 +21,18 @@ class Engine(NamedTuple):
 
     All state objects must carry: .active bool[B], .ndis i32[B],
     .ninserts i32[B], .first_nn f32[B].
+
+    init/step take the index EXPLICITLY (drivers call
+    `engine.init(engine.index, q)` / `engine.step(engine.index, s)`),
+    never through the closure: a sharded index closure-captured inside
+    an outer jit (e.g. the slot-pool server's chunk functions) would be
+    baked in as a fully REPLICATED constant, silently undoing
+    dist.place_index. Passing it as an argument keeps its committed
+    sharding on every jit path.
     """
-    init: Callable[[jax.Array], Any]
-    step: Callable[[Any], Any]
+    index: Any
+    init: Callable[[Any, jax.Array], Any]
+    step: Callable[[Any, Any], Any]
     topk_d: Callable[[Any], jax.Array]   # f32[B, K] squared, ascending
     topk_i: Callable[[Any], jax.Array]   # i32[B, K]
     nstep: Callable[[Any], jax.Array]    # i32[B]
@@ -38,8 +47,9 @@ def set_active(state: Any, mask: jax.Array) -> Any:
 
 def ivf_engine(index: ivf_lib.IVFIndex, *, k: int, nprobe: int) -> Engine:
     return Engine(
-        init=lambda q: ivf_lib.init_state(index, q, k=k, nprobe=nprobe),
-        step=lambda s: ivf_lib.probe_step(index, s),
+        index=index,
+        init=lambda idx, q: ivf_lib.init_state(idx, q, k=k, nprobe=nprobe),
+        step=ivf_lib.probe_step,
         topk_d=lambda s: s.topk_d,
         topk_i=lambda s: s.topk_i,
         nstep=lambda s: s.probe_pos,
@@ -64,13 +74,15 @@ def sharded_ivf_engine(index: ivf_lib.IVFIndex, mesh, *, k: int, nprobe: int,
     from repro.dist import collectives as dist_collectives
 
     # make_sharded_probe_step returns a jitted step(index, state): the
-    # index goes through the jit boundary as an argument so its committed
-    # cap-axis sharding is respected (a closure const would replicate).
+    # index goes through every jit boundary as an argument so its
+    # committed cap-axis sharding is respected (a closure const would
+    # replicate — see the Engine docstring).
     step = dist_collectives.make_sharded_probe_step(
         mesh, use_kernel=use_kernel, interpret=interpret)
     return Engine(
-        init=lambda q: ivf_lib.init_state(index, q, k=k, nprobe=nprobe),
-        step=lambda s: step(index, s),
+        index=index,
+        init=lambda idx, q: ivf_lib.init_state(idx, q, k=k, nprobe=nprobe),
+        step=step,
         topk_d=lambda s: s.topk_d,
         topk_i=lambda s: s.topk_i,
         nstep=lambda s: s.probe_pos,
@@ -84,12 +96,46 @@ def hnsw_engine(index: hnsw_lib.HNSWIndex, *, k: int, ef: int,
                 max_steps: int = 0) -> Engine:
     limit = max_steps or 8 * ef
     return Engine(
-        init=lambda q: hnsw_lib.init_state(index, q, ef=ef),
-        step=lambda s: hnsw_lib.beam_step(index, s, k=k),
+        index=index,
+        init=lambda idx, q: hnsw_lib.init_state(idx, q, ef=ef),
+        step=lambda idx, s: hnsw_lib.beam_step(idx, s, k=k),
         topk_d=lambda s: s.cand_d[:, :k],
         topk_i=lambda s: s.cand_i[:, :k],
         nstep=lambda s: s.nstep,
         max_steps=limit,
         name="hnsw",
+        k=k,
+    )
+
+
+def sharded_hnsw_engine(index: hnsw_lib.HNSWIndex, mesh, *, k: int, ef: int,
+                        max_steps: int = 0) -> Engine:
+    """ShardedHNSWEngine: the beam loop over a row-sharded graph
+    (dist.place_index + dist.collectives.make_sharded_beam_step).
+
+    Same Engine protocol and the same HNSWSearchState as hnsw_engine, so
+    darth_search / budget_search / the slot-pool server drive it
+    unchanged; only the beam step's data movement differs (per-shard
+    neighbor resolution + one [B, M] psum/all-gather frontier merge
+    instead of a GSPMD gather of neighbor lists and vectors). `index`
+    must have been placed with dist.place_index(index, mesh) so its node
+    count divides the shard count."""
+    from repro.dist import collectives as dist_collectives
+
+    # make_sharded_beam_step returns a jitted step(index, state, k=..):
+    # the index goes through every jit boundary as an argument so its
+    # committed row sharding is respected (a closure const would
+    # replicate — see the Engine docstring).
+    step = dist_collectives.make_sharded_beam_step(mesh)
+    limit = max_steps or 8 * ef
+    return Engine(
+        index=index,
+        init=lambda idx, q: hnsw_lib.init_state(idx, q, ef=ef),
+        step=lambda idx, s: step(idx, s, k=k),
+        topk_d=lambda s: s.cand_d[:, :k],
+        topk_i=lambda s: s.cand_i[:, :k],
+        nstep=lambda s: s.nstep,
+        max_steps=limit,
+        name="hnsw-sharded",
         k=k,
     )

@@ -73,14 +73,14 @@ def generate_observations(engine: engines_lib.Engine, q: jax.Array,
 def _scan_log(engine: engines_lib.Engine, q: jax.Array, gt_i: jax.Array):
     def step_fn(inner, _):
         was_active = inner.active
-        inner = engine.step(inner)
+        inner = engine.step(engine.index, inner)
         feats = features_lib.extract(
             engine.nstep(inner), inner.ndis, inner.ninserts, inner.first_nn,
             engine.topk_d(inner))
         rec = flat.recall_at_k(engine.topk_i(inner), gt_i)
         return inner, (feats, rec, inner.ndis, was_active)
 
-    inner0 = engine.init(q)
+    inner0 = engine.init(engine.index, q)
     _, (f, r, nd, v) = jax.lax.scan(step_fn, inner0, None,
                                     length=engine.max_steps)
     return (np.asarray(f), np.asarray(r), np.asarray(nd), np.asarray(v))

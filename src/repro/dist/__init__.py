@@ -7,11 +7,12 @@ same code path runs on the single-device host mesh and the production
 pod mesh (see launch/mesh.py).
 """
 from repro.dist import collectives, sharding
-from repro.dist.collectives import (make_sharded_flat_search,
+from repro.dist.collectives import (make_sharded_beam_step,
+                                    make_sharded_flat_search,
                                     make_sharded_probe_step)
 from repro.dist.sharding import (opt_shardings, param_shardings, place_index,
                                  replicated)
 
 __all__ = ["collectives", "sharding", "make_sharded_flat_search",
-           "make_sharded_probe_step", "param_shardings", "opt_shardings",
-           "place_index", "replicated"]
+           "make_sharded_probe_step", "make_sharded_beam_step",
+           "param_shardings", "opt_shardings", "place_index", "replicated"]

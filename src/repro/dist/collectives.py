@@ -3,7 +3,7 @@
 rows, and the per-shard candidates are merged with one small all-gather —
 collective volume O(B * k * shards * 8 bytes), independent of N.
 
-Two sharded entry points:
+Three sharded entry points:
   * make_sharded_flat_search — exact flat k-NN over a row-sharded [N, D]
     database (ground truth / brute-force baseline).
   * make_sharded_probe_step — one IVF probe over a CAP-sharded bucket
@@ -12,11 +12,21 @@ Two sharded entry points:
     with the fused bucket_topk kernel, candidates merge via one tiled
     [B, k] all-gather + merge_topk, insert counters psum. Per-probe
     traffic drops from the GSPMD gather's O(B*cap*D) to O(B*k*shards).
+  * make_sharded_beam_step — one HNSW beam expansion over a ROW-sharded
+    graph (dist.sharding.place_index splits vectors/sqnorm/neighbors on
+    the node dim over "model"; the per-query visited bitmap [B, N]
+    splits on its node dim too): the shard owning each query's selected
+    candidate resolves its adjacency row (one [B, M] psum), every shard
+    scans the neighbors IT owns against its local vectors/visited slice,
+    and the per-shard [B, M] distance frontiers merge via one tiled
+    all-gather + positional min + top-k. Per-step traffic drops from the
+    GSPMD gather's O(B*M*D) to O(B*M*shards), independent of N and D.
 
-Padding contract: the sharded dim (N rows / bucket cap) is padded up to a
-multiple of the shard count; padded slots carry sqnorm = +inf so they can
-never enter a top-k, and any slot whose distance is +inf reports id -1
-(same convention as index/flat.py and index/ivf.py).
+Padding contract: the sharded dim (N rows / bucket cap / graph nodes) is
+padded up to a multiple of the shard count; padded slots carry
+sqnorm = +inf so they can never enter a top-k, padded ids (bucket_ids /
+neighbors rows) are -1, and any slot whose distance is +inf reports
+id -1 (same convention as index/flat.py, index/ivf.py, index/hnsw.py).
 """
 from __future__ import annotations
 
@@ -119,16 +129,22 @@ def _mesh_key(mesh: Mesh) -> tuple:
             tuple(d.id for d in mesh.devices.flat))
 
 
-def _cached_search(mesh: Mesh, k: int):
-    key = (_mesh_key(mesh), k)
-    fn = _SEARCH_CACHE.get(key)
+def _memoized(cache: "collections.OrderedDict[tuple, Callable]", key: tuple,
+              build: Callable[[], Callable]) -> Callable:
+    """Shared LRU memo for the jitted sharded-step builders."""
+    fn = cache.get(key)
     if fn is None:
-        while len(_SEARCH_CACHE) >= _SEARCH_CACHE_MAX:
-            _SEARCH_CACHE.popitem(last=False)
-        fn = _SEARCH_CACHE[key] = make_sharded_flat_search(mesh, k)
+        while len(cache) >= _SEARCH_CACHE_MAX:
+            cache.popitem(last=False)
+        fn = cache[key] = build()
     else:
-        _SEARCH_CACHE.move_to_end(key)
+        cache.move_to_end(key)
     return fn
+
+
+def _cached_search(mesh: Mesh, k: int):
+    return _memoized(_SEARCH_CACHE, (_mesh_key(mesh), k),
+                     lambda: make_sharded_flat_search(mesh, k))
 
 
 def sharded_flat_search(q: jax.Array, x: jax.Array, k: int, mesh: Mesh
@@ -169,10 +185,6 @@ def make_sharded_probe_step(mesh: Mesh, *, axis: str = SHARD_AXIS,
     index.ivf.search exactly on any shard count.
     """
     key = (_mesh_key(mesh), axis, use_kernel, interpret)
-    cached = _PROBE_CACHE.get(key)
-    if cached is not None:
-        _PROBE_CACHE.move_to_end(key)
-        return cached
     nshards = shard_count(mesh, axis)
 
     def probe_step(index: Any, s: Any) -> Any:
@@ -258,13 +270,114 @@ def make_sharded_probe_step(mesh: Mesh, *, axis: str = SHARD_AXIS,
     # Jitted with the index as an ARGUMENT (not a closure constant):
     # closure-captured consts drop their committed cap-axis sharding, and
     # the whole bucket store would be re-laid-out replicated per device.
-    step = jax.jit(probe_step)
-    while len(_PROBE_CACHE) >= _SEARCH_CACHE_MAX:
-        _PROBE_CACHE.popitem(last=False)
-    _PROBE_CACHE[key] = step
-    return step
+    return _memoized(_PROBE_CACHE, key, lambda: jax.jit(probe_step))
+
+
+# ---------------------------------------------------------------------------
+# Sharded HNSW beam step
+# ---------------------------------------------------------------------------
+
+_BEAM_CACHE: "collections.OrderedDict[tuple, Callable]" = \
+    collections.OrderedDict()
+
+
+def make_sharded_beam_step(mesh: Mesh, *, axis: str = SHARD_AXIS
+                           ) -> Callable[..., Any]:
+    """One HNSW beam expansion over a row-sharded graph.
+
+    Returns step(index, state, k=..) -> state, a drop-in replacement for
+    index.hnsw.beam_step when the index was placed with
+    dist.sharding.place_index(index, mesh): vectors [N, D], sqnorm [N]
+    and neighbors [N, M] are split on the node dim over `axis` (N padded
+    to a shard multiple; pad rows carry sqnorm +inf / neighbor ids -1),
+    and the search state's visited bitmap [B, N] splits on its node dim.
+
+    Frontier bookkeeping (cand_d / cand_i / cand_exp, [B, ef]) stays
+    replicated and identical to the single-device step. Per step, under
+    one shard_map:
+
+      1. the shard owning each query's selected candidate contributes
+         its adjacency row; a [B, M] psum reconstructs the global
+         neighbor-id frontier on every shard,
+      2. each shard resolves the neighbors IT owns against its local
+         visited slice and vectors (gather + batched distance), masking
+         everything else to +inf, and updates its visited slice,
+      3. the per-shard [B, M] masked distances merge via one tiled
+         all-gather; a positional min over the shard dim restores the
+         exact single-device candidate layout (each neighbor is owned by
+         exactly one shard), so the ef-merge top-k breaks ties exactly
+         like index.hnsw.beam_step and results (topk_d / topk_i / ndis /
+         ninserts) match bit-for-bit on any shard count.
+
+    Cross-shard traffic is one [B, M] i32 psum + one [B, M] f32
+    all-gather per step — O(B*M*shards) bytes, independent of N and D,
+    versus the O(B*M*D) vector gather GSPMD emits for the unsharded
+    step on a mesh-placed index.
+    """
+    key = (_mesh_key(mesh), axis)
+    nshards = shard_count(mesh, axis)
+
+    def beam_step(index: Any, s: Any, *, k: int) -> Any:
+        from repro.index import hnsw as hnsw_lib
+
+        b = s.cand_d.shape[0]
+        mdeg = index.degree
+        if index.num_vectors % nshards:
+            raise ValueError(
+                f"graph has {index.num_vectors} rows, not divisible by "
+                f"{nshards} shards; place the index with "
+                f"dist.place_index(index, mesh) (it pads the node dim)")
+
+        # Replicated frontier bookkeeping — shared with hnsw.beam_step
+        # so the two steps cannot drift out of parity.
+        sel_id_safe, act, cand_exp = hnsw_lib.select_expand(s)
+
+        def expand(q, qsq, sel_id, act, vec_loc, sqn_loc, nbr_loc, vis_loc):
+            rows = vec_loc.shape[0]
+            base = jax.lax.axis_index(axis) * rows
+            # 1. owner of the selected node contributes its adjacency row
+            own_sel = (sel_id >= base) & (sel_id < base + rows)
+            sel_loc = jnp.clip(sel_id - base, 0, rows - 1)
+            nbrs = jax.lax.psum(
+                jnp.where(own_sel[:, None], nbr_loc[sel_loc] + 1, 0),
+                axis) - 1                                    # [B, M] global
+            # 2. scan the neighbors this shard owns
+            valid = (nbrs >= 0) & act[:, None]
+            owned = valid & (nbrs >= base) & (nbrs < base + rows)
+            loc = jnp.where(owned, nbrs - base, 0)
+            seen = jnp.take_along_axis(vis_loc, loc, axis=1)
+            new = owned & ~seen
+            vis_loc = vis_loc.at[jnp.arange(b)[:, None], loc].max(owned)
+            vecs = vec_loc[loc]                              # [B, M, D]
+            dist = (sqn_loc[loc]
+                    - 2.0 * jnp.einsum("bd,bmd->bm", q, vecs) + qsq)
+            dist = jnp.where(new, jnp.maximum(dist, 0.0), jnp.inf)
+            # 3. merge the masked per-shard frontiers
+            dist_all = jax.lax.all_gather(dist, axis, axis=1, tiled=True)
+            return nbrs, dist_all, vis_loc
+
+        sharded = shard_map(
+            expand, mesh=mesh,
+            in_specs=(P(), P(), P(), P(),
+                      P(axis, None), P(axis), P(axis, None), P(None, axis)),
+            out_specs=(P(), P(), P(None, axis)),
+            check_rep=False)
+        nbrs, dist_all, visited = sharded(
+            s.q, s.qsq, sel_id_safe, act,
+            index.vectors, index.sqnorm, index.neighbors, s.visited)
+        # Positional min over the shard dim: each neighbor slot j is
+        # finite on its single owner shard, so this restores the exact
+        # [B, M] layout (and top_k tie order) of the unsharded step.
+        dist = dist_all.reshape(b, nshards, mdeg).min(axis=1)
+        return hnsw_lib.merge_expand(s, cand_exp, act, nbrs, dist,
+                                     visited, k=k)
+
+    # Same jit discipline as the probe step: the index crosses the jit
+    # boundary as an argument so its committed row sharding is respected.
+    return _memoized(_BEAM_CACHE, key,
+                     lambda: jax.jit(beam_step, static_argnames=("k",)))
 
 
 __all__ = ["make_sharded_flat_search", "sharded_flat_search",
-           "make_sharded_probe_step", "merge_topk", "shard_count",
-           "SHARD_AXIS"]
+           "make_sharded_probe_step", "make_sharded_beam_step",
+           "merge_topk", "shard_count", "SHARD_AXIS"]

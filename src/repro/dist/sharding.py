@@ -213,38 +213,55 @@ def database_sharding(mesh: Mesh, n_rows: int) -> NamedSharding:
 _CAP_SHARDED_NAMES = {"bucket_vecs": 0.0, "bucket_ids": -1,
                       "bucket_sqnorm": np.inf}  # name -> cap-pad value
 
+# HNSW graph arrays whose node dim (axis 0) is split across shards.
+# entry / route_ids replicate: routing and frontier bookkeeping stay
+# replicated, only vector rows and adjacency rows live on their shard.
+_ROW_SHARDED_NAMES = {"vectors": 0.0, "neighbors": -1,
+                      "sqnorm": np.inf}  # name -> row-pad value
+
 
 def place_index(index: Any, mesh: Mesh) -> Any:
-    """Place an IVF index dataclass onto `mesh` for the sharded probe
-    (dist.collectives.make_sharded_probe_step): every bucket's row block
-    [cap, D] is split on the cap dim over the "model" axis, so each shard
-    scans its slice of EVERY probed bucket and only [B, k] candidate
-    lists cross shards. The small centroid / dequant tables and the
-    bucket_sizes counters replicate.
+    """Place an ANN index dataclass onto `mesh` for the sharded search
+    collectives (dist.collectives):
 
-    cap is padded up to a shard-count multiple first; padded slots keep
-    the index's own padding contract (vecs 0, ids -1, sqnorm +inf) so
-    they can never surface in a top-k. Degrades to full replication on a
-    1-device mesh, so the serve path is identical."""
+    * IVF (make_sharded_probe_step): every bucket's row block [cap, D]
+      is split on the cap dim over the "model" axis, so each shard scans
+      its slice of EVERY probed bucket and only [B, k] candidate lists
+      cross shards. The small centroid / dequant tables and the
+      bucket_sizes counters replicate.
+    * HNSW (make_sharded_beam_step): vectors [N, D], sqnorm [N] and
+      neighbors [N, M] are split on the node dim over "model", so each
+      shard owns a contiguous row block of the graph and only [B, M]
+      id/distance frontiers cross shards per beam step. entry and
+      route_ids replicate (the routing scan and frontier bookkeeping
+      are replicated).
+
+    The sharded dim (cap / node count) is padded up to a shard-count
+    multiple first; padded slots keep the index's own padding contract
+    (vecs 0, ids -1, sqnorm +inf) so they can never surface in a top-k.
+    Degrades to full replication on a 1-device mesh, so the serve path
+    is identical."""
     import dataclasses
 
     from repro.dist import collectives
 
     nshards = collectives.shard_count(mesh)
 
-    def pad_cap(name: str, arr: jax.Array) -> jax.Array:
-        cap = arr.shape[1]
-        pad = -cap % nshards
+    def pad_dim(arr: jax.Array, dim: int, value) -> jax.Array:
+        pad = -arr.shape[dim] % nshards
         if not pad:
             return arr
-        widths = ((0, 0), (0, pad)) + ((0, 0),) * (arr.ndim - 2)
-        return jnp.pad(arr, widths,
-                       constant_values=_CAP_SHARDED_NAMES[name])
+        widths = [(0, 0)] * arr.ndim
+        widths[dim] = (0, pad)
+        return jnp.pad(arr, widths, constant_values=value)
 
     def place(name: str, arr: jax.Array) -> jax.Array:
         if name in _CAP_SHARDED_NAMES:
-            arr = pad_cap(name, arr)
+            arr = pad_dim(arr, 1, _CAP_SHARDED_NAMES[name])
             logical = (None, "tp") + (None,) * (arr.ndim - 2)
+        elif name in _ROW_SHARDED_NAMES:
+            arr = pad_dim(arr, 0, _ROW_SHARDED_NAMES[name])
+            logical = ("tp",) + (None,) * (arr.ndim - 1)
         else:
             logical = (None,) * arr.ndim
         sh = NamedSharding(mesh, spec_for(mesh, arr.shape, logical))

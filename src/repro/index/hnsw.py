@@ -254,13 +254,73 @@ def init_state(index: HNSWIndex, q: jax.Array, *, ef: int) -> HNSWSearchState:
     cand_i = jnp.full((b, ef), -1, jnp.int32).at[:, 0].set(e)
     cand_exp = jnp.zeros((b, ef), bool)
     visited = jnp.zeros((b, n), bool).at[jnp.arange(b), e].set(True)
+    # The routing scan above really computes R distances per query, so
+    # ndis starts at R — NOT 1 — keeping fit-time ground-truth features
+    # and serve-time features on the same scale (the entry's distance is
+    # one of the R; beam steps then add only *new* computations).
+    nroute = index.route_ids.shape[0]
     return HNSWSearchState(
         q=qf, qsq=qsq, cand_d=cand_d, cand_i=cand_i, cand_exp=cand_exp,
         visited=visited, first_nn=first_nn,
         active=jnp.ones((b,), bool),
-        ndis=jnp.ones((b,), jnp.int32),
+        ndis=jnp.full((b,), nroute, jnp.int32),
         ninserts=jnp.ones((b,), jnp.int32),
         nstep=jnp.zeros((b,), jnp.int32),
+    )
+
+
+def select_expand(s: HNSWSearchState
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Pick each query's closest unexpanded candidate.
+
+    Replicated frontier bookkeeping shared by the single-device and
+    sharded (dist.collectives.make_sharded_beam_step) beam steps — one
+    definition so the two stay in exact parity. Returns
+    (sel_id_safe i32[B], act bool[B], cand_exp bool[B, ef])."""
+    b, ef = s.cand_d.shape
+    unexp_d = jnp.where(s.cand_exp | (s.cand_i < 0), jnp.inf, s.cand_d)
+    sel = jnp.argmin(unexp_d, axis=1)                       # [B]
+    sel_d = jnp.take_along_axis(unexp_d, sel[:, None], 1)[:, 0]
+    # Natural termination: no unexpanded candidate among the best ef.
+    act = s.active & jnp.isfinite(sel_d)
+    sel_id = jnp.take_along_axis(s.cand_i, sel[:, None], 1)[:, 0]
+    onehot = jax.lax.broadcasted_iota(jnp.int32, (b, ef), 1) == sel[:, None]
+    cand_exp = s.cand_exp | (onehot & act[:, None])
+    return jnp.maximum(sel_id, 0), act, cand_exp
+
+
+def merge_expand(s: HNSWSearchState, cand_exp: jax.Array, act: jax.Array,
+                 nbrs: jax.Array, dist: jax.Array, visited: jax.Array, *,
+                 k: int) -> HNSWSearchState:
+    """Merge one expansion's [B, M] candidates into the frontier and
+    advance the counters (shared tail of both beam steps; the top_k over
+    the concatenated [B, ef + M] layout fixes the tie-break order).
+
+    `dist` carries +inf for masked (invalid / already-seen) slots, so
+    the finite count IS the number of new distance computations."""
+    b, ef = s.cand_d.shape
+    mdeg = nbrs.shape[1]
+    old_kth = s.cand_d[:, k - 1]
+    cand_d = jnp.concatenate([s.cand_d, dist], axis=1)
+    cand_i = jnp.concatenate([s.cand_i, nbrs], axis=1)
+    cand_e = jnp.concatenate([cand_exp, jnp.zeros((b, mdeg), bool)], axis=1)
+    neg, pos = jax.lax.top_k(-cand_d, ef)
+    new_d = -neg
+    new_i = jnp.take_along_axis(cand_i, pos, axis=1)
+    new_e = jnp.take_along_axis(cand_e, pos, axis=1)
+
+    ndis_inc = jnp.sum(jnp.isfinite(dist), axis=1)
+    inserts = jnp.minimum(jnp.sum(dist < old_kth[:, None], axis=1), k)
+    return dataclasses.replace(
+        s,
+        cand_d=jnp.where(act[:, None], new_d, s.cand_d),
+        cand_i=jnp.where(act[:, None], new_i, s.cand_i),
+        cand_exp=jnp.where(act[:, None], new_e, cand_exp),
+        visited=visited,
+        active=act,
+        ndis=s.ndis + jnp.where(act, ndis_inc, 0).astype(jnp.int32),
+        ninserts=s.ninserts + jnp.where(act, inserts, 0).astype(jnp.int32),
+        nstep=s.nstep + act.astype(jnp.int32),
     )
 
 
@@ -268,20 +328,8 @@ def init_state(index: HNSWIndex, q: jax.Array, *, ef: int) -> HNSWSearchState:
 def beam_step(index: HNSWIndex, s: HNSWSearchState, *,
               k: int) -> HNSWSearchState:
     """Expand the closest unexpanded candidate of every active query."""
-    b, ef = s.cand_d.shape
-    mdeg = index.degree
-
-    unexp_d = jnp.where(s.cand_exp | (s.cand_i < 0), jnp.inf, s.cand_d)
-    sel = jnp.argmin(unexp_d, axis=1)                       # [B]
-    sel_d = jnp.take_along_axis(unexp_d, sel[:, None], 1)[:, 0]
-    # Natural termination: no unexpanded candidate among the best ef.
-    natural_stop = ~jnp.isfinite(sel_d)
-    act = s.active & ~natural_stop
-
-    sel_id = jnp.take_along_axis(s.cand_i, sel[:, None], 1)[:, 0]
-    sel_id_safe = jnp.maximum(sel_id, 0)
-    onehot = jax.lax.broadcasted_iota(jnp.int32, (b, ef), 1) == sel[:, None]
-    cand_exp = s.cand_exp | (onehot & act[:, None])
+    b = s.cand_d.shape[0]
+    sel_id_safe, act, cand_exp = select_expand(s)
 
     nbrs = index.neighbors[sel_id_safe]                     # [B, M]
     valid = (nbrs >= 0) & act[:, None]
@@ -295,44 +343,42 @@ def beam_step(index: HNSWIndex, s: HNSWSearchState, *,
     dist = (index.sqnorm[nbrs_safe] - 2.0 * jnp.einsum("bd,bmd->bm", s.q, vecs)
             + s.qsq)
     dist = jnp.where(new, jnp.maximum(dist, 0.0), jnp.inf)
-
-    old_kth = s.cand_d[:, k - 1]
-    cand_d = jnp.concatenate([s.cand_d, dist], axis=1)
-    cand_i = jnp.concatenate([s.cand_i, nbrs], axis=1)
-    cand_e = jnp.concatenate([cand_exp, jnp.zeros((b, mdeg), bool)], axis=1)
-    neg, pos = jax.lax.top_k(-cand_d, ef)
-    new_d = -neg
-    new_i = jnp.take_along_axis(cand_i, pos, axis=1)
-    new_e = jnp.take_along_axis(cand_e, pos, axis=1)
-
-    inserts = jnp.minimum(jnp.sum(dist < old_kth[:, None], axis=1), k)
-    return HNSWSearchState(
-        q=s.q, qsq=s.qsq,
-        cand_d=jnp.where(act[:, None], new_d, s.cand_d),
-        cand_i=jnp.where(act[:, None], new_i, s.cand_i),
-        cand_exp=jnp.where(act[:, None], new_e, cand_exp),
-        visited=visited, first_nn=s.first_nn,
-        active=act,
-        ndis=s.ndis + jnp.where(act, jnp.sum(new, axis=1), 0).astype(jnp.int32),
-        ninserts=s.ninserts + jnp.where(act, inserts, 0).astype(jnp.int32),
-        nstep=s.nstep + act.astype(jnp.int32),
-    )
+    return merge_expand(s, cand_exp, act, nbrs, dist, visited, k=k)
 
 
-def search(index: HNSWIndex, q: jax.Array, *, k: int, ef: int,
-           max_steps: int = 0) -> Tuple[jax.Array, jax.Array, HNSWSearchState]:
-    """Plain HNSW search to natural termination."""
-    s = init_state(index, q, ef=ef)
-    limit = max_steps or index.num_vectors
-
+def _drive(step, index: HNSWIndex, s: HNSWSearchState, k: int, limit
+           ) -> Tuple[jax.Array, jax.Array, HNSWSearchState]:
+    """Run a beam step to natural termination (or the step limit)."""
     def cond(carry):
         s, t = carry
         return s.active.any() & (t < limit)
 
     def body(carry):
         s, t = carry
-        return beam_step(index, s, k=k), t + 1
+        return step(index, s, k=k), t + 1
 
     s, _ = jax.lax.while_loop(cond, body, (s, jnp.asarray(0, jnp.int32)))
     d, i = s.topk(k)
     return d, i, s
+
+
+def search(index: HNSWIndex, q: jax.Array, *, k: int, ef: int,
+           max_steps: int = 0) -> Tuple[jax.Array, jax.Array, HNSWSearchState]:
+    """Plain HNSW search to natural termination."""
+    return _drive(beam_step, index, init_state(index, q, ef=ef), k,
+                  max_steps or index.num_vectors)
+
+
+def search_sharded(index: HNSWIndex, q: jax.Array, *, k: int, ef: int,
+                   mesh, max_steps: int = 0
+                   ) -> Tuple[jax.Array, jax.Array, HNSWSearchState]:
+    """Plain HNSW search through the shard_map beam step: `index` must be
+    placed with dist.place_index(index, mesh) (vectors/sqnorm/neighbors
+    split on the node dim over the "model" axis; the visited bitmap is
+    split the same way inside the step). Matches `search` exactly
+    (topk_d / topk_i / ndis / ninserts) on any shard count."""
+    from repro.dist import collectives  # local import: dist uses kernels
+
+    step = collectives.make_sharded_beam_step(mesh)
+    return _drive(step, index, init_state(index, q, ef=ef), k,
+                  max_steps or index.num_vectors)

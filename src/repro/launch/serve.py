@@ -6,13 +6,16 @@ Usage:
   PYTHONPATH=src python -m repro.launch.serve --n 30000 --queries 512 \
       --targets 0.8,0.9,0.95
 
-Sharded serving (--shards N splits every bucket's cap dim over a
-("model",) mesh and probes through the shard_map fast path — per-shard
-fused bucket_topk + one [B, k] all-gather merge; DARTH fit ground truth
-is sharded the same way. N=0 uses every visible device — on a multi-chip
+Sharded serving (--shards N places the index over a ("model",) mesh and
+searches through the shard_map fast paths — IVF: every bucket's cap dim
+split, per-shard fused bucket_topk + one [B, k] all-gather merge; HNSW
+(--engine hnsw): graph rows split, per-shard neighbor resolution + one
+[B, M] psum/all-gather frontier merge; DARTH fit ground truth is
+sharded the same way. N=0 uses every visible device — on a multi-chip
 host, or under XLA_FLAGS=--xla_force_host_platform_device_count=8 for a
 smoke run):
   PYTHONPATH=src python -m repro.launch.serve --shards 0
+  PYTHONPATH=src python -m repro.launch.serve --shards 0 --engine hnsw
 """
 from __future__ import annotations
 
@@ -25,7 +28,7 @@ import jax.numpy as jnp
 from repro import dist
 from repro.core import api, engines, intervals
 from repro.data import vectors
-from repro.index import flat, ivf
+from repro.index import flat, hnsw, ivf
 from repro.launch import mesh as mesh_lib
 from repro.serve import DarthServer
 from repro.utils import hlo as hlo_lib
@@ -37,13 +40,19 @@ def main() -> None:
     ap.add_argument("--dim", type=int, default=32)
     ap.add_argument("--queries", type=int, default=512)
     ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--engine", choices=("ivf", "hnsw"), default="ivf")
     ap.add_argument("--nlist", type=int, default=128)
+    ap.add_argument("--m", type=int, default=16,
+                    help="HNSW graph degree (--engine hnsw)")
+    ap.add_argument("--ef", type=int, default=128,
+                    help="HNSW frontier size (--engine hnsw)")
     ap.add_argument("--slots", type=int, default=64)
     ap.add_argument("--targets", type=str, default="0.8,0.9,0.95")
     ap.add_argument("--shards", type=int, default=None,
-                    help="split every bucket's cap dim over a ('model',) "
-                         "mesh and probe via the shard_map fast path; "
-                         "0 = all visible devices (default: unsharded)")
+                    help="place the index over a ('model',) mesh and "
+                         "search via the shard_map fast path (IVF: cap "
+                         "dim split; HNSW: graph rows split); 0 = all "
+                         "visible devices (default: unsharded)")
     args = ap.parse_args()
 
     targets = [float(t) for t in args.targets.split(",")]
@@ -51,24 +60,37 @@ def main() -> None:
                               num_queries=args.queries,
                               clusters=max(32, args.nlist), seed=0)
     t0 = time.time()
-    index = ivf.build(ds.base, nlist=args.nlist, seed=0)
-    print(f"[serve] index built: {index.num_vectors} vecs "
+    if args.engine == "hnsw":
+        index = hnsw.build(ds.base, m=args.m, seed=0)
+    else:
+        index = ivf.build(ds.base, nlist=args.nlist, seed=0)
+    print(f"[serve] {args.engine} index built: {index.num_vectors} vecs "
           f"({time.time()-t0:.1f}s)")
 
     mesh = None
     if args.shards is not None:
         mesh = mesh_lib.make_search_mesh(args.shards)
         index = dist.place_index(index, mesh)
+        what = (f"{index.num_vectors} graph rows" if args.engine == "hnsw"
+                else f"cap {index.cap}")
         print(f"[serve] index placed on {mesh_lib.describe(mesh)} "
-              f"(cap {index.cap} split over 'model')")
-        make_engine = lambda **kw: engines.sharded_ivf_engine(  # noqa: E731
-            index, mesh, **kw)
+              f"({what} split over 'model')")
+        if args.engine == "hnsw":
+            make_engine = lambda **kw: engines.sharded_hnsw_engine(  # noqa: E731
+                index, mesh, **kw)
+        else:
+            make_engine = lambda **kw: engines.sharded_ivf_engine(  # noqa: E731
+                index, mesh, **kw)
+    elif args.engine == "hnsw":
+        make_engine = lambda **kw: engines.hnsw_engine(index, **kw)  # noqa: E731
     else:
         make_engine = lambda **kw: engines.ivf_engine(index, **kw)  # noqa: E731
 
+    engine_kw = (dict(k=args.k, ef=args.ef) if args.engine == "hnsw"
+                 else dict(k=args.k, nprobe=args.nlist))
     darth = api.Darth(
         make_engine=make_engine,
-        engine=make_engine(k=args.k, nprobe=args.nlist))
+        engine=make_engine(**engine_kw))
     t0 = time.time()
     darth.fit(jnp.asarray(ds.learn), jnp.asarray(ds.base), mesh=mesh)
     print(f"[serve] DARTH fit ({time.time()-t0:.1f}s) "
@@ -104,10 +126,16 @@ def main() -> None:
     else:
         gt_d, gt_i = flat.search(jnp.asarray(ds.queries),
                                  jnp.asarray(ds.base), args.k)
-    ids = np.stack([r[1] for r in results])
-    rec = np.asarray(flat.recall_at_k(jnp.asarray(ids), gt_i))
+    # A step-budget truncation can leave never-admitted queries at None
+    # (DarthServer contract) — report recall over the returned ones.
+    done = np.array([i for i, r in enumerate(results) if r is not None])
+    if stats.truncated or len(done) < len(results):
+        print(f"[serve] step budget hit: {stats.truncated} truncated, "
+              f"{len(results) - len(done)} never admitted")
+    ids = np.stack([results[i][1] for i in done])
+    rec = np.asarray(flat.recall_at_k(jnp.asarray(ids), gt_i[done]))
     for t in targets:
-        sel = r_targets == np.float32(t)
+        sel = r_targets[done] == np.float32(t)
         print(f"[serve] target {t:.2f}: mean recall "
               f"{rec[sel].mean():.4f} over {int(sel.sum())} queries")
 

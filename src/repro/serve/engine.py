@@ -13,9 +13,13 @@ are native — per-slot R_t, per-slot adaptive intervals).
 
 The server is engine-agnostic through the Engine protocol: handing it
 engines.sharded_ivf_engine (cap-sharded bucket store, shard_map probe)
-instead of engines.ivf_engine changes nothing here — slot compaction,
-splicing and the chunked driver all operate on the replicated search
-state, while the probe's bucket traffic stays on-shard.
+or engines.sharded_hnsw_engine (row-sharded graph, shard_map beam step)
+instead of the single-device engines changes nothing here — slot
+compaction, splicing and the chunked driver all operate on the
+replicated search state, while the probe/beam data traffic stays
+on-shard. The one state leaf that IS sharded (HNSW's visited bitmap,
+split on its node dim) still has a leading slot dim, so _select_slots
+splicing works on it unchanged.
 """
 from __future__ import annotations
 
@@ -55,6 +59,8 @@ class ServeStats:
     slot_steps: int = 0          # engine steps x slots (cost proxy)
     engine_steps: int = 0
     refills: int = 0
+    truncated: int = 0           # in-flight queries harvested with a
+    #                              partial top-k when max_engine_steps hit
 
 
 class DarthServer:
@@ -78,20 +84,30 @@ class DarthServer:
         eng = engine
         pred = predictor
 
+        # The engine's index enters these outer jits as an ARGUMENT
+        # (re-bound via _replace so the protocol's init/step see the
+        # traced value): a closure-captured index would be baked in as a
+        # replicated constant, silently undoing dist.place_index for
+        # sharded engines.
         @jax.jit
-        def run_chunk(st: darth_search.DarthState, r_t: jax.Array,
+        def run_chunk(index, st: darth_search.DarthState, r_t: jax.Array,
                       ipi: jax.Array, mpi: jax.Array):
             body = darth_search.make_darth_body(
-                eng, pred, IntervalParams(ipi=ipi, mpi=mpi), r_t)
+                eng._replace(index=index), pred,
+                IntervalParams(ipi=ipi, mpi=mpi), r_t)
 
             def do(i, s):
                 return body(s)
             return jax.lax.fori_loop(0, steps_per_sync, do, st)
 
         @jax.jit
-        def init_chunk(q: jax.Array, ipi: jax.Array):
+        def init_chunk(index, q: jax.Array, ipi: jax.Array, mpi: jax.Array):
+            # Pass the REAL per-slot mpi through: init only reads ipi
+            # today, but IntervalParams(mpi=ipi) would silently lie to
+            # any future reader of params.mpi at init time.
             return darth_search.init_darth_state(
-                eng, q, IntervalParams(ipi=ipi, mpi=ipi))
+                eng._replace(index=index), q,
+                IntervalParams(ipi=ipi, mpi=mpi))
 
         @jax.jit
         def splice(mask, new_st, old_st):
@@ -127,6 +143,15 @@ class DarthServer:
             ids = [queue.pop(0) for _ in range(min(count, len(queue)))]
             return ids
 
+        def harvest(mask: np.ndarray) -> int:
+            """Pull the masked slots' top-k into results; free the slots."""
+            topk_d = np.asarray(jax.device_get(self.engine.topk_d(st.inner)))
+            topk_i = np.asarray(jax.device_get(self.engine.topk_i(st.inner)))
+            for s in np.nonzero(mask)[0]:
+                results[slot_query[s]] = (topk_d[s], topk_i[s])
+                slot_query[s] = -1
+            return int(mask.sum())
+
         # initial fill
         ids = take_batch(b)
         qb = np.zeros((b, d), np.float32)
@@ -138,7 +163,8 @@ class DarthServer:
         ip = self.interval_for_target(rt)
         ipi = np.broadcast_to(np.asarray(ip.ipi, np.float32), (b,)).copy()
         mpi = np.broadcast_to(np.asarray(ip.mpi, np.float32), (b,)).copy()
-        st = self._init_chunk(jnp.asarray(qb), jnp.asarray(ipi))
+        st = self._init_chunk(self.engine.index, jnp.asarray(qb),
+                              jnp.asarray(ipi), jnp.asarray(mpi))
         # slots with no query: deactivate
         occupied = slot_query >= 0
         st = dataclasses.replace(
@@ -147,26 +173,20 @@ class DarthServer:
         rt_dev = jnp.asarray(rt)
 
         while True:
-            st = self._run_chunk(st, rt_dev, jnp.asarray(ipi),
-                                 jnp.asarray(mpi))
+            st = self._run_chunk(self.engine.index, st, rt_dev,
+                                 jnp.asarray(ipi), jnp.asarray(mpi))
             stats.engine_steps += self.steps_per_sync
             stats.slot_steps += self.steps_per_sync * int(occupied.sum())
             active = np.asarray(jax.device_get(st.inner.active))
             finished = occupied & ~active
             if finished.any():
-                # harvest results
-                topk_d = np.asarray(jax.device_get(
-                    self.engine.topk_d(st.inner)))
-                topk_i = np.asarray(jax.device_get(
-                    self.engine.topk_i(st.inner)))
-                for s in np.nonzero(finished)[0]:
-                    qid = slot_query[s]
-                    results[qid] = (topk_d[s], topk_i[s])
-                    stats.completed += 1
-                    slot_query[s] = -1
+                stats.completed += harvest(finished)
                 occupied = slot_query >= 0
-                # refill
-                if queue:
+                # refill — unless the step budget is already exhausted:
+                # a query spliced in now would run zero steps and be
+                # harvested below as init-state junk (ids -1) instead of
+                # staying None in the queue.
+                if queue and stats.engine_steps < max_engine_steps:
                     free = np.nonzero(~occupied)[0]
                     ids = take_batch(len(free))
                     if ids:
@@ -188,8 +208,10 @@ class DarthServer:
                         mpi = np.where(mask, mpi2, mpi)
                         rt = np.where(mask, rt2, rt)
                         rt_dev = jnp.asarray(rt)
-                        fresh = self._init_chunk(jnp.asarray(qb2),
-                                                 jnp.asarray(ipi))
+                        fresh = self._init_chunk(self.engine.index,
+                                                 jnp.asarray(qb2),
+                                                 jnp.asarray(ipi),
+                                                 jnp.asarray(mpi))
                         st = self._splice(jnp.asarray(mask), fresh, st)
                         occupied = slot_query >= 0
                 # deactivate empty slots
@@ -199,5 +221,12 @@ class DarthServer:
             if not occupied.any() and not queue:
                 break
             if stats.engine_steps >= max_engine_steps:
+                # Step budget exhausted: the occupied slots still hold a
+                # valid partial top-k — harvest it instead of silently
+                # dropping those queries (their results[qid] would stay
+                # None). Queries never admitted from the queue remain
+                # None: they have no state to harvest.
+                if occupied.any():
+                    stats.truncated += harvest(occupied)
                 break
         return results, stats

@@ -57,6 +57,16 @@ def test_hnsw_recall(clustered_vectors):
     # frontier sorted ascending
     cd = np.asarray(s.cand_d)
     assert (np.diff(cd, axis=1) >= -1e-5).all()
+    # ndis accounting: the routing scan really computes R distances per
+    # query, so ndis starts at R (not 1) — the same scale the fit-time
+    # logs see — and each beam step adds only NEW computations, so the
+    # final count is exactly R + (#visited nodes beyond the entry).
+    r = int(index.route_ids.shape[0])
+    s0 = hnsw.init_state(index, q, ef=96)
+    np.testing.assert_array_equal(np.asarray(s0.ndis),
+                                  np.full(q.shape[0], r, np.int32))
+    nvisited = np.asarray(s.visited).sum(axis=1)
+    np.testing.assert_array_equal(nd, r + nvisited - 1)
 
 
 def test_hnsw_batch_equals_single(clustered_vectors):

@@ -43,6 +43,95 @@ def test_server_completes_all_queries(served_setup):
     assert rec >= 0.85, rec
 
 
+def test_server_step_budget_returns_partial_results(served_setup):
+    """Regression: hitting max_engine_steps must harvest the in-flight
+    slots' partial top-k (counted in stats.truncated), not silently
+    leave results[qid] = None for queries that hold a valid result."""
+    ds, index, d = served_setup
+
+    def interval_for_target(rt):
+        b = np.atleast_1d(rt).shape[0]
+        # huge intervals: the predictor never fires, nothing terminates
+        # early, so the tiny step budget is guaranteed to be exhausted
+        return intervals.IntervalParams(
+            ipi=np.full((b,), 1e9, np.float32),
+            mpi=np.full((b,), 1e9, np.float32))
+
+    server = DarthServer(d.engine, d.trained.predictor, interval_for_target,
+                         num_slots=32, steps_per_sync=2)
+    rts = np.full((60,), 0.9, np.float32)
+    results, stats = server.serve(ds.queries[:60], rts,
+                                  max_engine_steps=2)
+    assert stats.engine_steps == 2
+    assert stats.truncated == 32          # every admitted slot harvested
+    assert stats.completed == 0
+    done = [i for i, r in enumerate(results) if r is not None]
+    assert done == list(range(32))        # admitted queries, in order
+    for i in done:                        # partial top-k is real: after 2
+        dists, ids = results[i]           # probes all k slots are filled
+        assert ids.shape == (10,) and (ids >= 0).all()
+        assert np.isfinite(dists).all()
+    # never-admitted queries have no state to harvest
+    assert all(results[i] is None for i in range(32, 60))
+
+
+def test_step_budget_refills_never_return_junk(served_setup):
+    """Regression: a refill in the same sync interval that exhausts
+    max_engine_steps would splice queries that run zero steps — they
+    must stay queued (None), never harvested as init-state junk."""
+    ds, index, d = served_setup
+
+    def interval_for_target(rt):
+        p = [d.interval_params(float(r)) for r in np.atleast_1d(rt)]
+        return intervals.IntervalParams(
+            ipi=np.array([x.ipi for x in p], np.float32),
+            mpi=np.array([x.mpi for x in p], np.float32))
+
+    server = DarthServer(d.engine, d.trained.predictor, interval_for_target,
+                         num_slots=8, steps_per_sync=2)
+    rts = np.full((60,), 0.8, np.float32)
+    results, stats = server.serve(ds.queries[:60], rts, max_engine_steps=8)
+    done = [r for r in results if r is not None]
+    assert len(done) == stats.completed + stats.truncated
+    for dists, ids in done:       # every harvested slot ran >= 1 chunk,
+        assert (ids >= 0).all()   # so its top-k holds real neighbors
+
+
+def test_refill_splice_preserves_per_slot_targets(served_setup):
+    """Regression: the refill splice must keep every slot's r_t and its
+    ipi/mpi interval params consistent when mixed-target batches refill
+    (a wrong mask / broadcast would decouple them)."""
+    ds, index, d = served_setup
+
+    # interval params as an injective function of the target, so any
+    # slot mixing between r_t and ipi/mpi is visible at every chunk
+    def interval_for_target(rt):
+        rt = np.atleast_1d(rt).astype(np.float32)
+        return intervals.IntervalParams(ipi=100.0 * rt, mpi=10.0 * rt)
+
+    server = DarthServer(d.engine, d.trained.predictor, interval_for_target,
+                         num_slots=8, steps_per_sync=2)
+    seen = []
+    orig = server._run_chunk
+
+    def spy(index, st, rt, ipi, mpi):
+        seen.append((np.asarray(rt).copy(), np.asarray(ipi).copy(),
+                     np.asarray(mpi).copy()))
+        return orig(index, st, rt, ipi, mpi)
+
+    server._run_chunk = spy
+    rts = np.tile([0.7, 0.9], 32).astype(np.float32)  # mixed targets
+    results, stats = server.serve(ds.queries[:64], rts)
+    assert stats.completed == 64 and stats.refills > 0
+    assert all(r is not None for r in results)
+    mixed_chunks = 0
+    for rt, ipi, mpi in seen:
+        np.testing.assert_allclose(ipi, 100.0 * rt, rtol=1e-5)
+        np.testing.assert_allclose(mpi, 10.0 * rt, rtol=1e-5)
+        mixed_chunks += len(np.unique(rt)) > 1
+    assert mixed_chunks > 0               # mixed targets really in flight
+
+
 def test_server_compaction_saves_slot_steps(served_setup):
     """With compaction, total slot-steps must be well below
     num_queries x natural-termination steps (the no-compaction cost)."""
