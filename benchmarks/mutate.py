@@ -1,0 +1,146 @@
+"""Streaming-mutation benchmark: serve throughput + achieved recall
+across an insert/delete burst, before and after recalibration and
+compaction (the repro.mutate subsystem's end-to-end cost story).
+
+Phases (all served through the slot-pool DarthServer at mixed declared
+targets):
+  pre-burst         frozen index, freshly fit predictor
+  post-burst        +20% inserts (30% drifted/OOD), -10% deletes; the
+                    predictor is still the frozen-index fit
+  post-recalibrate  drift monitor refit + hot-swap
+  post-compact      delta folded into the base, empty ring
+
+Each phase reports host-side qps, mean achieved recall per declared
+target against FRESH ground truth over the live base+delta set, and the
+mean distance count.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro import mutate
+from repro.core import api, engines, intervals
+from repro.data import vectors
+from repro.index import flat, ivf
+from repro.serve import DarthServer
+
+K = 10
+TARGETS = (0.8, 0.9, 0.95)
+
+
+def mutate_burst(n: int = 20_000, d: int = 32, queries: int = 384):
+    ds = vectors.make_dataset(n=n, d=d, num_learn=2_000,
+                              num_queries=queries, clusters=128,
+                              cluster_std=1.3, seed=0)
+    index = ivf.build(ds.base, nlist=128, seed=0)
+    mut = mutate.MutableIndex(
+        index, capacity=-(-int(0.2 * n) // 128) * 128)
+
+    def make_engine(**kw):
+        return engines.mutable_engine(
+            engines.ivf_engine(mut.base, **kw), mut.delta)
+
+    darth = api.Darth(make_engine=make_engine,
+                      engine=make_engine(k=K, nprobe=128))
+    darth.fit(jnp.asarray(ds.learn), jnp.asarray(ds.base))
+
+    def interval_for_target(rt):
+        ps = [darth.interval_params(float(r)) for r in np.atleast_1d(rt)]
+        return intervals.IntervalParams(
+            ipi=np.array([p.ipi for p in ps], np.float32),
+            mpi=np.array([p.mpi for p in ps], np.float32))
+
+    rng = np.random.default_rng(0)
+    r_targets = rng.choice(TARGETS, size=queries).astype(np.float32)
+    server = DarthServer(darth.engine, darth.trained.predictor,
+                         interval_for_target, num_slots=64)
+    monitor = mutate.RecalibrationMonitor(mut, darth, targets=TARGETS,
+                                          threshold=0.01)
+
+    rows = []
+    gt_cache = {}
+
+    def live_gt():
+        """Exact live ground truth, memoized on the mutation epoch
+        (post-burst and post-recalibrate share one live set)."""
+        key = mut.version
+        if key not in gt_cache:
+            gt_cache.clear()
+            gt_cache[key] = mut.live_ground_truth(ds.queries, K)
+        return gt_cache[key]
+
+    def phase(label):
+        t0 = time.time()
+        results, stats = server.serve(ds.queries, r_targets)
+        dt = time.time() - t0
+        done = np.array([i for i, r in enumerate(results)
+                         if r is not None])
+        if done.size == 0:
+            rows.append({"phase": label, "qps": 0.0,
+                         "seconds": round(dt, 2), "error": "no results"})
+            return rows[-1]
+        ids = np.stack([results[i][1] for i in done])
+        gt = live_gt()[done]
+        rec = np.asarray(flat.recall_at_k(jnp.asarray(ids),
+                                          jnp.asarray(gt)))
+        monitor.observe(ds.queries[done], r_targets[done], ids)
+        row = {"phase": label, "qps": round(len(done) / dt, 1),
+               "seconds": round(dt, 2),
+               "slot_steps": stats.slot_steps}
+        for t in TARGETS:
+            sel = r_targets[done] == np.float32(t)
+            # null (not NaN) when a target drew no completed queries —
+            # results/benchmarks.json must stay standard JSON
+            row[f"recall@{t}"] = (round(float(rec[sel].mean()), 4)
+                                  if sel.any() else None)
+        rows.append(row)
+        return row
+
+    phase("pre-burst")
+
+    events = vectors.mutation_stream(ds, insert_pct=0.2, delete_pct=0.1,
+                                     drift=0.3, steps=6, seed=1)
+    t0 = time.time()
+    mut.apply(events)
+    mutate_s = time.time() - t0
+    server.set_engine(make_engine(k=K, nprobe=128),
+                      contents_only=True)
+    darth.engine = server.engine
+    burst = phase("post-burst")
+
+    rep = monitor.drift()
+    t0 = time.time()
+    monitor.recalibrate(ds.learn, server=server)
+    recal_s = time.time() - t0
+    phase("post-recalibrate")
+
+    t0 = time.time()
+    mut.compact()
+    compact_s = time.time() - t0
+    server.set_engine(make_engine(k=K, nprobe=128),
+                      contents_only=True)
+    darth.engine = server.engine
+    final = phase("post-compact")
+
+    rows.append({"phase": "costs", "mutate_seconds": round(mutate_s, 2),
+                 "recalibrate_seconds": round(recal_s, 2),
+                 "compact_seconds": round(compact_s, 2),
+                 "drift_worst_gap": round(rep.worst_gap, 4),
+                 "num_live": mut.num_live})
+    if "recall@0.9" in burst and "recall@0.9" in final:
+        headline = (f"post-burst r@.9 {burst['recall@0.9']:.3f} -> "
+                    f"post-compact {final['recall@0.9']:.3f}; "
+                    f"compact {compact_s:.1f}s")
+    else:
+        headline = f"phase returned no results; compact {compact_s:.1f}s"
+    return rows, headline
+
+
+if __name__ == "__main__":
+    rows, headline = mutate_burst()
+    for r in rows:
+        print(r)
+    print(headline)

@@ -10,12 +10,13 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import dist_search, paper_tables as pt
+    from benchmarks import dist_search, mutate, paper_tables as pt
 
     benches = [
         ("dist_sharded_search", dist_search.dist_sharded_search),
         ("dist_sharded_ivf_probe", dist_search.dist_sharded_ivf_probe),
         ("dist_sharded_hnsw_beam", dist_search.dist_sharded_hnsw_beam),
+        ("mutate_burst", mutate.mutate_burst),
         ("table5_predictor_quality", pt.table5_predictor_quality),
         ("table4_training_cost", pt.table4_training_cost),
         ("fig5_interval_ablation", pt.fig5_interval_ablation),

@@ -11,11 +11,37 @@ import dataclasses
 from typing import Callable, Optional, Sequence, Tuple, Union
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import darth_search, engines as engines_lib
 from repro.core import intervals as intervals_lib
 from repro.core import training as training_lib
+
+
+def validate_targets(r_target: Union[float, jax.Array, np.ndarray],
+                     batch: int) -> np.ndarray:
+    """Reject malformed declared-recall targets BEFORE they broadcast.
+
+    A scalar or a [batch] vector is accepted; anything else (a wrong
+    length — e.g. targets for last batch's size — or a 2-D array) would
+    silently broadcast garbage against per-query state. Targets must be
+    finite and in (0, 1]: recall is a fraction, and a target of 0 or a
+    NaN would make the termination test vacuous. Returns the validated
+    float32 array."""
+    rt = np.asarray(r_target, np.float32)
+    if rt.ndim > 1 or (rt.ndim == 1 and rt.shape[0] != batch):
+        raise ValueError(
+            f"r_target shape {rt.shape} does not match query batch "
+            f"{batch}: pass a scalar or a [{batch}] vector of per-query "
+            f"declared recall targets")
+    if rt.size == 0 or not np.all(np.isfinite(rt)) or \
+            float(rt.min()) <= 0.0 or float(rt.max()) > 1.0:
+        raise ValueError(
+            f"declared recall targets must be finite and in (0, 1], got "
+            f"range [{rt.min() if rt.size else 'empty'}, "
+            f"{rt.max() if rt.size else 'empty'}]")
+    return rt
 
 
 @dataclasses.dataclass
@@ -29,11 +55,18 @@ class Darth:
     def fit(self, q_train: jax.Array, x: jax.Array, *,
             targets: Sequence[float] = (0.8, 0.85, 0.9, 0.95, 0.99),
             max_samples: int = 2_000_000, batch: int = 256,
-            seed: int = 0, mesh=None) -> training_lib.TrainedDarth:
+            seed: int = 0, mesh=None,
+            ids: Optional[np.ndarray] = None) -> training_lib.TrainedDarth:
         """One-time fit. With `mesh`, ground-truth generation row-shards
-        the database over the mesh (training.ground_truth)."""
+        the database over the mesh (training.ground_truth). With `ids`,
+        x's rows are mapped to GLOBAL ids (ids[row]) before recall is
+        measured — the mutable-index refit path, where the engine
+        returns stable global ids rather than row positions."""
         k = self.engine.k
         _, gt_i = training_lib.ground_truth(q_train, x, k, mesh=mesh)
+        if ids is not None:
+            id_map = jnp.asarray(np.asarray(ids, np.int64).astype(np.int32))
+            gt_i = jnp.where(gt_i >= 0, id_map[jnp.maximum(gt_i, 0)], -1)
         log = training_lib.generate_observations(self.engine, q_train, gt_i,
                                                  batch=batch)
         self.trained = training_lib.fit_predictor(
@@ -55,7 +88,8 @@ class Darth:
                ) -> Tuple[jax.Array, jax.Array, darth_search.DarthState]:
         """ANNS(q, G, k, R_t): returns (dists, ids, diagnostics state)."""
         assert self.trained is not None, "call fit() first"
-        rt_scalar = float(np.mean(np.asarray(r_target)))
+        r_target = validate_targets(r_target, q.shape[0])
+        rt_scalar = float(np.mean(r_target))
         params = self.interval_params(rt_scalar)
         st = darth_search.darth_search(self.engine, q, r_target,
                                        self.trained.predictor, params)

@@ -108,6 +108,20 @@ def hnsw_engine(index: hnsw_lib.HNSWIndex, *, k: int, ef: int,
     )
 
 
+def mutable_engine(base_engine: Engine, delta, *,
+                   interpret: bool = True) -> Engine:
+    """MutableEngine: wrap ANY engine (single-device or sharded) with a
+    delta tier — init adds one brute-force delta scan (fused l2_topk),
+    step is the base probe/beam step, and the top-k getters merge the
+    delta candidates via merge_topk. Tombstoned slots carry sqnorm +inf
+    / ids -1 (the shard-pad convention) in base and delta alike, so
+    deletes are invisible to every driver. See repro.mutate."""
+    from repro.mutate import engine as mutate_engine_lib
+
+    return mutate_engine_lib.mutable_engine(base_engine, delta,
+                                            interpret=interpret)
+
+
 def sharded_hnsw_engine(index: hnsw_lib.HNSWIndex, mesh, *, k: int, ef: int,
                         max_steps: int = 0) -> Engine:
     """ShardedHNSWEngine: the beam loop over a row-sharded graph

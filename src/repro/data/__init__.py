@@ -1,7 +1,8 @@
 from repro.data import synthetic, vectors
 from repro.data.synthetic import PipelineConfig, TokenPipeline
-from repro.data.vectors import (VectorDataset, make_dataset, noisy_queries,
-                                ood_queries)
+from repro.data.vectors import (MutationEvent, VectorDataset, make_dataset,
+                                mutation_stream, noisy_queries, ood_queries)
 
 __all__ = ["synthetic", "vectors", "PipelineConfig", "TokenPipeline",
-           "VectorDataset", "make_dataset", "noisy_queries", "ood_queries"]
+           "VectorDataset", "make_dataset", "noisy_queries", "ood_queries",
+           "MutationEvent", "mutation_stream"]

@@ -95,6 +95,56 @@ def ood_queries(d: int, num: int, *, clusters: int = 64,
     return q.astype(np.float32)
 
 
+class MutationEvent(NamedTuple):
+    """One timestamped step of a streaming-update workload."""
+    t: int
+    kind: str                      # "insert" | "delete"
+    vecs: Optional[np.ndarray]     # inserts: f32[M, D]
+    ids: Optional[np.ndarray]      # deletes: i64[M] base ids
+
+
+def mutation_stream(ds: VectorDataset, insert_pct: float = 0.2,
+                    delete_pct: float = 0.1, *, drift: float = 0.0,
+                    steps: int = 8, clusters: int = 64,
+                    seed: int = 0) -> list:
+    """Timestamped insert/delete schedule over `ds.base` — the ONE
+    workload definition the mutable-index benchmarks and tests share.
+
+    Inserts total insert_pct * N vectors: a `drift` fraction is drawn
+    from UNSEEN modes via the `ood_queries` cluster machinery (the
+    distribution shift that decays a frozen recall predictor), the rest
+    are in-distribution noisy perturbations of base vectors
+    (`noisy_queries`). Deletes remove delete_pct * N distinct base ids.
+    Events alternate insert/delete across `steps` timestamps so the two
+    interleave the way a live collection mutates.
+    """
+    rng = np.random.default_rng(seed + 7919)
+    n, d = ds.base.shape
+    n_ins = int(round(insert_pct * n))
+    n_del = int(round(delete_pct * n))
+    n_ood = int(round(np.clip(drift, 0.0, 1.0) * n_ins))
+
+    src = rng.choice(n, size=max(n_ins - n_ood, 0), replace=True)
+    in_dist = noisy_queries(ds.base[src], 0.05, seed=seed + 1)
+    ood = ood_queries(d, n_ood, clusters=clusters, seed=seed + 2)
+    inserts = np.concatenate([in_dist, ood], axis=0).astype(np.float32)
+    inserts = inserts[rng.permutation(inserts.shape[0])]
+    del_ids = rng.choice(n, size=min(n_del, n), replace=False
+                         ).astype(np.int64)
+
+    events = []
+    for t in range(steps):
+        ins_t = inserts[t * n_ins // steps:(t + 1) * n_ins // steps]
+        if ins_t.shape[0]:
+            events.append(MutationEvent(t=t, kind="insert", vecs=ins_t,
+                                        ids=None))
+        del_t = del_ids[t * n_del // steps:(t + 1) * n_del // steps]
+        if del_t.shape[0]:
+            events.append(MutationEvent(t=t, kind="delete", vecs=None,
+                                        ids=del_t))
+    return events
+
+
 def local_intrinsic_dimensionality(dists: np.ndarray) -> np.ndarray:
     """MLE LID per query from ascending kNN distances [B, k] (paper §4
     'Dataset Complexity'): LID = -(1/k * sum log(d_i / d_k))^-1."""

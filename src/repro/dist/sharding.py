@@ -245,6 +245,22 @@ def place_index(index: Any, mesh: Mesh) -> Any:
 
     from repro.dist import collectives
 
+    # Mutable-index view (repro.mutate): shard the base index with the
+    # rules below; the delta ring stays REPLICATED on every shard (it is
+    # small by construction and replicating it keeps the per-query delta
+    # scan collective-free). Tombstones need no handling of their own —
+    # they live inside the base arrays as pad-convention slots (sqnorm
+    # +inf / ids -1) and travel row-sharded with them.
+    from repro.mutate.engine import MutableIndexView
+
+    if isinstance(index, MutableIndexView):
+        rep = replicated(mesh)
+        return dataclasses.replace(
+            index,
+            base=place_index(index.base, mesh),
+            delta=jax.tree.map(lambda a: jax.device_put(a, rep),
+                               index.delta))
+
     nshards = collectives.shard_count(mesh)
 
     def pad_dim(arr: jax.Array, dim: int, value) -> jax.Array:

@@ -130,6 +130,25 @@ def _reverse_edges(fwd: np.ndarray, slots: int) -> np.ndarray:
     return rev
 
 
+def _prune_rows(x: np.ndarray, owners: np.ndarray, merged: np.ndarray,
+                m: int, alpha2: float) -> np.ndarray:
+    """Distance-sort + alpha-prune candidate lists for `owners` rows.
+
+    owners: i64[B] node ids; merged: i32[B, C] candidate ids (-1 invalid,
+    self-edges dropped). Returns i32[B, m]. Shared by the full-graph
+    build re-prune and the streaming insert/delete repair paths."""
+    vi = x[np.maximum(merged, 0)]
+    du = ((vi - x[owners, None, :]) ** 2).sum(axis=2).astype(np.float32)
+    du = np.where((merged >= 0) & (merged != owners[:, None]), du, np.inf)
+    ord_ = np.argsort(du, axis=1, kind="stable")
+    ci_s = np.where(np.take_along_axis(du, ord_, 1) < np.inf,
+                    np.take_along_axis(merged, ord_, 1), -1)
+    du_s = np.take_along_axis(du, ord_, axis=1)
+    pd = _pairwise_sq(jnp.asarray(x[np.maximum(ci_s, 0)]))
+    return np.asarray(_robust_prune(
+        jnp.asarray(ci_s), jnp.asarray(du_s), pd, m, alpha2))
+
+
 def _prune_merged(x: np.ndarray, merged: np.ndarray, m: int, alpha2: float,
                   chunk: int) -> np.ndarray:
     """Distance-sort + alpha-prune candidate lists to degree m (chunked)."""
@@ -137,17 +156,8 @@ def _prune_merged(x: np.ndarray, merged: np.ndarray, m: int, alpha2: float,
     out = np.zeros((n, m), np.int32)
     for lo in range(0, n, chunk):
         hi = min(n, lo + chunk)
-        ci = merged[lo:hi]
-        vi = x[np.maximum(ci, 0)]
-        du = ((vi - x[lo:hi, None, :]) ** 2).sum(axis=2).astype(np.float32)
-        du = np.where((ci >= 0) & (ci != np.arange(lo, hi)[:, None]), du, np.inf)
-        ord_ = np.argsort(du, axis=1, kind="stable")
-        ci_s = np.where(np.take_along_axis(du, ord_, 1) < np.inf,
-                        np.take_along_axis(ci, ord_, 1), -1)
-        du_s = np.take_along_axis(du, ord_, axis=1)
-        pd = _pairwise_sq(jnp.asarray(x[np.maximum(ci_s, 0)]))
-        out[lo:hi] = np.asarray(_robust_prune(
-            jnp.asarray(ci_s), jnp.asarray(du_s), pd, m, alpha2))
+        out[lo:hi] = _prune_rows(x, np.arange(lo, hi), merged[lo:hi],
+                                 m, alpha2)
     return out
 
 
@@ -210,6 +220,67 @@ def build(x: np.ndarray, m: int = 16, *, ef_construction: int = 64,
                      neighbors=jnp.asarray(neighbors),
                      entry=jnp.asarray(entry, jnp.int32),
                      route_ids=route_ids)
+
+
+def insert_nodes(index: HNSWIndex, rows: np.ndarray, *,
+                 ef_construction: int = 64, alpha: float = 1.2,
+                 chunk: int = 1024) -> HNSWIndex:
+    """Incrementally link already-appended rows (streaming compaction).
+
+    `rows` must already be present in vectors/sqnorm (their neighbor
+    rows are overwritten); entry/route_ids must reference nodes that are
+    live and linked, since they seed the candidate searches. Per chunk:
+    beam-search the CURRENT graph for each new vector (its
+    ef_construction frontier is the candidate pool, exactly like the
+    batch build), RobustPrune to m forward edges, then merge the reverse
+    proposals into each target's list and re-prune — the reverse-edge
+    repair that makes new nodes reachable.
+    """
+    rows = np.asarray(rows, np.int64)
+    if rows.size == 0:
+        return index
+    x = np.asarray(index.vectors)
+    sq = np.asarray(index.sqnorm)
+    nbr = np.asarray(index.neighbors).copy()
+    n, m = nbr.shape
+    alpha2 = float(alpha) ** 2
+    efc = max(ef_construction, 2 * m)
+    # vectors/sqnorm never change across chunks — upload once; only the
+    # adjacency is re-wrapped per chunk
+    xv = jnp.asarray(x)
+    sqv = jnp.asarray(sq)
+
+    for lo in range(0, rows.size, chunk):
+        sel = rows[lo:lo + chunk]
+        cur = HNSWIndex(vectors=xv, sqnorm=sqv,
+                        neighbors=jnp.asarray(nbr), entry=index.entry,
+                        route_ids=index.route_ids)
+        _, _, s = search(cur, jnp.asarray(x[sel]), k=m, ef=efc,
+                         max_steps=4 * efc)
+        cd = np.asarray(s.cand_d)
+        ci = np.asarray(s.cand_i)
+        is_self = ci == sel[:, None]
+        cd = np.where(is_self | (ci < 0), np.inf, cd)
+        ord_ = np.argsort(cd, axis=1, kind="stable")
+        ci_s = np.where(np.take_along_axis(cd, ord_, 1) < np.inf,
+                        np.take_along_axis(ci, ord_, 1), -1)
+        cd_s = np.take_along_axis(cd, ord_, axis=1)
+        pd = _pairwise_sq(jnp.asarray(x[np.maximum(ci_s, 0)]))
+        fwd = np.asarray(_robust_prune(
+            jnp.asarray(ci_s), jnp.asarray(cd_s), pd, m, alpha2))
+        nbr[sel] = fwd
+        # Reverse-edge repair: every forward target merges the new node
+        # into its own list and re-prunes to degree m.
+        fwd_full = np.full((n, m), -1, np.int32)
+        fwd_full[sel] = fwd
+        rev = _reverse_edges(fwd_full, m)
+        targets = np.nonzero((rev >= 0).any(axis=1))[0]
+        if targets.size:
+            merged = _dedup_rows_vec(
+                np.concatenate([nbr[targets], rev[targets]], axis=1))
+            nbr[targets] = _prune_rows(x, targets, merged, m, alpha2)
+
+    return dataclasses.replace(index, neighbors=jnp.asarray(nbr))
 
 
 # ---------------------------------------------------------------------------

@@ -57,6 +57,42 @@ class IVFIndex:
         return int(jax.device_get(self.bucket_sizes).sum())
 
 
+def quantize_sq8(x: np.ndarray, scale: np.ndarray, offset: np.ndarray
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-dim affine SQ8: returns (int8 codes, dequantized f32)."""
+    x8 = np.clip(np.round((x - offset) / scale), -127, 127).astype(np.int8)
+    return x8, x8.astype(np.float32) * scale + offset
+
+
+def pack_buckets(x_store: np.ndarray, x_deq: np.ndarray, ids: np.ndarray,
+                 assign: np.ndarray, nlist: int, *, cap_round: int = 8
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Bucket-major padded layout from precomputed assignments.
+
+    `ids` are arbitrary GLOBAL ids (build passes 0..n-1; streaming
+    compaction passes the surviving base + delta ids, which keeps ids
+    stable across compactions). cap = max bucket size rounded up to
+    cap_round; padded slots carry the repo convention vecs 0 / ids -1 /
+    sqnorm +inf. Returns (bucket_vecs, bucket_ids, bucket_sqnorm, sizes).
+    """
+    d = x_store.shape[1]
+    order = np.argsort(assign, kind="stable")
+    sizes = np.bincount(assign, minlength=nlist)
+    cap = int(max(8, -(-int(max(sizes.max(), 1)) // cap_round) * cap_round))
+    bucket_vecs = np.zeros((nlist, cap, d), x_store.dtype)
+    bucket_ids = np.full((nlist, cap), -1, np.int32)
+    bucket_sqnorm = np.full((nlist, cap), np.inf, np.float32)
+    start = 0
+    for c in range(nlist):
+        sz = int(sizes[c])
+        sel = order[start:start + sz]
+        start += sz
+        bucket_vecs[c, :sz] = x_store[sel]
+        bucket_ids[c, :sz] = ids[sel]
+        bucket_sqnorm[c, :sz] = (x_deq[sel] ** 2).sum(axis=1)
+    return bucket_vecs, bucket_ids, bucket_sqnorm, sizes.astype(np.int32)
+
+
 def build(x: np.ndarray, nlist: int, *, iters: int = 15, seed: int = 0,
           cap_round: int = 8, quantize: bool = False) -> IVFIndex:
     """Cluster + bucket-major layout. cap = max bucket size rounded up.
@@ -70,44 +106,28 @@ def build(x: np.ndarray, nlist: int, *, iters: int = 15, seed: int = 0,
     n, d = x.shape
     cents = kmeans_lib.kmeans(x, nlist, iters=iters, seed=seed)
     a = np.asarray(kmeans_lib.assign(jnp.asarray(x), jnp.asarray(cents)))
-    order = np.argsort(a, kind="stable")
-    sizes = np.bincount(a, minlength=nlist)
-    cap = int(max(8, -(-int(sizes.max()) // cap_round) * cap_round))
 
     if quantize:
         lo = x.min(axis=0)
         hi = x.max(axis=0)
         scale = np.maximum((hi - lo) / 254.0, 1e-12).astype(np.float32)
         offset = ((hi + lo) / 2.0).astype(np.float32)
-        x8 = np.clip(np.round((x - offset) / scale), -127, 127
-                     ).astype(np.int8)
-        x_store = x8
-        x_deq = x8.astype(np.float32) * scale + offset
-        store_dtype = np.int8
+        x_store, x_deq = quantize_sq8(x, scale, offset)
     else:
         scale = np.ones((d,), np.float32)
         offset = np.zeros((d,), np.float32)
         x_store = x
         x_deq = x
-        store_dtype = np.float32
 
-    bucket_vecs = np.zeros((nlist, cap, d), store_dtype)
-    bucket_ids = np.full((nlist, cap), -1, np.int32)
-    bucket_sqnorm = np.full((nlist, cap), np.inf, np.float32)
-    start = 0
-    for c in range(nlist):
-        sz = int(sizes[c])
-        ids = order[start:start + sz]
-        start += sz
-        bucket_vecs[c, :sz] = x_store[ids]
-        bucket_ids[c, :sz] = ids
-        bucket_sqnorm[c, :sz] = (x_deq[ids] ** 2).sum(axis=1)
+    bucket_vecs, bucket_ids, bucket_sqnorm, sizes = pack_buckets(
+        x_store, x_deq, np.arange(n, dtype=np.int32), a, nlist,
+        cap_round=cap_round)
     return IVFIndex(
         centroids=jnp.asarray(cents),
         bucket_vecs=jnp.asarray(bucket_vecs),
         bucket_ids=jnp.asarray(bucket_ids),
         bucket_sqnorm=jnp.asarray(bucket_sqnorm),
-        bucket_sizes=jnp.asarray(sizes.astype(np.int32)),
+        bucket_sizes=jnp.asarray(sizes),
         scale=jnp.asarray(scale),
         offset=jnp.asarray(offset),
     )

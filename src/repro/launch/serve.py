@@ -16,6 +16,12 @@ host, or under XLA_FLAGS=--xla_force_host_platform_device_count=8 for a
 smoke run):
   PYTHONPATH=src python -m repro.launch.serve --shards 0
   PYTHONPATH=src python -m repro.launch.serve --shards 0 --engine hnsw
+
+Streaming mutations (--mutations INS,DEL applies an insert/delete burst
+mid-serve through the repro.mutate subsystem: delta ring + tombstones,
+drift monitor, predictor recalibration hot-swap, compaction):
+  PYTHONPATH=src python -m repro.launch.serve --mutations 0.2,0.1 \
+      --drift 0.3
 """
 from __future__ import annotations
 
@@ -25,8 +31,8 @@ import time
 import numpy as np
 import jax.numpy as jnp
 
-from repro import dist
-from repro.core import api, engines, intervals
+from repro import dist, mutate
+from repro.core import api, engines, intervals, training
 from repro.data import vectors
 from repro.index import flat, hnsw, ivf
 from repro.launch import mesh as mesh_lib
@@ -39,6 +45,8 @@ def main() -> None:
     ap.add_argument("--n", type=int, default=30_000)
     ap.add_argument("--dim", type=int, default=32)
     ap.add_argument("--queries", type=int, default=512)
+    ap.add_argument("--learn", type=int, default=2000,
+                    help="DARTH training-query pool size")
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--engine", choices=("ivf", "hnsw"), default="ivf")
     ap.add_argument("--nlist", type=int, default=128)
@@ -53,10 +61,24 @@ def main() -> None:
                          "search via the shard_map fast path (IVF: cap "
                          "dim split; HNSW: graph rows split); 0 = all "
                          "visible devices (default: unsharded)")
+    ap.add_argument("--mutations", type=str, default=None,
+                    metavar="INS,DEL",
+                    help="streaming-mutation workload: apply an "
+                         "insert_pct,delete_pct burst (of --n) between "
+                         "serve phases, with drift monitoring, "
+                         "predictor recalibration and compaction")
+    ap.add_argument("--drift", type=float, default=0.0,
+                    help="fraction of burst inserts drawn OOD "
+                         "(mutation_stream)")
+    ap.add_argument("--mutation-steps", type=int, default=4)
+    ap.add_argument("--delta-cap", type=int, default=0,
+                    help="delta ring capacity (0 = sized to the burst)")
+    ap.add_argument("--recal-threshold", type=float, default=0.02,
+                    help="recall drift that triggers a predictor refit")
     args = ap.parse_args()
 
     targets = [float(t) for t in args.targets.split(",")]
-    ds = vectors.make_dataset(n=args.n, d=args.dim, num_learn=2000,
+    ds = vectors.make_dataset(n=args.n, d=args.dim, num_learn=args.learn,
                               num_queries=args.queries,
                               clusters=max(32, args.nlist), seed=0)
     t0 = time.time()
@@ -70,27 +92,40 @@ def main() -> None:
     mesh = None
     if args.shards is not None:
         mesh = mesh_lib.make_search_mesh(args.shards)
-        index = dist.place_index(index, mesh)
-        what = (f"{index.num_vectors} graph rows" if args.engine == "hnsw"
-                else f"cap {index.cap}")
-        print(f"[serve] index placed on {mesh_lib.describe(mesh)} "
-              f"({what} split over 'model')")
-        if args.engine == "hnsw":
-            make_engine = lambda **kw: engines.sharded_hnsw_engine(  # noqa: E731
-                index, mesh, **kw)
-        else:
-            make_engine = lambda **kw: engines.sharded_ivf_engine(  # noqa: E731
-                index, mesh, **kw)
-    elif args.engine == "hnsw":
-        make_engine = lambda **kw: engines.hnsw_engine(index, **kw)  # noqa: E731
-    else:
-        make_engine = lambda **kw: engines.ivf_engine(index, **kw)  # noqa: E731
+        print(f"[serve] serving on {mesh_lib.describe(mesh)}")
 
     engine_kw = (dict(k=args.k, ef=args.ef) if args.engine == "hnsw"
                  else dict(k=args.k, nprobe=args.nlist))
-    darth = api.Darth(
-        make_engine=make_engine,
-        engine=make_engine(**engine_kw))
+
+    mutable = None
+    if args.mutations is not None:
+        ins_pct, del_pct = (float(v) for v in args.mutations.split(","))
+        cap = args.delta_cap or max(
+            args.k, -(-int(round(ins_pct * args.n)) // 128) * 128)
+        mutable = mutate.MutableIndex(index, capacity=cap)
+        print(f"[serve] mutable index: delta capacity {cap}")
+
+    def family_engine(idx, **kw):
+        """Engine over an (already-placed, when sharded) index."""
+        if mesh is not None:
+            if args.engine == "hnsw":
+                return engines.sharded_hnsw_engine(idx, mesh, **kw)
+            return engines.sharded_ivf_engine(idx, mesh, **kw)
+        if args.engine == "hnsw":
+            return engines.hnsw_engine(idx, **kw)
+        return engines.ivf_engine(idx, **kw)
+
+    def build_engine(**kw):
+        if mutable is None:
+            idx = dist.place_index(index, mesh) if mesh is not None else index
+            return family_engine(idx, **kw)
+        base_idx, delta = mutable.base, mutable.delta
+        if mesh is not None:
+            view = dist.place_index(mutable.view(), mesh)
+            base_idx, delta = view.base, view.delta
+        return engines.mutable_engine(family_engine(base_idx, **kw), delta)
+
+    darth = api.Darth(make_engine=build_engine, engine=build_engine(**engine_kw))
     t0 = time.time()
     darth.fit(jnp.asarray(ds.learn), jnp.asarray(ds.base), mesh=mesh)
     print(f"[serve] DARTH fit ({time.time()-t0:.1f}s) "
@@ -107,37 +142,108 @@ def main() -> None:
     server = DarthServer(darth.engine, darth.trained.predictor,
                          interval_for_target, num_slots=args.slots,
                          mesh=mesh)
-    t0 = time.time()
-    results, stats = server.serve(ds.queries, r_targets)
-    dt = time.time() - t0
-    print(f"[serve] {stats.completed} queries in {dt:.1f}s "
-          f"({stats.completed/dt:.0f} qps host-side; "
-          f"{stats.engine_steps} engine steps, {stats.refills} refills)")
+    monitor = None
+    if mutable is not None:
+        monitor = mutate.RecalibrationMonitor(
+            mutable, darth, targets=targets,
+            threshold=args.recal_threshold, mesh=mesh)
+
+    gt_cache = {}
+
+    def ground_truth():
+        """Fresh exact top-k as GLOBAL ids over the current live set,
+        memoized on the mutation epoch — consecutive phases over an
+        unchanged live set (e.g. post-burst then post-recalibration)
+        reuse one scan."""
+        key = mutable.version if mutable is not None else 0
+        if key not in gt_cache:
+            gt_cache.clear()
+            if mutable is not None:
+                gt_cache[key] = mutable.live_ground_truth(
+                    ds.queries, args.k, mesh=mesh)
+            else:
+                _, gt_i = training.ground_truth(
+                    jnp.asarray(ds.queries), jnp.asarray(ds.base),
+                    args.k, mesh=mesh)
+                gt_cache[key] = np.asarray(gt_i).astype(np.int32)
+        return gt_cache[key]
+
+    def serve_phase(label: str) -> None:
+        t0 = time.time()
+        results, stats = server.serve(ds.queries, r_targets)
+        dt = time.time() - t0
+        print(f"[serve] {label}: {stats.completed} queries in {dt:.1f}s "
+              f"({stats.completed/max(dt, 1e-9):.0f} qps host-side; "
+              f"{stats.engine_steps} engine steps, {stats.refills} refills)")
+        done = np.array([i for i, r in enumerate(results) if r is not None])
+        if stats.truncated or len(done) < len(results):
+            print(f"[serve] {label}: step budget hit: {stats.truncated} "
+                  f"truncated, {len(results) - len(done)} never admitted")
+        if done.size == 0:
+            print(f"[serve] {label}: no queries completed — skipping "
+                  f"recall report")
+            return
+        ids = np.stack([results[i][1] for i in done])
+        gt_i = ground_truth()
+        rec = np.asarray(flat.recall_at_k(jnp.asarray(ids),
+                                          jnp.asarray(gt_i[done])))
+        if monitor is not None:
+            monitor.observe(ds.queries[done], r_targets[done], ids)
+        for t in targets:
+            sel = r_targets[done] == np.float32(t)
+            if sel.any():
+                print(f"[serve] {label}: target {t:.2f}: mean recall "
+                      f"{rec[sel].mean():.4f} over {int(sel.sum())} queries")
+            else:
+                print(f"[serve] {label}: target {t:.2f}: no completed "
+                      f"queries")
+
+    serve_phase("pre-mutation" if mutable is not None else "steady-state")
+
+    if mutable is not None:
+        events = vectors.mutation_stream(
+            ds, ins_pct, del_pct, drift=args.drift,
+            steps=args.mutation_steps, seed=1)
+        mutable.apply(events)
+        print(f"[serve] mutation burst applied: {mutable.num_delta} delta "
+              f"inserts live, {len(mutable.deleted_ids)} tombstones, "
+              f"{mutable.num_live} live vectors")
+        darth.engine = build_engine(**engine_kw)
+        server.set_engine(darth.engine, contents_only=True)
+        serve_phase("post-burst")
+
+        rep = monitor.drift()
+        print(f"[serve] drift check over {rep.num_queries} replayed "
+              f"queries: worst gap {rep.worst_gap:.4f} "
+              f"({'RECALIBRATING' if rep.drifted else 'within threshold'})")
+        if rep.drifted:
+            t0 = time.time()
+            monitor.recalibrate(ds.learn, server=server)
+            print(f"[serve] predictor refit + hot-swap "
+                  f"({time.time()-t0:.1f}s) "
+                  f"mse={darth.trained.metrics['mse']:.5f}")
+            serve_phase("post-recalibration")
+
+        t0 = time.time()
+        mutable.compact()
+        darth.engine = build_engine(**engine_kw)
+        server.set_engine(darth.engine, contents_only=True)
+        print(f"[serve] compaction folded delta into base "
+              f"({time.time()-t0:.1f}s): {mutable.num_live} live vectors, "
+              f"delta empty")
+        serve_phase("post-compaction")
 
     if mesh is not None:
+        # HLO collective-traffic report only — compile, don't execute
+        # (the ground-truth scans above already ran through the cached
+        # sharded path).
         sfn = dist.make_sharded_flat_search(mesh, args.k)
         q_dev, x_dev = jnp.asarray(ds.queries), jnp.asarray(ds.base)
-        compiled = sfn.lower(q_dev, x_dev).compile()  # one compile: run+HLO
-        gt_d, gt_i = compiled(q_dev, x_dev)
+        compiled = sfn.lower(q_dev, x_dev).compile()
         coll = hlo_lib.collective_bytes(compiled.as_text())
         print(f"[serve] sharded ground truth: "
               f"{coll['total']/1e3:.1f} kB collectives "
               f"({coll['num_ops']:.0f} ops) per batch")
-    else:
-        gt_d, gt_i = flat.search(jnp.asarray(ds.queries),
-                                 jnp.asarray(ds.base), args.k)
-    # A step-budget truncation can leave never-admitted queries at None
-    # (DarthServer contract) — report recall over the returned ones.
-    done = np.array([i for i, r in enumerate(results) if r is not None])
-    if stats.truncated or len(done) < len(results):
-        print(f"[serve] step budget hit: {stats.truncated} truncated, "
-              f"{len(results) - len(done)} never admitted")
-    ids = np.stack([results[i][1] for i in done])
-    rec = np.asarray(flat.recall_at_k(jnp.asarray(ids), gt_i[done]))
-    for t in targets:
-        sel = r_targets[done] == np.float32(t)
-        print(f"[serve] target {t:.2f}: mean recall "
-              f"{rec[sel].mean():.4f} over {int(sel.sum())} queries")
 
 
 if __name__ == "__main__":

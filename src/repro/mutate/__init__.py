@@ -1,0 +1,17 @@
+"""Streaming mutable-index subsystem (LSM style): delta tier (ring of
+recent inserts, scanned with the fused l2_topk kernel), tombstones (the
+shard-pad convention: sqnorm +inf / ids -1), compaction back into the
+base index, and drift-triggered predictor recalibration — so DARTH's
+declarative-recall contract survives a mutating collection.
+"""
+from repro.mutate import compact, delta, engine, index, monitor
+from repro.mutate.delta import DeltaTier, make_delta
+from repro.mutate.engine import (MutableIndexView, MutableSearchState,
+                                 mutable_engine)
+from repro.mutate.index import MutableIndex
+from repro.mutate.monitor import DriftReport, RecalibrationMonitor
+
+__all__ = ["compact", "delta", "engine", "index", "monitor",
+           "DeltaTier", "make_delta", "MutableIndexView",
+           "MutableSearchState", "mutable_engine", "MutableIndex",
+           "DriftReport", "RecalibrationMonitor"]

@@ -1,0 +1,168 @@
+"""Compaction: fold the delta tier back into the base index.
+
+The LSM minor-compaction analogue. Global ids are STABLE across
+compaction — surviving base vectors and folded delta vectors keep the
+ids they were assigned at build/insert time, so replay buffers, ground
+truth and served results stay comparable across the fold.
+
+IVF: delta vectors are re-spilled onto the EXISTING centroids with
+`kmeans.assign` (no re-clustering — the coarse quantizer is the part of
+the index worth keeping warm), tombstoned slots are dropped, and the
+bucket store is re-packed with `ivf.pack_buckets`, regrowing cap to the
+new max bucket size. SQ8 storage quantizes the folded delta with the
+base's frozen scale/offset.
+
+HNSW: the id = row invariant is preserved by growing the node dim to
+cover every id ever issued — deleted/overwritten ids become inert rows
+(sqnorm +inf, neighbors -1, the shard-pad convention, unreachable by
+construction). Live delta vectors land at their id rows and are linked
+with `hnsw.insert_nodes` (beam-search candidate pool -> RobustPrune ->
+reverse-edge repair); rows that pointed at a deleted node splice in
+that node's own neighbor list before re-pruning, so the deleted node's
+"highway" role is repaired rather than severed.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.index import hnsw as hnsw_lib
+from repro.index import ivf as ivf_lib
+from repro.index import kmeans as kmeans_lib
+
+
+def compact_ivf(index: ivf_lib.IVFIndex, delta_ids: np.ndarray,
+                delta_vecs: np.ndarray, *, cap_round: int = 8
+                ) -> ivf_lib.IVFIndex:
+    """Fold live delta entries into the bucket store; drop tombstones."""
+    cents = np.asarray(index.centroids)
+    bv = np.asarray(index.bucket_vecs)
+    bi = np.asarray(index.bucket_ids)
+    live = bi >= 0
+    base_store = bv[live]                     # [L, D] stored dtype
+    base_ids = bi[live].astype(np.int32)
+    # live entries keep their bucket assignment (their centroid did not
+    # move); the bucket row of each live slot is its assignment
+    base_assign = np.broadcast_to(
+        np.arange(bi.shape[0], dtype=np.int32)[:, None], bi.shape)[live]
+
+    scale = np.asarray(index.scale)
+    offset = np.asarray(index.offset)
+    delta_vecs = np.asarray(delta_vecs, np.float32).reshape(-1, index.dim)
+    delta_ids = np.asarray(delta_ids, np.int32).reshape(-1)
+    if delta_ids.size:
+        delta_assign = np.asarray(kmeans_lib.assign(
+            jnp.asarray(delta_vecs), jnp.asarray(cents)))  # re-spill
+    else:
+        delta_assign = np.zeros((0,), np.int32)
+
+    if index.quantized:
+        base_deq = base_store.astype(np.float32) * scale + offset
+        delta_store, delta_deq = ivf_lib.quantize_sq8(delta_vecs, scale,
+                                                      offset)
+    else:
+        base_deq = base_store
+        delta_store, delta_deq = delta_vecs, delta_vecs
+
+    x_store = np.concatenate([base_store, delta_store], axis=0)
+    x_deq = np.concatenate([base_deq, delta_deq], axis=0)
+    ids = np.concatenate([base_ids, delta_ids])
+    assign = np.concatenate([base_assign, delta_assign]).astype(np.int64)
+    bucket_vecs, bucket_ids, bucket_sqnorm, sizes = ivf_lib.pack_buckets(
+        x_store, x_deq, ids, assign, index.nlist, cap_round=cap_round)
+    return ivf_lib.IVFIndex(
+        centroids=index.centroids,
+        bucket_vecs=jnp.asarray(bucket_vecs),
+        bucket_ids=jnp.asarray(bucket_ids),
+        bucket_sqnorm=jnp.asarray(bucket_sqnorm),
+        bucket_sizes=jnp.asarray(sizes),
+        scale=index.scale,
+        offset=index.offset,
+    )
+
+
+def compact_hnsw(index: hnsw_lib.HNSWIndex, delta_ids: np.ndarray,
+                 delta_vecs: np.ndarray, next_id: int, *,
+                 ef_construction: int = 64, alpha: float = 1.2,
+                 chunk: int = 1024, seed: int = 0) -> hnsw_lib.HNSWIndex:
+    """Grow the graph to `next_id` rows, repair deletions, link delta."""
+    x = np.asarray(index.vectors)
+    sq = np.asarray(index.sqnorm)
+    nbr = np.asarray(index.neighbors)
+    n_old, d = x.shape
+    m = nbr.shape[1]
+    alpha2 = float(alpha) ** 2
+
+    n_new = max(int(next_id), n_old)
+    x2 = np.zeros((n_new, d), np.float32)
+    sq2 = np.full((n_new,), np.inf, np.float32)
+    nbr2 = np.full((n_new, m), -1, np.int32)
+    x2[:n_old] = x
+    sq2[:n_old] = sq
+    nbr2[:n_old] = nbr
+
+    delta_ids = np.asarray(delta_ids, np.int64).reshape(-1)
+    delta_vecs = np.asarray(delta_vecs, np.float32).reshape(-1, d)
+    x2[delta_ids] = delta_vecs
+    sq2[delta_ids] = (delta_vecs ** 2).sum(axis=1)
+
+    # 1) deletion repair: rows pointing at a dead node splice in that
+    #    node's neighbors (minus dead) and re-prune; dead rows go inert.
+    dead = ~np.isfinite(sq2[:n_old])
+    dead_rows = np.nonzero(dead)[0]
+    if dead_rows.size:
+        dead_mask = np.zeros((n_new,), bool)
+        dead_mask[dead_rows] = True
+        ref = (nbr2 >= 0) & dead_mask[np.maximum(nbr2, 0)]
+        affected = np.nonzero(ref.any(axis=1))[0]
+        affected = affected[~dead_mask[affected]]
+        # chunked: merged lists are m + m*m wide and the re-prune's
+        # pairwise block is quadratic in that width
+        for lo in range(0, affected.size, 256):
+            aff = affected[lo:lo + 256]
+            own = np.where(ref[aff], -1, nbr2[aff])
+            # dead targets' own out-edges, flattened per affected row
+            spliced = np.where(ref[aff, :, None],
+                               nbr2[np.maximum(nbr2[aff], 0)],
+                               -1).reshape(aff.size, -1)
+            merged = np.concatenate([own, spliced], axis=1)
+            merged = np.where(
+                (merged >= 0) & ~dead_mask[np.maximum(merged, 0)],
+                merged, -1)
+            merged = hnsw_lib._dedup_rows_vec(merged)
+            nbr2[aff] = hnsw_lib._prune_rows(x2, aff, merged, m, alpha2)
+        nbr2[dead_rows] = -1
+
+    # 2) routing sample / entry over LIVE, LINKED nodes only (new rows
+    #    are not linked yet, so they cannot seed the link searches).
+    rng = np.random.default_rng(seed)
+    old_live = np.nonzero(np.isfinite(sq2[:n_old]))[0]
+    if old_live.size == 0:
+        raise ValueError("compaction needs at least one live base node "
+                         "to seed incremental linking")
+    r = int(min(8192, max(64, n_new // 64)))
+    route_link = rng.choice(old_live, size=min(r, old_live.size),
+                            replace=False).astype(np.int32)
+    entry_link = int(old_live[np.argmin(
+        ((x2[old_live] - x2[old_live].mean(0)) ** 2).sum(1))])
+
+    grown = hnsw_lib.HNSWIndex(
+        vectors=jnp.asarray(x2), sqnorm=jnp.asarray(sq2),
+        neighbors=jnp.asarray(nbr2),
+        entry=jnp.asarray(entry_link, jnp.int32),
+        route_ids=jnp.asarray(route_link))
+    grown = hnsw_lib.insert_nodes(grown, delta_ids,
+                                  ef_construction=ef_construction,
+                                  alpha=alpha, chunk=chunk)
+
+    # 3) final routing sample drawn over ALL live nodes (incl. new ones,
+    #    now linked) so routing covers the folded distribution.
+    live = np.nonzero(np.isfinite(sq2))[0]
+    route_ids = rng.choice(live, size=min(r, live.size),
+                           replace=False).astype(np.int32)
+    entry = int(live[np.argmin(((x2[live] - x2[live].mean(0)) ** 2).sum(1))])
+    return dataclasses.replace(
+        grown, entry=jnp.asarray(entry, jnp.int32),
+        route_ids=jnp.asarray(route_ids))

@@ -1,0 +1,295 @@
+"""MutableIndex: host-side orchestrator for a streaming mutable index.
+
+Wraps a built IVF or HNSW index with a delta ring (mutate.delta) and
+tombstone bookkeeping, exposing insert / delete / compact plus a
+`view()` pytree the mutable Engine carries as its `.index`. Global ids
+are assigned monotonically (base ids first, inserts continue from
+max(base id) + 1) and never reused, so results, replay buffers and
+ground truth stay comparable across mutations AND compactions.
+
+Tombstones follow the repo-wide pad convention on-device — a deleted
+slot keeps sqnorm +inf / ids -1, exactly like shard padding, so it can
+never enter a top-k through any engine (single-device or sharded) —
+while a host-side set tracks which ids are dead for compaction and
+ground-truth recomputation. Device updates are fixed-shape scatters
+(padded to a round length, out-of-bounds rows dropped), so streaming
+deletes never retrace the serving chunks.
+
+The canonical base index is kept UNPLACED; sharded serving places a
+snapshot per burst (`dist.place_index(mutable.base, mesh)`), with the
+delta ring replicated alongside (mutate's sharding contract: delta
+replicated, tombstones travel row-sharded inside the base arrays).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.index import hnsw as hnsw_lib
+from repro.index import ivf as ivf_lib
+from repro.mutate import compact as compact_lib
+from repro.mutate import delta as delta_lib
+from repro.mutate.engine import MutableIndexView
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+@jax.jit
+def _mask_ivf_slots(index: ivf_lib.IVFIndex, b_idx: jax.Array,
+                    s_idx: jax.Array) -> ivf_lib.IVFIndex:
+    """Tombstone bucket slots (ids -1 / sqnorm +inf) and decrement the
+    live-population counters; padded entries (bucket -1) route out of
+    bounds and are dropped by the scatter."""
+    nb = index.bucket_ids.shape[0]
+    b = jnp.where(b_idx >= 0, b_idx, nb)
+    return dataclasses.replace(
+        index,
+        bucket_ids=index.bucket_ids.at[b, s_idx].set(-1),
+        bucket_sqnorm=index.bucket_sqnorm.at[b, s_idx].set(jnp.inf),
+        bucket_sizes=index.bucket_sizes.at[b].add(-1))
+
+
+@jax.jit
+def _mask_hnsw_rows(index: hnsw_lib.HNSWIndex,
+                    rows: jax.Array) -> hnsw_lib.HNSWIndex:
+    """Tombstone graph rows: sqnorm +inf makes every distance to the row
+    +inf, so it can never enter a frontier or result set (the row stays
+    allocated — id = row is an invariant)."""
+    r = jnp.where(rows >= 0, rows, index.sqnorm.shape[0])
+    return dataclasses.replace(
+        index, sqnorm=index.sqnorm.at[r].set(jnp.inf))
+
+
+class MutableIndex:
+    """Streaming mutable ANN index = base + delta ring + tombstones."""
+
+    def __init__(self, base: Any, *, capacity: int = 1024):
+        self.base = base
+        self.capacity = int(capacity)
+        self.kind = "ivf" if hasattr(base, "centroids") else "hnsw"
+        self.delta = delta_lib.make_delta(self.capacity, self.dim)
+        # Mutation epoch: bumped by every insert/delete/compact. The
+        # drift monitor stamps replay entries with it so observations
+        # served against an older live set never contaminate a drift
+        # check (their recall gap is irreducible by a predictor refit).
+        self.version = 0
+        self._cursor = 0
+        self._live_delta = 0
+        self._deleted: set = set()
+        self._delta_slot: dict = {}   # live delta id -> ring slot
+        self._slot_id: dict = {}      # ring slot -> id (live or dead)
+        if self.kind == "ivf":
+            bi = np.asarray(jax.device_get(base.bucket_ids))
+            self._next_id = int(bi.max()) + 1 if (bi >= 0).any() else 0
+            self._bucket_of = np.full((self._next_id,), -1, np.int32)
+            self._slot_of = np.full((self._next_id,), -1, np.int32)
+            b, s = np.nonzero(bi >= 0)
+            self._bucket_of[bi[b, s]] = b
+            self._slot_of[bi[b, s]] = s
+        else:
+            self._next_id = int(base.num_vectors)
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def dim(self) -> int:
+        return (self.base.dim if self.kind == "ivf"
+                else self.base.vectors.shape[1])
+
+    @property
+    def num_live(self) -> int:
+        # every id ever issued is live unless tombstoned (ring placement
+        # never overwrites a live slot)
+        return self._next_id - len(self._deleted)
+
+    @property
+    def num_delta(self) -> int:
+        return self._live_delta
+
+    @property
+    def deleted_ids(self) -> np.ndarray:
+        return np.fromiter(self._deleted, np.int64,
+                           count=len(self._deleted))
+
+    def view(self) -> MutableIndexView:
+        return MutableIndexView(base=self.base, delta=self.delta)
+
+    # -- mutations ---------------------------------------------------------
+    def insert(self, vecs: np.ndarray) -> np.ndarray:
+        """Append vectors to the delta ring; returns their global ids."""
+        vecs = np.asarray(vecs, np.float32).reshape(-1, self.dim)
+        m = vecs.shape[0]
+        if m == 0:
+            return np.zeros((0,), np.int64)
+        if self._live_delta + m > self.capacity:
+            raise RuntimeError(
+                f"delta tier full ({self._live_delta} live + {m} new > "
+                f"capacity {self.capacity}); call compact() first")
+        ids = np.arange(self._next_id, self._next_id + m, dtype=np.int64)
+        self._next_id += m
+        # Ring placement over FREE slots only (empty or tombstoned),
+        # scanning from the cursor: interleaved deletes leave dead slots
+        # behind the cursor, and a blind cursor+arange walk could land on
+        # a LIVE slot and silently drop its vector.
+        live_slots = np.zeros((self.capacity,), bool)
+        occupied = np.fromiter(self._delta_slot.values(), np.int64,
+                               count=len(self._delta_slot))
+        live_slots[occupied] = True
+        order = (self._cursor + np.arange(self.capacity)) % self.capacity
+        slots = order[~live_slots[order]][:m]
+        self._cursor = int((slots[-1] + 1) % self.capacity)
+        for s, i in zip(slots, ids):
+            old = self._slot_id.get(int(s))
+            if old is not None:            # ring reuse of a dead slot
+                self._delta_slot.pop(old, None)
+            self._slot_id[int(s)] = int(i)
+            self._delta_slot[int(i)] = int(s)
+        pad = _round_up(m, 64) - m
+        self.delta = delta_lib.write(
+            self.delta,
+            jnp.asarray(np.concatenate([slots, np.full(pad, -1)])
+                        .astype(np.int32)),
+            jnp.asarray(np.concatenate([vecs, np.zeros((pad, self.dim),
+                                                       np.float32)])),
+            jnp.asarray(np.concatenate([ids, np.full(pad, -1)])
+                        .astype(np.int32)))
+        self._live_delta += m
+        self.version += 1
+        return ids
+
+    def delete(self, ids: Iterable[int]) -> int:
+        """Tombstone ids (unknown / already-deleted ids are no-ops).
+        Returns the number of ids actually deleted."""
+        delta_slots: List[int] = []
+        ivf_b: List[int] = []
+        ivf_s: List[int] = []
+        hnsw_rows: List[int] = []
+        count = 0
+        for i in np.unique(np.asarray(list(ids), np.int64)):
+            i = int(i)
+            if i < 0 or i >= self._next_id or i in self._deleted:
+                continue
+            slot = self._delta_slot.pop(i, None)
+            if slot is not None:
+                delta_slots.append(slot)
+                self._live_delta -= 1
+            elif self.kind == "ivf":
+                if i >= self._bucket_of.shape[0] or self._bucket_of[i] < 0:
+                    continue               # folded id moved by compaction?
+                ivf_b.append(int(self._bucket_of[i]))
+                ivf_s.append(int(self._slot_of[i]))
+                self._bucket_of[i] = -1
+                self._slot_of[i] = -1
+            else:
+                hnsw_rows.append(i)
+            self._deleted.add(i)
+            count += 1
+
+        def padded(vals: List[int]) -> np.ndarray:
+            out = np.full((_round_up(max(len(vals), 1), 64),), -1, np.int32)
+            out[:len(vals)] = vals
+            return out
+
+        if delta_slots:
+            self.delta = delta_lib.tombstone(self.delta,
+                                             jnp.asarray(padded(delta_slots)))
+        if ivf_b:
+            self.base = _mask_ivf_slots(self.base,
+                                        jnp.asarray(padded(ivf_b)),
+                                        jnp.asarray(padded(ivf_s)))
+        if hnsw_rows:
+            self.base = _mask_hnsw_rows(self.base,
+                                        jnp.asarray(padded(hnsw_rows)))
+        if count:
+            self.version += 1
+        return count
+
+    def apply(self, events) -> None:
+        """Apply a data.vectors.mutation_stream schedule in order."""
+        for ev in events:
+            if ev.kind == "insert":
+                self.insert(ev.vecs)
+            elif ev.kind == "delete":
+                self.delete(ev.ids)
+            else:
+                raise ValueError(f"unknown mutation kind {ev.kind!r}")
+
+    # -- live-set extraction -----------------------------------------------
+    def _delta_live(self) -> Tuple[np.ndarray, np.ndarray]:
+        ids = np.asarray(jax.device_get(self.delta.ids))
+        vecs = np.asarray(jax.device_get(self.delta.vecs))
+        live = ids >= 0
+        return ids[live].astype(np.int64), vecs[live]
+
+    def live_vectors(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(ids i64[L], vecs f32[L, D]) of every live vector, base +
+        delta — the ground-truth universe for drift checks and refits.
+        IVF SQ8 returns dequantized vectors (what search measures)."""
+        if self.kind == "ivf":
+            bi = np.asarray(jax.device_get(self.base.bucket_ids))
+            bv = np.asarray(jax.device_get(self.base.bucket_vecs))
+            live = bi >= 0
+            vecs = bv[live].astype(np.float32)
+            if self.base.quantized:
+                vecs = (vecs * np.asarray(self.base.scale)
+                        + np.asarray(self.base.offset))
+            ids = bi[live].astype(np.int64)
+        else:
+            sq = np.asarray(jax.device_get(self.base.sqnorm))
+            rows = np.nonzero(np.isfinite(sq))[0]
+            vecs = np.asarray(jax.device_get(self.base.vectors))[rows]
+            ids = rows.astype(np.int64)
+        d_ids, d_vecs = self._delta_live()
+        return (np.concatenate([ids, d_ids]),
+                np.concatenate([vecs, d_vecs], axis=0))
+
+    def live_ground_truth(self, q: np.ndarray, k: int, *,
+                          mesh=None) -> np.ndarray:
+        """Exact top-k over the live base+delta set as GLOBAL ids
+        (i32[B, k], -1 when fewer than k live vectors). The one
+        definition of "fresh ground truth under mutation" shared by the
+        drift monitor, the launcher and the benchmarks. With `mesh`,
+        the scan row-shards over it (training.ground_truth)."""
+        from repro.core import training as training_lib
+
+        live_ids, live_vecs = self.live_vectors()
+        _, rows = training_lib.ground_truth(
+            jnp.asarray(np.asarray(q, np.float32)),
+            jnp.asarray(live_vecs), k, mesh=mesh)
+        rows = np.asarray(rows)
+        return np.where(rows >= 0, live_ids[np.maximum(rows, 0)], -1
+                        ).astype(np.int32)
+
+    # -- compaction --------------------------------------------------------
+    def compact(self, *, cap_round: int = 8, ef_construction: int = 64,
+                alpha: float = 1.2, chunk: int = 1024,
+                seed: int = 0) -> None:
+        """Fold the delta into the base and empty the ring. The base
+        object is REPLACED (shapes may grow); rebuild engines/views from
+        `self.base` / `self.view()` afterwards."""
+        d_ids, d_vecs = self._delta_live()
+        if self.kind == "ivf":
+            self.base = compact_lib.compact_ivf(
+                self.base, d_ids, d_vecs, cap_round=cap_round)
+            bi = np.asarray(jax.device_get(self.base.bucket_ids))
+            self._bucket_of = np.full((self._next_id,), -1, np.int32)
+            self._slot_of = np.full((self._next_id,), -1, np.int32)
+            b, s = np.nonzero(bi >= 0)
+            self._bucket_of[bi[b, s]] = b
+            self._slot_of[bi[b, s]] = s
+        else:
+            self.base = compact_lib.compact_hnsw(
+                self.base, d_ids, d_vecs, self._next_id,
+                ef_construction=ef_construction, alpha=alpha,
+                chunk=chunk, seed=seed)
+        self.delta = delta_lib.make_delta(self.capacity, self.dim)
+        self._cursor = 0
+        self._live_delta = 0
+        self._delta_slot.clear()
+        self._slot_id.clear()
+        self.version += 1

@@ -81,8 +81,20 @@ class DarthServer:
         # the activation constraints inside any model-side feature code.
         self.mesh = mesh
 
-        eng = engine
-        pred = predictor
+        self._build_chunks()
+
+    def _build_chunks(self) -> None:
+        """(Re)build the jitted chunk functions around the current
+        engine + predictor (called from __init__ and from the hot-swap
+        paths; a rebuild recompiles, so predictor swaps pay one compile
+        — the drift-recalibration cadence makes that negligible)."""
+        # Capture the engine WITHOUT its index: the index is threaded
+        # through the chunks as an argument anyway, and a captured copy
+        # would pin the build-time index buffers in device memory for
+        # the server's lifetime across contents_only engine swaps.
+        eng = self.engine._replace(index=None)
+        pred = self.predictor
+        steps_per_sync = self.steps_per_sync
 
         # The engine's index enters these outer jits as an ARGUMENT
         # (re-bound via _replace so the protocol's init/step see the
@@ -117,11 +129,56 @@ class DarthServer:
         self._init_chunk = init_chunk
         self._splice = splice
 
+    # -- hot swap (streaming mutations / drift recalibration) --------------
+    def set_predictor(self, predictor: RecallPredictor) -> None:
+        """Swap a refit recall predictor into the running server (the
+        drift monitor's hot-swap path). Rebuilds the chunk jits."""
+        self.predictor = predictor
+        self._build_chunks()
+
+    def set_engine(self, engine: engines_lib.Engine, *,
+                   contents_only: bool = False) -> None:
+        """Swap an updated engine in (delta writes, tombstones, or a
+        compacted base).
+
+        contents_only=True asserts that ONLY the index contents changed
+        (same engine family and constructor params — k, nprobe/ef, ...):
+        the existing chunk jits are kept, because the index crosses them
+        as an argument and the old closures remain valid; no recompile.
+        The flag is explicit because name/k/max_steps cannot distinguish
+        e.g. two hnsw engines with different ef but an identical
+        explicit max_steps — defaulting to reuse would silently keep
+        serving with the old params. The default rebuilds."""
+        if contents_only and (engine.name != self.engine.name
+                              or engine.k != self.engine.k
+                              or engine.max_steps != self.engine.max_steps):
+            raise ValueError(
+                f"contents_only swap changed the engine protocol: "
+                f"{self.engine.name}/k={self.engine.k}/"
+                f"max_steps={self.engine.max_steps} -> {engine.name}/"
+                f"k={engine.k}/max_steps={engine.max_steps}")
+        self.engine = engine
+        if not contents_only:
+            self._build_chunks()
+
     def serve(self, queries: np.ndarray, r_targets: np.ndarray,
               max_engine_steps: int = 100_000
               ) -> Tuple[List[Optional[Tuple[np.ndarray, np.ndarray]]],
                          ServeStats]:
         """Process all queries; returns per-query (dists, ids) + stats."""
+        from repro.core import api as api_lib
+
+        queries = np.asarray(queries, np.float32)
+        if queries.ndim != 2:
+            raise ValueError(
+                f"queries must be [N, D], got shape {queries.shape}")
+        r_targets = np.asarray(r_targets, np.float32)
+        if r_targets.shape != (queries.shape[0],):
+            raise ValueError(
+                f"r_targets shape {r_targets.shape} does not match the "
+                f"{queries.shape[0]} queries: the server needs one "
+                f"declared recall target per query")
+        r_targets = api_lib.validate_targets(r_targets, queries.shape[0])
         ctx = (meshctx.use_mesh(self.mesh) if self.mesh is not None
                else contextlib.nullcontext())
         with ctx:

@@ -55,6 +55,30 @@ def test_dists_to_target():
     np.testing.assert_allclose(d, [30.0, 20.0])
 
 
+# --- input validation -------------------------------------------------------
+
+def test_validate_targets_accepts_scalar_and_batch_vector():
+    assert api.validate_targets(0.9, 8).shape == ()
+    assert api.validate_targets(np.full((8,), 0.9), 8).shape == (8,)
+
+
+@pytest.mark.parametrize("bad", [
+    np.full((7,), 0.9),          # wrong length (stale batch size)
+    np.full((8, 1), 0.9),        # 2-D: would broadcast garbage
+    np.zeros((0,)),              # empty
+])
+def test_validate_targets_rejects_bad_shapes(bad):
+    with pytest.raises(ValueError, match="r_target shape|finite"):
+        api.validate_targets(bad, 8)
+
+
+@pytest.mark.parametrize("bad", [0.0, -0.5, 1.2, float("nan"),
+                                 float("inf")])
+def test_validate_targets_rejects_out_of_range(bad):
+    with pytest.raises(ValueError, match=r"in \(0, 1\]"):
+        api.validate_targets(bad, 4)
+
+
 # --- end-to-end declarative recall ------------------------------------------
 
 @pytest.fixture(scope="module")
@@ -112,6 +136,24 @@ def test_budget_search_respects_budget(trained_ivf_darth):
     nd = np.asarray(inner.ndis)
     cap = np.asarray(index.bucket_sizes).max()
     assert (nd <= 400 + cap).all()   # can overshoot by at most one probe
+
+
+def test_darth_search_rejects_malformed_targets(trained_ivf_darth):
+    """Regression: a shape-mismatched per-query r_target (e.g. carried
+    over from a differently sized batch) or an out-of-range target must
+    raise, not broadcast garbage into the termination test."""
+    ds, index, d = trained_ivf_darth
+    q = jnp.asarray(ds.queries[:8])
+    with pytest.raises(ValueError, match="does not match query batch"):
+        d.search(q, np.full((7,), 0.9, np.float32))
+    with pytest.raises(ValueError, match="does not match query batch"):
+        d.search(q, np.full((8, 1), 0.9, np.float32))
+    with pytest.raises(ValueError, match=r"in \(0, 1\]"):
+        d.search(q, 1.5)
+    with pytest.raises(ValueError, match=r"in \(0, 1\]"):
+        d.search(q, np.asarray([0.9] * 7 + [np.nan], np.float32))
+    dd, ii, _ = d.search(q, np.full((8,), 0.9, np.float32))  # valid
+    assert ii.shape == (8, 10)
 
 
 def test_npred_counts_reasonable(trained_ivf_darth):

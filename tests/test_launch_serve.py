@@ -1,0 +1,55 @@
+"""Tier-1 smoke coverage for the serving launcher: drives main()
+end-to-end on tiny configs for BOTH engine families, including the
+--mutations streaming workload (burst -> drift check -> forced
+recalibration hot-swap -> compaction)."""
+import sys
+
+import pytest
+
+from repro.launch import serve as serve_launch
+
+
+def _run_main(monkeypatch, capsys, argv):
+    monkeypatch.setattr(sys, "argv", ["serve"] + argv)
+    serve_launch.main()
+    return capsys.readouterr().out
+
+
+def test_serve_main_ivf_with_mutations(monkeypatch, capsys):
+    out = _run_main(monkeypatch, capsys, [
+        "--n", "1500", "--dim", "16", "--queries", "32", "--learn", "192",
+        "--nlist", "12", "--slots", "8", "--targets", "0.8,0.9",
+        "--mutations", "0.2,0.1", "--drift", "0.3",
+        # threshold -1 forces the recalibration/hot-swap phase even when
+        # the tiny workload's recall survives the burst
+        "--recal-threshold", "-1",
+    ])
+    assert "ivf index built: 1500 vecs" in out
+    assert "pre-mutation: target 0.80: mean recall" in out
+    assert "mutation burst applied: 300 delta inserts live, 150 tombstones" \
+        in out
+    assert "post-burst: target" in out
+    assert "RECALIBRATING" in out
+    assert "predictor refit + hot-swap" in out
+    assert "post-recalibration: target" in out
+    assert "compaction folded delta into base" in out
+    assert "post-compaction: target 0.90: mean recall" in out
+
+
+def test_serve_main_hnsw(monkeypatch, capsys):
+    out = _run_main(monkeypatch, capsys, [
+        "--n", "900", "--dim", "16", "--queries", "24", "--learn", "128",
+        "--engine", "hnsw", "--m", "8", "--ef", "32", "--slots", "8",
+        "--targets", "0.8",
+    ])
+    assert "hnsw index built: 900 vecs" in out
+    assert "DARTH fit" in out
+    assert "steady-state: target 0.80: mean recall" in out
+
+
+def test_serve_main_rejects_bad_targets(monkeypatch, capsys):
+    with pytest.raises(ValueError, match=r"in \(0, 1\]"):
+        _run_main(monkeypatch, capsys, [
+            "--n", "600", "--dim", "8", "--queries", "8", "--learn", "64",
+            "--nlist", "8", "--slots", "4", "--targets", "1.7",
+        ])

@@ -1,0 +1,385 @@
+"""repro.mutate: delta tier + tombstones + compaction + recalibration.
+
+Covers the streaming-conformance contract (ISSUE 4): after a burst of
+>= 20% inserts + >= 10% deletes, DARTH search through mutable_engine
+meets declared recall targets {0.80, 0.90, 0.95} within 0.03 against
+fresh base+delta ground truth for BOTH engine families, tombstoned ids
+are never returned, and post-compaction search through the wrapper
+matches a from-scratch search over the compacted index exactly."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import api, darth_search, engines
+from repro.data import vectors
+from repro.index import flat, hnsw, ivf
+from repro import mutate
+
+K = 10
+TARGETS = (0.80, 0.90, 0.95)
+TOLERANCE = 0.03
+
+
+def _live_gt(mut, q, k=K):
+    live_ids, live_vecs = mut.live_vectors()
+    _, rows = flat.search(jnp.asarray(q), jnp.asarray(live_vecs), k)
+    rows = np.asarray(rows)
+    return np.where(rows >= 0, live_ids[np.maximum(rows, 0)], -1
+                    ).astype(np.int32)
+
+
+@pytest.fixture(scope="module")
+def small_ds():
+    return vectors.make_dataset(n=2000, d=16, num_learn=128,
+                                num_queries=64, clusters=16,
+                                cluster_std=1.0, seed=0)
+
+
+# --- delta tier -------------------------------------------------------------
+
+def test_delta_ring_write_scan_tombstone():
+    delta = mutate.make_delta(8, 4)
+    assert int(mutate.delta.live_count(delta)) == 0
+    vecs = np.eye(4, dtype=np.float32)[:3] * 2.0
+    delta = mutate.delta.write(delta, jnp.asarray([0, 1, 2], jnp.int32),
+                               jnp.asarray(vecs),
+                               jnp.asarray([100, 101, 102], jnp.int32))
+    assert int(mutate.delta.live_count(delta)) == 3
+    q = jnp.asarray(vecs[:1])
+    d, g, live, nins = mutate.delta.delta_topk(delta, q, 3)
+    assert int(live) == 3
+    assert np.asarray(g)[0, 0] == 100
+    assert np.asarray(d)[0, 0] == pytest.approx(0.0)
+    # padded slot -1 in the write is dropped, not scattered to slot 0
+    delta2 = mutate.delta.write(delta, jnp.asarray([-1], jnp.int32),
+                                jnp.zeros((1, 4), jnp.float32),
+                                jnp.asarray([-1], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(delta2.ids),
+                                  np.asarray(delta.ids))
+    # tombstone: masked back to the pad convention
+    delta = mutate.delta.tombstone(delta, jnp.asarray([0, -1], jnp.int32))
+    assert int(mutate.delta.live_count(delta)) == 2
+    d, g, _, _ = mutate.delta.delta_topk(delta, q, 3)
+    assert 100 not in np.asarray(g)
+
+
+def test_delta_capacity_guard(small_ds):
+    index = ivf.build(small_ds.base[:500], nlist=8, seed=0)
+    mut = mutate.MutableIndex(index, capacity=16)
+    mut.insert(small_ds.queries[:10])
+    with pytest.raises(RuntimeError, match="delta tier full"):
+        mut.insert(small_ds.queries[:10])
+    # deleting frees capacity (ring reuses tombstoned slots)
+    ids = np.arange(500, 510)
+    assert mut.delete(ids) == 10
+    mut.insert(small_ds.queries[:10])
+    assert mut.num_delta == 10
+
+
+def test_ring_reuse_never_overwrites_live_slots(small_ds):
+    """Regression: with tombstoned slots interleaved behind the cursor,
+    a blind cursor walk could land on a LIVE slot and silently drop its
+    vector; placement must skip live slots."""
+    index = ivf.build(small_ds.base[:500], nlist=8, seed=0)
+    mut = mutate.MutableIndex(index, capacity=4)
+    ids = mut.insert(small_ds.queries[:4])        # ids 500..503, full ring
+    mut.delete([int(ids[0])])                     # slot 0 dead
+    (id4,) = mut.insert(small_ds.queries[4:5])    # reuses slot 0
+    mut.delete([int(ids[2])])                     # slot 2 dead
+    (id5,) = mut.insert(small_ds.queries[5:6])    # must land on slot 2,
+    #                                               NOT live slot 1
+    live = set(np.asarray(mut.delta.ids).tolist()) - {-1}
+    expect = {int(ids[1]), int(ids[3]), int(id4), int(id5)}
+    assert live == expect
+    assert mut.num_delta == 4
+
+
+def test_mutable_engine_requires_capacity_ge_k(small_ds):
+    index = ivf.build(small_ds.base[:500], nlist=8, seed=0)
+    eng = engines.ivf_engine(index, k=10, nprobe=4)
+    with pytest.raises(ValueError, match="delta capacity"):
+        engines.mutable_engine(eng, mutate.make_delta(4, 16))
+
+
+# --- empty-delta parity (the wrapper must be invisible) ---------------------
+
+def test_empty_delta_parity_ivf(small_ds):
+    ds = small_ds
+    index = ivf.build(ds.base, nlist=16, seed=0)
+    mut = mutate.MutableIndex(index, capacity=64)
+    meng = engines.mutable_engine(engines.ivf_engine(mut.base, k=5,
+                                                     nprobe=6), mut.delta)
+    q = jnp.asarray(ds.queries[:16])
+    d0, i0, s0 = ivf.search(index, q, k=5, nprobe=6)
+    ws = darth_search.plain_search(meng, q)
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(meng.topk_d(ws)),
+                               atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(i0),
+                                  np.asarray(meng.topk_i(ws)))
+    np.testing.assert_array_equal(np.asarray(s0.ndis), np.asarray(ws.ndis))
+    np.testing.assert_array_equal(np.asarray(s0.ninserts),
+                                  np.asarray(ws.ninserts))
+
+
+def test_empty_delta_parity_hnsw(small_ds):
+    ds = small_ds
+    index = hnsw.build(ds.base, m=8, passes=1, ef_construction=32, seed=0)
+    mut = mutate.MutableIndex(index, capacity=64)
+    meng = engines.mutable_engine(engines.hnsw_engine(mut.base, k=5,
+                                                      ef=24), mut.delta)
+    q = jnp.asarray(ds.queries[:16])
+    d0, i0, s0 = hnsw.search(index, q, k=5, ef=24)
+    ws = darth_search.plain_search(meng, q)
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(meng.topk_d(ws)),
+                               atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(i0),
+                                  np.asarray(meng.topk_i(ws)))
+    np.testing.assert_array_equal(np.asarray(s0.ndis), np.asarray(ws.ndis))
+    np.testing.assert_array_equal(np.asarray(s0.ninserts),
+                                  np.asarray(ws.ninserts))
+
+
+# --- inserts / deletes ------------------------------------------------------
+
+def test_insert_found_delete_masked_ivf(small_ds):
+    ds = small_ds
+    index = ivf.build(ds.base, nlist=16, seed=0)
+    mut = mutate.MutableIndex(index, capacity=128)
+    new = ds.queries[:8]
+    ids = mut.insert(new)
+    assert ids.tolist() == list(range(2000, 2008))
+    meng = engines.mutable_engine(
+        engines.ivf_engine(mut.base, k=5, nprobe=16), mut.delta)
+    ws = darth_search.plain_search(meng, jnp.asarray(new))
+    ii = np.asarray(meng.topk_i(ws))
+    # an inserted vector is its own exact nearest neighbor
+    np.testing.assert_array_equal(ii[:, 0], ids)
+
+    # delete base NNs + one delta insert: none may ever surface again
+    _, gt = flat.search(jnp.asarray(ds.queries), jnp.asarray(ds.base), 5)
+    kill = np.unique(np.asarray(gt)[:, 0])[:40].tolist() + [int(ids[0])]
+    assert mut.delete(kill) == len(kill)
+    assert mut.delete(kill) == 0          # idempotent
+    meng = engines.mutable_engine(
+        engines.ivf_engine(mut.base, k=5, nprobe=16), mut.delta)
+    ws = darth_search.plain_search(meng, jnp.asarray(ds.queries))
+    found = set(np.asarray(meng.topk_i(ws)).ravel().tolist())
+    assert not (found & set(kill))
+    # recall vs the live universe stays exact (full probe = brute force)
+    gt_live = _live_gt(mut, ds.queries, k=5)
+    rec = np.asarray(flat.recall_at_k(
+        jnp.asarray(np.asarray(meng.topk_i(ws))), jnp.asarray(gt_live)))
+    assert rec.mean() == pytest.approx(1.0)
+
+
+def test_insert_found_delete_masked_hnsw(small_ds):
+    ds = small_ds
+    index = hnsw.build(ds.base, m=8, passes=1, ef_construction=32, seed=0)
+    mut = mutate.MutableIndex(index, capacity=128)
+    new = ds.queries[:8]
+    ids = mut.insert(new)
+    meng = engines.mutable_engine(
+        engines.hnsw_engine(mut.base, k=5, ef=48), mut.delta)
+    ws = darth_search.plain_search(meng, jnp.asarray(new))
+    ii = np.asarray(meng.topk_i(ws))
+    np.testing.assert_array_equal(ii[:, 0], ids)
+
+    _, gt = flat.search(jnp.asarray(ds.queries), jnp.asarray(ds.base), 5)
+    kill = np.unique(np.asarray(gt)[:, 0])[:40].tolist() + [int(ids[0])]
+    assert mut.delete(kill) == len(kill)
+    meng = engines.mutable_engine(
+        engines.hnsw_engine(mut.base, k=5, ef=48), mut.delta)
+    ws = darth_search.plain_search(meng, jnp.asarray(ds.queries))
+    found = set(np.asarray(meng.topk_i(ws)).ravel().tolist())
+    assert not (found & set(kill))
+
+
+# --- compaction parity ------------------------------------------------------
+
+def _burst(mut, ds, seed=3):
+    events = vectors.mutation_stream(ds, insert_pct=0.2, delete_pct=0.1,
+                                     drift=0.3, steps=4, seed=seed)
+    mut.apply(events)
+    return events
+
+
+@pytest.mark.parametrize("quantize", [False, True])
+def test_compaction_parity_ivf(small_ds, quantize):
+    ds = small_ds
+    index = ivf.build(ds.base, nlist=16, seed=0, quantize=quantize)
+    mut = mutate.MutableIndex(index, capacity=512)
+    _burst(mut, ds)
+    dead = set(int(i) for i in mut.deleted_ids)
+    mut.compact()
+    assert mut.num_delta == 0
+    # compacted storage holds exactly the live set, under stable ids
+    bi = np.asarray(mut.base.bucket_ids)
+    stored = set(bi[bi >= 0].tolist())
+    live_ids, _ = mut.live_vectors()
+    assert stored == set(int(i) for i in live_ids)
+    assert not (stored & dead)
+    # post-compaction search through the wrapper == from-scratch search
+    # over the compacted index (exact: topk_d / topk_i / ndis)
+    q = jnp.asarray(ds.queries[:32])
+    d0, i0, s0 = ivf.search(mut.base, q, k=K, nprobe=16)
+    meng = engines.mutable_engine(
+        engines.ivf_engine(mut.base, k=K, nprobe=16), mut.delta)
+    ws = darth_search.plain_search(meng, q)
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(meng.topk_d(ws)),
+                               atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(i0),
+                                  np.asarray(meng.topk_i(ws)))
+    np.testing.assert_array_equal(np.asarray(s0.ndis), np.asarray(ws.ndis))
+
+
+def test_compaction_parity_hnsw(small_ds):
+    ds = small_ds
+    index = hnsw.build(ds.base, m=8, passes=1, ef_construction=32, seed=0)
+    mut = mutate.MutableIndex(index, capacity=512)
+    _burst(mut, ds)
+    dead = set(int(i) for i in mut.deleted_ids)
+    mut.compact(ef_construction=48, seed=1)
+    assert mut.num_delta == 0
+    # dead rows are inert (pad convention) and never referenced
+    sq = np.asarray(mut.base.sqnorm)
+    nbr = np.asarray(mut.base.neighbors)
+    rows = np.fromiter(dead, np.int64)
+    assert np.isposinf(sq[rows]).all()
+    assert (nbr[rows] == -1).all()
+    live_edges = nbr[np.isfinite(sq)]
+    assert not (set(live_edges[live_edges >= 0].tolist()) & dead)
+    assert not (set(np.asarray(mut.base.route_ids).tolist()) & dead)
+
+    q = jnp.asarray(ds.queries[:32])
+    d0, i0, s0 = hnsw.search(mut.base, q, k=K, ef=64)
+    meng = engines.mutable_engine(
+        engines.hnsw_engine(mut.base, k=K, ef=64), mut.delta)
+    ws = darth_search.plain_search(meng, q)
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(meng.topk_d(ws)),
+                               atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(i0),
+                                  np.asarray(meng.topk_i(ws)))
+    np.testing.assert_array_equal(np.asarray(s0.ndis), np.asarray(ws.ndis))
+
+
+# --- monitor ----------------------------------------------------------------
+
+def test_monitor_drift_detection(small_ds):
+    ds = small_ds
+    index = ivf.build(ds.base, nlist=16, seed=0)
+    mut = mutate.MutableIndex(index, capacity=512)
+    eng = engines.mutable_engine(
+        engines.ivf_engine(mut.base, k=K, nprobe=16), mut.delta)
+    d = api.Darth(make_engine=lambda **kw: eng, engine=eng)
+    mon = mutate.RecalibrationMonitor(mut, d, targets=(0.9,),
+                                      threshold=0.02, capacity=64)
+    assert not mon.drift().drifted         # empty buffer: no signal
+
+    # perfect results: no drift
+    q = ds.queries[:32]
+    stale_gt = _live_gt(mut, q)
+    mon.observe(q, np.full((32,), 0.9, np.float32), stale_gt)
+    rep = mon.drift()
+    assert rep.achieved[0.9] == pytest.approx(1.0)
+    assert not rep.drifted
+
+    # a burst bumps the mutation epoch: the pre-burst replay entries
+    # are excluded from drift (their gap is irreducible by a refit)
+    mut.insert(q)
+    mut.insert(q + 1e-3)
+    mut.insert(q - 1e-3)
+    rep = mon.drift()
+    assert rep.num_queries == 0 and not rep.drifted
+
+    # post-burst observations whose results miss the inserted
+    # near-duplicates (a stale predictor terminating too early) DO
+    # count — the gap is real and a refit can close it
+    mon.observe(q, np.full((32,), 0.9, np.float32), stale_gt)
+    rep = mon.drift()
+    assert rep.num_queries == 32
+    assert rep.achieved[0.9] < 1.0 - 0.02
+    assert rep.drifted
+
+    # recalibration drops the stale replay entries: they predate the
+    # burst and would otherwise keep step() refitting forever
+    mon.recalibrate(ds.learn[:64], batch=64)
+    assert mon.recalibrations == 1
+    assert mon.drift().num_queries == 0
+    assert not mon.drift().drifted
+
+
+# --- streaming conformance (the acceptance contract) ------------------------
+
+@pytest.fixture(scope="module")
+def conformance_ds():
+    return vectors.make_dataset(n=6000, d=24, num_learn=512,
+                                num_queries=128, clusters=32,
+                                cluster_std=1.2, seed=0)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind", ["ivf", "hnsw"])
+def test_streaming_conformance(conformance_ds, kind):
+    ds = conformance_ds
+    if kind == "ivf":
+        index = ivf.build(ds.base, nlist=32, seed=0)
+    else:
+        index = hnsw.build(ds.base, m=16, passes=2, ef_construction=96,
+                           seed=0)
+    mut = mutate.MutableIndex(index, capacity=2048)
+    events = vectors.mutation_stream(ds, insert_pct=0.22, delete_pct=0.11,
+                                     drift=0.25, steps=6, seed=3)
+    mut.apply(events)
+    assert mut.num_delta >= 0.2 * 6000
+    assert len(mut.deleted_ids) >= 0.1 * 6000
+
+    def make_engine(**kw):
+        if kind == "ivf":
+            return engines.mutable_engine(
+                engines.ivf_engine(mut.base, **kw), mut.delta)
+        return engines.mutable_engine(
+            engines.hnsw_engine(mut.base, **kw), mut.delta)
+
+    kw = (dict(k=K, nprobe=32) if kind == "ivf"
+          else dict(k=K, ef=192, max_steps=400))
+    d = api.Darth(make_engine=make_engine, engine=make_engine(**kw))
+    # recalibration refit: predictor + intervals learned through the
+    # mutated engine against fresh base+delta ground truth
+    mon = mutate.RecalibrationMonitor(mut, d, targets=TARGETS)
+    mon.recalibrate(ds.learn, batch=256)
+
+    q = jnp.asarray(ds.queries)
+    gt_live = _live_gt(mut, ds.queries)
+    inner = darth_search.plain_search(d.engine, q)
+    plain_rec = float(np.asarray(flat.recall_at_k(
+        d.engine.topk_i(inner), jnp.asarray(gt_live))).mean())
+    plain_ndis = float(np.asarray(inner.ndis).mean())
+    assert plain_rec >= max(TARGETS), plain_rec  # targets attainable
+
+    dead = set(int(i) for i in mut.deleted_ids)
+    delta_ids = set(int(i) for i in mut._delta_slot)
+    saw_delta = False
+    for rt in TARGETS:
+        _, ii, st = d.search(q, rt)
+        ii = np.asarray(ii)
+        rec = float(np.asarray(flat.recall_at_k(
+            jnp.asarray(ii), jnp.asarray(gt_live))).mean())
+        nd = float(np.asarray(st.inner.ndis).mean())
+        assert rec >= rt - TOLERANCE, (kind, rt, rec)
+        assert nd < plain_ndis, (kind, rt, nd, plain_ndis)
+        found = set(ii.ravel().tolist())
+        assert not (found & dead), (kind, rt)   # tombstones never surface
+        saw_delta |= bool(found & delta_ids)
+    assert saw_delta                            # the delta tier is really
+
+    # post-compaction: same contract against the folded live set
+    mut.compact(ef_construction=96, seed=1)
+    d.engine = make_engine(**kw)
+    mon.recalibrate(ds.learn, batch=256)
+    gt_live = _live_gt(mut, ds.queries)
+    for rt in TARGETS:
+        _, ii, st = d.search(q, rt)
+        rec = float(np.asarray(flat.recall_at_k(
+            jnp.asarray(np.asarray(ii)), jnp.asarray(gt_live))).mean())
+        assert rec >= rt - TOLERANCE, (kind, "post-compact", rt, rec)
+        assert not (set(np.asarray(ii).ravel().tolist()) & dead)

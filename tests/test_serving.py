@@ -132,6 +132,78 @@ def test_refill_splice_preserves_per_slot_targets(served_setup):
     assert mixed_chunks > 0               # mixed targets really in flight
 
 
+def test_server_rejects_malformed_requests(served_setup):
+    """Regression: per-query target arrays that do not line up with the
+    query batch (or out-of-range targets) must raise before any state is
+    broadcast."""
+    ds, index, d = served_setup
+
+    def interval_for_target(rt):
+        p = [d.interval_params(float(r)) for r in np.atleast_1d(rt)]
+        return intervals.IntervalParams(
+            ipi=np.array([x.ipi for x in p], np.float32),
+            mpi=np.array([x.mpi for x in p], np.float32))
+
+    server = DarthServer(d.engine, d.trained.predictor, interval_for_target,
+                         num_slots=8, steps_per_sync=2)
+    q = ds.queries[:16]
+    with pytest.raises(ValueError, match="does not match"):
+        server.serve(q, np.full((15,), 0.9, np.float32))
+    with pytest.raises(ValueError, match="does not match"):
+        server.serve(q, np.full((16, 1), 0.9, np.float32))
+    with pytest.raises(ValueError, match=r"in \(0, 1\]"):
+        server.serve(q, np.full((16,), 0.0, np.float32))
+    with pytest.raises(ValueError, match="queries must be"):
+        server.serve(q[0], np.full((16,), 0.9, np.float32))
+
+
+def test_server_hot_swap_predictor_and_engine(served_setup):
+    """set_predictor / set_engine keep a running server serving (the
+    drift-recalibration and mutation-burst paths)."""
+    ds, index, d = served_setup
+
+    def interval_for_target(rt):
+        p = [d.interval_params(float(r)) for r in np.atleast_1d(rt)]
+        return intervals.IntervalParams(
+            ipi=np.array([x.ipi for x in p], np.float32),
+            mpi=np.array([x.mpi for x in p], np.float32))
+
+    server = DarthServer(d.engine, d.trained.predictor, interval_for_target,
+                         num_slots=16, steps_per_sync=2)
+    rts = np.full((32,), 0.9, np.float32)
+    results, stats = server.serve(ds.queries[:32], rts)
+    assert stats.completed == 32
+
+    # contents-only engine swap must NOT rebuild the chunk jits (the
+    # index crosses them as an argument)
+    chunks = server._run_chunk
+    server.set_engine(engines.ivf_engine(index, k=10, nprobe=25),
+                      contents_only=True)
+    assert server._run_chunk is chunks
+    results, stats = server.serve(ds.queries[:32], rts)
+    assert stats.completed == 32
+
+    # a contents-only claim with a different protocol is rejected; a
+    # default (non-contents-only) swap rebuilds
+    with pytest.raises(ValueError, match="changed the engine protocol"):
+        server.set_engine(engines.ivf_engine(index, k=5, nprobe=25),
+                          contents_only=True)
+    server.set_engine(engines.ivf_engine(index, k=10, nprobe=25))
+    assert server._run_chunk is not chunks
+    chunks = server._run_chunk
+
+    # predictor swap rebuilds; serving continues with the new predictor
+    server.set_predictor(d.trained.predictor)
+    assert server._run_chunk is not chunks
+    results, stats = server.serve(ds.queries[:32], rts)
+    assert stats.completed == 32
+    gt_d, gt_i = flat.search(jnp.asarray(ds.queries[:32]),
+                             jnp.asarray(ds.base), 10)
+    ids = np.stack([r[1] for r in results])
+    rec = float(np.asarray(flat.recall_at_k(jnp.asarray(ids), gt_i)).mean())
+    assert rec >= 0.85, rec
+
+
 def test_server_compaction_saves_slot_steps(served_setup):
     """With compaction, total slot-steps must be well below
     num_queries x natural-termination steps (the no-compaction cost)."""
