@@ -188,9 +188,103 @@ def dist_sharded_hnsw_beam(b: int = 32, k: int = 10, m: int = 8,
     return rows, headline
 
 
+def dist_multi_host_serve(n: int = 20_000, d: int = 32, k: int = 10,
+                          nlist: int = 64, nprobe: int = 16,
+                          slots: int = 64, steps_per_sync: int = 4,
+                          stream: int = 128):
+    """Multi-host slot-pool serve traffic: per-chunk collective bytes of
+    the jitted run_chunk on a ("hosts", "model") serve mesh (slot dim
+    split over host groups, index global per group) vs the
+    single-controller server on a ("model",)-only mesh. The slot split
+    halves the probe shard_map's all-gather operands ([B, ..] ->
+    [B/hosts, ..] per group) but adds cross-host reshards of the
+    replicated frontier bookkeeping (merge_topk inputs, the due.any()
+    predicate) — the nightly entry tracks that balance so a regression
+    in either direction is visible; a short serve stream sanity-checks
+    that the per-host loops actually drain their stripes."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import dist
+    from repro.core import engines
+    from repro.core.intervals import IntervalParams
+    from repro.index import ivf
+    from repro.launch import mesh as mesh_lib
+    from repro.serve import DarthServer
+    from repro.utils import hlo as hlo_lib
+
+    ndev = jax.device_count()
+    hosts = 2 if ndev >= 8 else 1
+    shards = 4 if ndev >= 8 else max(ndev // max(hosts, 1), 1)
+
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    index = ivf.build(x, nlist=nlist, seed=0)
+
+    # Predictor/interval stubs: the chunk's collective traffic does not
+    # depend on trained values, only on shapes and the engine step.
+    def predictor(feats):
+        return jnp.full((feats.shape[0],), 0.5, jnp.float32)
+
+    def interval_for_target(rt):
+        rt = np.atleast_1d(rt)
+        return IntervalParams(ipi=np.full(rt.shape, 64.0, np.float32),
+                              mpi=np.full(rt.shape, 8.0, np.float32))
+
+    def measure(mesh, host_loops, label):
+        placed = dist.place_index(index, mesh)
+        eng = engines.sharded_ivf_engine(placed, mesh, k=k, nprobe=nprobe)
+        server = DarthServer(eng, predictor, interval_for_target,
+                             num_slots=slots,
+                             steps_per_sync=steps_per_sync,
+                             mesh=mesh, hosts=host_loops)
+        qb = rng.normal(size=(slots, d)).astype(np.float32)
+        rt = np.full((slots,), 0.9, np.float32)
+        ipi = np.full((slots,), 64.0, np.float32)
+        mpi = np.full((slots,), 8.0, np.float32)
+        st = server._init_chunk(eng.index, server._put(qb),
+                                server._put(ipi), server._put(mpi))
+        compiled = server._run_chunk.lower(
+            eng.index, st, server._put(rt), server._put(ipi),
+            server._put(mpi)).compile()
+        coll = hlo_lib.collective_bytes(compiled.as_text())
+
+        q = rng.normal(size=(stream, d)).astype(np.float32)
+        t0 = time.time()
+        results, stats = server.serve(q, np.full((stream,), 0.9,
+                                                 np.float32))
+        dt = time.time() - t0
+        assert stats.completed == stream
+        return {
+            "topology": label, "hosts": host_loops,
+            "shards": int(mesh.shape["model"]), "slots": slots,
+            "steps_per_sync": steps_per_sync,
+            "collective_bytes_per_chunk": coll["total"],
+            "collective_ops_per_chunk": coll["num_ops"],
+            "stream_qps": round(stream / max(dt, 1e-9), 1),
+            "per_host_completed": [h.completed for h in stats.hosts],
+        }
+
+    rows = [
+        measure(mesh_lib.make_search_mesh(shards), 1,
+                "single-controller"),
+        measure(mesh_lib.make_serve_mesh(hosts, shards), hosts,
+                "multi-host"),
+    ]
+    sc, mh = rows[0], rows[1]
+    ratio = (mh["collective_bytes_per_chunk"]
+             / max(sc["collective_bytes_per_chunk"], 1))
+    headline = (f"{hosts} host(s) x {shards} shard(s): "
+                f"{mh['collective_bytes_per_chunk']/1e3:.1f} kB/chunk "
+                f"multi-host vs "
+                f"{sc['collective_bytes_per_chunk']/1e3:.1f} kB "
+                f"single-controller ({ratio:.2f}x)")
+    return rows, headline
+
+
 if __name__ == "__main__":
     for fn in (dist_sharded_search, dist_sharded_ivf_probe,
-               dist_sharded_hnsw_beam):
+               dist_sharded_hnsw_beam, dist_multi_host_serve):
         rows, headline = fn()
         print(headline)
         for r in rows:

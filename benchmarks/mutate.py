@@ -22,7 +22,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro import mutate
-from repro.core import api, engines, intervals
+from repro.core import api, engines
 from repro.data import vectors
 from repro.index import flat, ivf
 from repro.serve import DarthServer
@@ -47,30 +47,20 @@ def mutate_burst(n: int = 20_000, d: int = 32, queries: int = 384):
                       engine=make_engine(k=K, nprobe=128))
     darth.fit(jnp.asarray(ds.learn), jnp.asarray(ds.base))
 
-    def interval_for_target(rt):
-        ps = [darth.interval_params(float(r)) for r in np.atleast_1d(rt)]
-        return intervals.IntervalParams(
-            ipi=np.array([p.ipi for p in ps], np.float32),
-            mpi=np.array([p.mpi for p in ps], np.float32))
-
     rng = np.random.default_rng(0)
     r_targets = rng.choice(TARGETS, size=queries).astype(np.float32)
     server = DarthServer(darth.engine, darth.trained.predictor,
-                         interval_for_target, num_slots=64)
+                         darth.interval_for_target, num_slots=64)
     monitor = mutate.RecalibrationMonitor(mut, darth, targets=TARGETS,
                                           threshold=0.01)
 
     rows = []
-    gt_cache = {}
 
     def live_gt():
-        """Exact live ground truth, memoized on the mutation epoch
-        (post-burst and post-recalibrate share one live set)."""
-        key = mut.version
-        if key not in gt_cache:
-            gt_cache.clear()
-            gt_cache[key] = mut.live_ground_truth(ds.queries, K)
-        return gt_cache[key]
+        """Exact live ground truth — memoized on the mutation epoch by
+        MutableIndex itself (post-burst and post-recalibrate share one
+        live set, so they share one scan)."""
+        return mut.live_ground_truth(ds.queries, K)
 
     def phase(label):
         t0 = time.time()

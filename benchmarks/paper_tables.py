@@ -371,12 +371,6 @@ def serving_compaction() -> Tuple[Rows, str]:
     b = common.setup()
     d = b.darth_ivf
 
-    def interval_for_target(rt):
-        ps = [d.interval_params(float(r)) for r in np.atleast_1d(rt)]
-        return intervals.IntervalParams(
-            ipi=np.array([p.ipi for p in ps], np.float32),
-            mpi=np.array([p.mpi for p in ps], np.float32))
-
     q = b.ds.queries
     rts = np.full((q.shape[0],), 0.9, np.float32)
     rows = []
@@ -387,7 +381,7 @@ def serving_compaction() -> Tuple[Rows, str]:
                                    d.interval_params(0.9))
     batch_steps = float(np.asarray(st.steps))  # steps for whole batch
     no_compact_slot_steps = batch_steps * q.shape[0]
-    server = DarthServer(eng, d.trained.predictor, interval_for_target,
+    server = DarthServer(eng, d.trained.predictor, d.interval_for_target,
                          num_slots=64, steps_per_sync=2)
     results, stats = server.serve(q, rts)
     rows.append({"mode": "no_compaction",

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
-from repro.core import api, engines, intervals
+from repro.core import api, engines
 from repro.data import vectors
 from repro.index import flat, ivf
 from repro.models import model_zoo
@@ -63,14 +63,8 @@ def main():
     r_targets = np.where(np.arange(n_req) % 2 == 0, 0.8, 0.95
                          ).astype(np.float32)
 
-    def interval_for_target(rt):
-        ps = [darth.interval_params(float(r)) for r in np.atleast_1d(rt)]
-        return intervals.IntervalParams(
-            ipi=np.array([p.ipi for p in ps], np.float32),
-            mpi=np.array([p.mpi for p in ps], np.float32))
-
     server = DarthServer(darth.engine, darth.trained.predictor,
-                         interval_for_target, num_slots=32)
+                         darth.interval_for_target, num_slots=32)
     t0 = time.time()
     results, stats = server.serve(req_emb, r_targets)
     print(f"served {stats.completed} requests in {time.time()-t0:.1f}s "

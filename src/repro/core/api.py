@@ -84,6 +84,21 @@ class Darth:
         d = float(np.interp(r_target, arr, dists))
         return intervals_lib.heuristic_params(d)
 
+    def interval_for_target(self, r_target) -> intervals_lib.IntervalParams:
+        """Per-query IntervalParams for a scalar or [B] vector of
+        declared targets — the ONE builder every serving call site
+        (DarthServer, launch/serve, benchmarks) passes as its
+        `interval_for_target`. Element j of the returned ipi/mpi arrays
+        equals `interval_params(r_target[j])` exactly, so mixed-target
+        slot pools stay per-slot consistent."""
+        assert self.trained is not None, "call fit() first"
+        keys = sorted(self.trained.dists_rt)
+        arr = np.array(keys)
+        dists = np.array([self.trained.dists_rt[t] for t in keys])
+        rt = np.atleast_1d(np.asarray(r_target, np.float32))
+        d = np.interp(rt.astype(np.float64), arr, dists)
+        return intervals_lib.heuristic_params(d)
+
     def search(self, q: jax.Array, r_target: Union[float, jax.Array],
                ) -> Tuple[jax.Array, jax.Array, darth_search.DarthState]:
         """ANNS(q, G, k, R_t): returns (dists, ids, diagnostics state)."""

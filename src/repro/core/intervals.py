@@ -21,15 +21,22 @@ def next_interval(p: IntervalParams, r_target: jax.Array,
     return jnp.clip(pi, p.mpi, p.ipi)
 
 
-def heuristic_params(dists_rt: float) -> IntervalParams:
+def heuristic_params(dists_rt) -> IntervalParams:
     """ipi = dists_Rt / 2, mpi = dists_Rt / 10 (§3.2.2).
 
     dists_Rt is the mean #distance calcs the *training* queries needed to
     reach the target recall — a free byproduct of training-data generation.
-    """
-    dists_rt = float(max(dists_rt, 1.0))
-    return IntervalParams(ipi=max(dists_rt / 2.0, 1.0),
-                          mpi=max(dists_rt / 10.0, 1.0))
+    Accepts a scalar (returns float fields, as every fit-time caller
+    expects) or an array of per-query dists_Rt (returns float32 array
+    fields — the serving path's per-slot IntervalParams); both shapes
+    share this one definition of the §3.2.2 constants."""
+    d = np.maximum(np.asarray(dists_rt, np.float64), 1.0)
+    ipi = np.maximum(d / 2.0, 1.0)
+    mpi = np.maximum(d / 10.0, 1.0)
+    if d.ndim == 0:
+        return IntervalParams(ipi=float(ipi), mpi=float(mpi))
+    return IntervalParams(ipi=ipi.astype(np.float32),
+                          mpi=mpi.astype(np.float32))
 
 
 def static_params(dists_rt: float, divisor: float = 4.0) -> IntervalParams:

@@ -10,9 +10,11 @@ from repro.dist import collectives, sharding
 from repro.dist.collectives import (make_sharded_beam_step,
                                     make_sharded_flat_search,
                                     make_sharded_probe_step)
-from repro.dist.sharding import (opt_shardings, param_shardings, place_index,
-                                 replicated)
+from repro.dist.sharding import (batch_shardings, opt_shardings,
+                                 param_shardings, place_index, replicated,
+                                 slot_sharding)
 
 __all__ = ["collectives", "sharding", "make_sharded_flat_search",
            "make_sharded_probe_step", "make_sharded_beam_step",
-           "param_shardings", "opt_shardings", "place_index", "replicated"]
+           "param_shardings", "opt_shardings", "place_index", "replicated",
+           "batch_shardings", "slot_sharding"]

@@ -43,9 +43,22 @@ from repro.kernels import ops
 
 SHARD_AXIS = "model"
 
+# Slot-pool serving (serve.engine.DarthServer on a make_serve_mesh):
+# when the mesh carries a "hosts" axis, the search state's slot (batch)
+# dim splits over it inside the probe/beam shard_maps, so each host
+# group's devices step only the slot slice its host loop owns. The
+# "model"-axis collectives then run WITHIN a host group — the per-chunk
+# all-gather/psum operands shrink from [B, ..] to [B/hosts, ..]. Absent
+# the axis, the spec entry is None and the programs are unchanged.
+BATCH_AXIS = "hosts"
+
 
 def shard_count(mesh: Mesh, axis: str = SHARD_AXIS) -> int:
     return int(mesh.shape[axis]) if axis in mesh.axis_names else 1
+
+
+def _batch_axis(mesh: Mesh) -> "str | None":
+    return BATCH_AXIS if BATCH_AXIS in mesh.axis_names else None
 
 
 def merge_topk(cand_d: jax.Array, cand_i: jax.Array, k: int
@@ -186,6 +199,7 @@ def make_sharded_probe_step(mesh: Mesh, *, axis: str = SHARD_AXIS,
     """
     key = (_mesh_key(mesh), axis, use_kernel, interpret)
     nshards = shard_count(mesh, axis)
+    bh = _batch_axis(mesh)
 
     def probe_step(index: Any, s: Any) -> Any:
         b, k = s.topk_d.shape
@@ -212,12 +226,15 @@ def make_sharded_probe_step(mesh: Mesh, *, axis: str = SHARD_AXIS,
         kth = s.topk_d[:, -1:]
 
         def scan(q_eff, bias, kth, bucket, vecs, sqn, ids):
-            v = vecs[bucket]                     # [B, capS, D] local gather
+            # Local batch size, NOT the outer b: with a "hosts" batch
+            # axis each host group scans only its slot slice.
+            bl = q_eff.shape[0]
+            v = vecs[bucket]                     # [Bl, capS, D] local gather
             sq = sqn[bucket]
             id_ = ids[bucket]
             if use_kernel:
-                run_d = jnp.full((b, k), jnp.inf, jnp.float32)
-                run_i = jnp.full((b, k), -1, jnp.int32)
+                run_d = jnp.full((bl, k), jnp.inf, jnp.float32)
+                run_i = jnp.full((bl, k), -1, jnp.int32)
                 d_loc, i_loc, cnt = ops.bucket_probe(
                     q_eff, v, sq, id_, bias, kth, run_d, run_i,
                     interpret=interpret)
@@ -244,9 +261,9 @@ def make_sharded_probe_step(mesh: Mesh, *, axis: str = SHARD_AXIS,
 
         sharded = shard_map(
             scan, mesh=mesh,
-            in_specs=(P(), P(), P(), P(),
+            in_specs=(P(bh, None), P(bh, None), P(bh, None), P(bh),
                       P(None, axis, None), P(None, axis), P(None, axis)),
-            out_specs=(P(), P(), P()),
+            out_specs=(P(bh, None), P(bh, None), P(bh)),
             check_rep=False)
         cand_d, cand_i, cnt = sharded(
             q_eff, bias, kth, bucket,
@@ -316,6 +333,7 @@ def make_sharded_beam_step(mesh: Mesh, *, axis: str = SHARD_AXIS
     """
     key = (_mesh_key(mesh), axis)
     nshards = shard_count(mesh, axis)
+    bh = _batch_axis(mesh)
 
     def beam_step(index: Any, s: Any, *, k: int) -> Any:
         from repro.index import hnsw as hnsw_lib
@@ -333,6 +351,9 @@ def make_sharded_beam_step(mesh: Mesh, *, axis: str = SHARD_AXIS
         sel_id_safe, act, cand_exp = hnsw_lib.select_expand(s)
 
         def expand(q, qsq, sel_id, act, vec_loc, sqn_loc, nbr_loc, vis_loc):
+            # Local batch size, NOT the outer b: with a "hosts" batch
+            # axis each host group expands only its slot slice.
+            bl = q.shape[0]
             rows = vec_loc.shape[0]
             base = jax.lax.axis_index(axis) * rows
             # 1. owner of the selected node contributes its adjacency row
@@ -340,15 +361,15 @@ def make_sharded_beam_step(mesh: Mesh, *, axis: str = SHARD_AXIS
             sel_loc = jnp.clip(sel_id - base, 0, rows - 1)
             nbrs = jax.lax.psum(
                 jnp.where(own_sel[:, None], nbr_loc[sel_loc] + 1, 0),
-                axis) - 1                                    # [B, M] global
+                axis) - 1                                    # [Bl, M] global
             # 2. scan the neighbors this shard owns
             valid = (nbrs >= 0) & act[:, None]
             owned = valid & (nbrs >= base) & (nbrs < base + rows)
             loc = jnp.where(owned, nbrs - base, 0)
             seen = jnp.take_along_axis(vis_loc, loc, axis=1)
             new = owned & ~seen
-            vis_loc = vis_loc.at[jnp.arange(b)[:, None], loc].max(owned)
-            vecs = vec_loc[loc]                              # [B, M, D]
+            vis_loc = vis_loc.at[jnp.arange(bl)[:, None], loc].max(owned)
+            vecs = vec_loc[loc]                              # [Bl, M, D]
             dist = (sqn_loc[loc]
                     - 2.0 * jnp.einsum("bd,bmd->bm", q, vecs) + qsq)
             dist = jnp.where(new, jnp.maximum(dist, 0.0), jnp.inf)
@@ -358,9 +379,9 @@ def make_sharded_beam_step(mesh: Mesh, *, axis: str = SHARD_AXIS
 
         sharded = shard_map(
             expand, mesh=mesh,
-            in_specs=(P(), P(), P(), P(),
-                      P(axis, None), P(axis), P(axis, None), P(None, axis)),
-            out_specs=(P(), P(), P(None, axis)),
+            in_specs=(P(bh, None), P(bh, None), P(bh), P(bh),
+                      P(axis, None), P(axis), P(axis, None), P(bh, axis)),
+            out_specs=(P(bh, None), P(bh, None), P(bh, axis)),
             check_rep=False)
         nbrs, dist_all, visited = sharded(
             s.q, s.qsq, sel_id_safe, act,
@@ -380,4 +401,4 @@ def make_sharded_beam_step(mesh: Mesh, *, axis: str = SHARD_AXIS
 
 __all__ = ["make_sharded_flat_search", "sharded_flat_search",
            "make_sharded_probe_step", "make_sharded_beam_step",
-           "merge_topk", "shard_count", "SHARD_AXIS"]
+           "merge_topk", "shard_count", "SHARD_AXIS", "BATCH_AXIS"]

@@ -53,6 +53,12 @@ def _resolve_logical(mesh: Mesh, logical) -> Optional[Tuple[str, ...]]:
         return axes or None
     if logical == "tp":
         return ("model",) if "model" in mesh.axis_names else None
+    # "hosts" (slot-pool serving, launch/mesh.make_serve_mesh) resolves
+    # through the generic branch below: the slot dim splits ONLY over a
+    # dedicated "hosts" axis — the collectives' batch specs and the
+    # server's input placement both key on that exact name
+    # (collectives.BATCH_AXIS), so resolving to any other axis here
+    # would split inputs the device programs treat as replicated.
     return (logical,) if logical in mesh.axis_names else None
 
 
@@ -168,14 +174,29 @@ def batch_shardings(batch: PyTree, mesh: Mesh, kind: str = "train"
     other dims (seq, patch/frame features) stay replicated — sequence
     sharding is an *activation* concern (meshctx "sp"), not an input
     placement. `kind` is accepted for symmetry across train / prefill /
-    decode; the rule is the same."""
-    del kind
+    decode (same rule), except `kind="serve"`: the leading dim is the
+    slot-pool SLOT dim, which splits over the "hosts" axis (and only
+    that axis — the device programs key on collectives.BATCH_AXIS) so
+    each host group's devices own exactly the slot slice its host loop
+    manages (serve.engine.DarthServer)."""
+    lead = "hosts" if kind == "serve" else "dp"
 
     def leaf(x):
-        logical = ("dp",) + (None,) * (x.ndim - 1)
+        logical = (lead,) + (None,) * (x.ndim - 1)
         return NamedSharding(mesh, spec_for(mesh, x.shape, logical))
 
     return jax.tree.map(leaf, batch)
+
+
+def slot_sharding(mesh: Mesh, num_slots: int, trailing: int = 0
+                  ) -> NamedSharding:
+    """Sharding for one slot-pool array [num_slots, ...]: the slot dim
+    over "hosts" (see batch_shardings kind="serve"), trailing dims
+    replicated. Degrades to replication when the axis is absent or does
+    not divide num_slots."""
+    shape = (num_slots,) + (1,) * trailing
+    logical = ("hosts",) + (None,) * trailing
+    return NamedSharding(mesh, spec_for(mesh, shape, logical))
 
 
 def cache_shardings(cache: PyTree, mesh: Mesh) -> PyTree:
@@ -240,7 +261,13 @@ def place_index(index: Any, mesh: Mesh) -> Any:
     multiple first; padded slots keep the index's own padding contract
     (vecs 0, ids -1, sqnorm +inf) so they can never surface in a top-k.
     Degrades to full replication on a 1-device mesh, so the serve path
-    is identical."""
+    is identical.
+
+    On a serve mesh with a "hosts" axis (launch/mesh.make_serve_mesh)
+    the index stays GLOBAL: every spec here names only "model", so the
+    placed arrays replicate across host groups — each host group's
+    devices see the whole sharded index while the slot-pool state splits
+    over "hosts" (batch_shardings kind="serve")."""
     import dataclasses
 
     from repro.dist import collectives
@@ -293,4 +320,4 @@ def place_index(index: Any, mesh: Mesh) -> Any:
 
 __all__ = ["param_shardings", "opt_shardings", "batch_shardings",
            "cache_shardings", "param_spec", "spec_for", "replicated",
-           "database_sharding", "place_index"]
+           "database_sharding", "place_index", "slot_sharding"]

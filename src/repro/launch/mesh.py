@@ -36,5 +36,26 @@ def make_search_mesh(num_shards: int = 0):
     return jax.make_mesh((n,), ("model",))
 
 
+def make_serve_mesh(hosts: int = 1, shards: int = 0):
+    """2-D ("hosts", "model") mesh for multi-host slot-pool serving.
+
+    The "model" axis shards the index (dist/collectives.py fast paths,
+    same as make_search_mesh); the "hosts" axis carries the slot dim of
+    the serve batch (dist.sharding.batch_shardings kind="serve" /
+    slot_sharding), so each host group's devices step only the slot
+    slice its host loop owns and the per-chunk collectives run within a
+    host group. `shards` 0 means "all remaining devices per host"."""
+    if hosts < 1:
+        raise ValueError(f"hosts must be >= 1, got {hosts}")
+    n = shards or max(jax.device_count() // hosts, 1)
+    if jax.device_count() < hosts * n:
+        raise ValueError(
+            f"--hosts {hosts} x --shards {n} needs {hosts * n} devices "
+            f"but only {jax.device_count()} visible; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={hosts * n} for a "
+            f"smoke run")
+    return jax.make_mesh((hosts, n), ("hosts", "model"))
+
+
 def describe(mesh) -> str:
     return f"mesh{tuple(mesh.shape.values())} axes={mesh.axis_names}"

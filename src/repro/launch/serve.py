@@ -22,6 +22,15 @@ mid-serve through the repro.mutate subsystem: delta ring + tombstones,
 drift monitor, predictor recalibration hot-swap, compaction):
   PYTHONPATH=src python -m repro.launch.serve --mutations 0.2,0.1 \
       --drift 0.3
+
+Multi-host slot pool (--hosts N splits the slot pool into N per-host
+slices, each with its own admission/refill/compaction loop — simulated
+multi-host on one process, like the multidevice lane; combined with
+--shards and enough devices, the mesh gains a "hosts" axis and the slot
+dim is placed over host groups):
+  PYTHONPATH=src python -m repro.launch.serve --hosts 4
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m repro.launch.serve --hosts 2 --shards 4
 """
 from __future__ import annotations
 
@@ -32,7 +41,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro import dist, mutate
-from repro.core import api, engines, intervals, training
+from repro.core import api, engines, training
 from repro.data import vectors
 from repro.index import flat, hnsw, ivf
 from repro.launch import mesh as mesh_lib
@@ -61,6 +70,12 @@ def main() -> None:
                          "search via the shard_map fast path (IVF: cap "
                          "dim split; HNSW: graph rows split); 0 = all "
                          "visible devices (default: unsharded)")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="split the slot pool into N per-host loops "
+                         "(admission/refill/compaction run per host); "
+                         "with --shards and N*shards devices the mesh "
+                         "gains a 'hosts' axis and the slot dim is "
+                         "placed over host groups")
     ap.add_argument("--mutations", type=str, default=None,
                     metavar="INS,DEL",
                     help="streaming-mutation workload: apply an "
@@ -91,8 +106,16 @@ def main() -> None:
 
     mesh = None
     if args.shards is not None:
-        mesh = mesh_lib.make_search_mesh(args.shards)
+        import jax
+        shards = args.shards or jax.device_count()
+        if args.hosts > 1 and jax.device_count() >= args.hosts * shards:
+            mesh = mesh_lib.make_serve_mesh(args.hosts, shards)
+        else:
+            mesh = mesh_lib.make_search_mesh(args.shards)
         print(f"[serve] serving on {mesh_lib.describe(mesh)}")
+    if args.hosts > 1:
+        print(f"[serve] multi-host slot pool: {args.hosts} host loops x "
+              f"{args.slots // args.hosts} slots")
 
     engine_kw = (dict(k=args.k, ef=args.ef) if args.engine == "hnsw"
                  else dict(k=args.k, nprobe=args.nlist))
@@ -131,17 +154,11 @@ def main() -> None:
     print(f"[serve] DARTH fit ({time.time()-t0:.1f}s) "
           f"mse={darth.trained.metrics['mse']:.5f}")
 
-    def interval_for_target(rt):
-        ps = [darth.interval_params(float(r)) for r in np.atleast_1d(rt)]
-        return intervals.IntervalParams(
-            ipi=np.array([p.ipi for p in ps], np.float32),
-            mpi=np.array([p.mpi for p in ps], np.float32))
-
     rng = np.random.default_rng(0)
     r_targets = rng.choice(targets, size=args.queries).astype(np.float32)
     server = DarthServer(darth.engine, darth.trained.predictor,
-                         interval_for_target, num_slots=args.slots,
-                         mesh=mesh)
+                         darth.interval_for_target, num_slots=args.slots,
+                         mesh=mesh, hosts=args.hosts)
     monitor = None
     if mutable is not None:
         monitor = mutate.RecalibrationMonitor(
@@ -151,22 +168,19 @@ def main() -> None:
     gt_cache = {}
 
     def ground_truth():
-        """Fresh exact top-k as GLOBAL ids over the current live set,
-        memoized on the mutation epoch — consecutive phases over an
-        unchanged live set (e.g. post-burst then post-recalibration)
-        reuse one scan."""
-        key = mutable.version if mutable is not None else 0
-        if key not in gt_cache:
-            gt_cache.clear()
-            if mutable is not None:
-                gt_cache[key] = mutable.live_ground_truth(
-                    ds.queries, args.k, mesh=mesh)
-            else:
-                _, gt_i = training.ground_truth(
-                    jnp.asarray(ds.queries), jnp.asarray(ds.base),
-                    args.k, mesh=mesh)
-                gt_cache[key] = np.asarray(gt_i).astype(np.int32)
-        return gt_cache[key]
+        """Fresh exact top-k as GLOBAL ids over the current live set.
+        The mutable path memoizes on the mutation epoch INSIDE
+        MutableIndex.live_ground_truth (next to `version`, where the
+        epoch lives) — consecutive phases over an unchanged live set
+        (e.g. post-burst then post-recalibration) reuse one scan."""
+        if mutable is not None:
+            return mutable.live_ground_truth(ds.queries, args.k, mesh=mesh)
+        if "frozen" not in gt_cache:
+            _, gt_i = training.ground_truth(
+                jnp.asarray(ds.queries), jnp.asarray(ds.base),
+                args.k, mesh=mesh)
+            gt_cache["frozen"] = np.asarray(gt_i).astype(np.int32)
+        return gt_cache["frozen"]
 
     def serve_phase(label: str) -> None:
         t0 = time.time()
@@ -175,6 +189,9 @@ def main() -> None:
         print(f"[serve] {label}: {stats.completed} queries in {dt:.1f}s "
               f"({stats.completed/max(dt, 1e-9):.0f} qps host-side; "
               f"{stats.engine_steps} engine steps, {stats.refills} refills)")
+        if server.hosts > 1:
+            print(f"[serve] {label}: per-host completed "
+                  + "/".join(str(h.completed) for h in stats.hosts))
         done = np.array([i for i, r in enumerate(results) if r is not None])
         if stats.truncated or len(done) < len(results):
             print(f"[serve] {label}: step budget hit: {stats.truncated} "

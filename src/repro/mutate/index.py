@@ -79,6 +79,12 @@ class MutableIndex:
         # served against an older live set never contaminate a drift
         # check (their recall gap is irreducible by a predictor refit).
         self.version = 0
+        # Epoch-memoized live-ground-truth cache (live_ground_truth):
+        # lives HERE, next to `version`, because the mutation epoch is
+        # the one thing that invalidates it — callers (drift monitor,
+        # launcher, benchmarks) share one scan per (epoch, k, queries).
+        self._gt_version = -1
+        self._gt_cache: dict = {}
         self._cursor = 0
         self._live_delta = 0
         self._deleted: set = set()
@@ -254,16 +260,31 @@ class MutableIndex:
         (i32[B, k], -1 when fewer than k live vectors). The one
         definition of "fresh ground truth under mutation" shared by the
         drift monitor, the launcher and the benchmarks. With `mesh`,
-        the scan row-shards over it (training.ground_truth)."""
+        the scan row-shards over it (training.ground_truth).
+
+        Memoized on the mutation epoch: consecutive calls over an
+        unchanged live set (e.g. a post-burst phase followed by a
+        post-recalibration phase) reuse one scan; any insert / delete /
+        compact bumps `version` and drops the cache."""
         from repro.core import training as training_lib
+
+        q = np.asarray(q, np.float32)
+        if self._gt_version != self.version:
+            self._gt_cache.clear()
+            self._gt_version = self.version
+        key = (int(k), q.shape, hash(q.tobytes()))
+        hit = self._gt_cache.get(key)
+        if hit is not None:
+            return hit
 
         live_ids, live_vecs = self.live_vectors()
         _, rows = training_lib.ground_truth(
-            jnp.asarray(np.asarray(q, np.float32)),
-            jnp.asarray(live_vecs), k, mesh=mesh)
+            jnp.asarray(q), jnp.asarray(live_vecs), k, mesh=mesh)
         rows = np.asarray(rows)
-        return np.where(rows >= 0, live_ids[np.maximum(rows, 0)], -1
-                        ).astype(np.int32)
+        out = np.where(rows >= 0, live_ids[np.maximum(rows, 0)], -1
+                       ).astype(np.int32)
+        self._gt_cache[key] = out
+        return out
 
     # -- compaction --------------------------------------------------------
     def compact(self, *, cap_round: int = 8, ef_construction: int = 64,

@@ -1,4 +1,4 @@
 from repro.serve import engine
-from repro.serve.engine import DarthServer, ServeStats
+from repro.serve.engine import DarthServer, HostStats, ServeStats
 
-__all__ = ["engine", "DarthServer", "ServeStats"]
+__all__ = ["engine", "DarthServer", "HostStats", "ServeStats"]

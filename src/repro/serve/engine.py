@@ -1,4 +1,5 @@
-"""DARTH serving engine: slot pool + batch compaction (DESIGN.md §2).
+"""DARTH serving engine: slot pool + batch compaction (DESIGN.md §2),
+split into a per-host loop and a device loop for multi-host serving.
 
 On SPMD hardware a lone early-terminated query inside a fixed batch saves
 nothing — the batch keeps stepping. Compaction converts DARTH's per-query
@@ -11,20 +12,42 @@ slot-step savings vs a no-compaction baseline.
 Every query carries its own declared recall target (mixed-target batches
 are native — per-slot R_t, per-slot adaptive intervals).
 
-The server is engine-agnostic through the Engine protocol: handing it
-engines.sharded_ivf_engine (cap-sharded bucket store, shard_map probe)
-or engines.sharded_hnsw_engine (row-sharded graph, shard_map beam step)
-instead of the single-device engines changes nothing here — slot
-compaction, splicing and the chunked driver all operate on the
-replicated search state, while the probe/beam data traffic stays
-on-shard. The one state leaf that IS sharded (HNSW's visited bitmap,
-split on its node dim) still has a leading slot dim, so _select_slots
-splicing works on it unchanged.
+Multi-host topology (hosts > 1): the slot pool is partitioned into
+contiguous per-host slices, each owned by a `_HostSlots` loop that runs
+admission, refill splicing and slot compaction against ONLY its slice —
+no cross-host coordination, no global scheduler. The device loop is the
+single SPMD program all hosts participate in: the jitted chunks
+(init/run/splice) step the whole pool against the globally sharded
+index, and the only global synchronization left is the collectives
+already inside the engine step (the "model"-axis probe/beam merges).
+On one process this is SIMULATED multi-host — N host loops over slot
+slices of one device batch — exactly like the multidevice test lane
+simulates shard counts; on a mesh with a "hosts" axis
+(launch/mesh.make_serve_mesh) the per-chunk inputs are additionally
+placed with the slot dim split over host groups
+(dist.sharding.batch_shardings kind="serve"), so each host group's
+devices step only the slots its host loop manages and the per-chunk
+collective operands shrink to [B/hosts, ..].
+
+Because per-slot search state never crosses slots (the engine steps,
+the predictor, and the interval updates are all per-slot), a query's
+(topk_d, topk_i, ndis, ninserts) is independent of which host served
+it — multi-host serving matches the single-controller server exactly
+(tests/test_serving.py pins host counts {1, 2, 4}).
+
+The server stays engine-agnostic through the Engine protocol: handing
+it engines.sharded_ivf_engine / engines.sharded_hnsw_engine (or either
+wrapped by engines.mutable_engine) changes nothing here — slot
+compaction, splicing and the chunked driver operate on the replicated
+search state, while the probe/beam data traffic stays on-shard. The one
+state leaf that IS sharded (HNSW's visited bitmap, split on its node
+dim) still has a leading slot dim, so _select_slots splicing works on
+it unchanged.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import contextlib
 
@@ -54,6 +77,20 @@ def _select_slots(mask: jax.Array, new: PyTree, old: PyTree) -> PyTree:
 
 
 @dataclasses.dataclass
+class HostStats:
+    """One host loop's counters (ServeStats aggregates these)."""
+    host: int = 0
+    admitted: int = 0            # queries that ever got a slot
+    completed: int = 0
+    slot_steps: int = 0
+    refills: int = 0
+    truncated: int = 0           # admitted, harvested with a partial top-k
+    ndis_harvested: int = 0      # sum of harvested slots' ndis counters
+    killed: bool = False         # fault injection: host died mid-serve
+    abandoned: int = 0           # queued on this host, never admitted
+
+
+@dataclasses.dataclass
 class ServeStats:
     completed: int = 0
     slot_steps: int = 0          # engine steps x slots (cost proxy)
@@ -61,6 +98,100 @@ class ServeStats:
     refills: int = 0
     truncated: int = 0           # in-flight queries harvested with a
     #                              partial top-k when max_engine_steps hit
+    #                              (or their host was killed)
+    ndis_harvested: int = 0      # sum of per-query ndis at harvest
+    hosts: List[HostStats] = dataclasses.field(default_factory=list)
+
+
+class _HostSlots:
+    """One host's slice [lo, hi) of the slot pool.
+
+    Owns admission, refill and harvest bookkeeping for its slots and ITS
+    OWN query queue: every decision reads only the host's slice of the
+    device state, so N of these run with no cross-host coordination —
+    the only global synchronization in multi-host serving is the
+    collectives inside the engine step itself."""
+
+    def __init__(self, host: int, lo: int, hi: int, queue: List[int],
+                 queries: np.ndarray, r_targets: np.ndarray,
+                 interval_for_target, results: List):
+        self.host = host
+        self.lo, self.hi = lo, hi
+        self.queue = queue
+        self.queries = queries
+        self.r_targets = r_targets
+        self.interval_for_target = interval_for_target
+        self.results = results
+        nloc = hi - lo
+        self.slot_query = np.full((nloc,), -1, np.int64)
+        self.rt = np.zeros((nloc,), np.float32)
+        self.ipi = np.zeros((nloc,), np.float32)
+        self.mpi = np.zeros((nloc,), np.float32)
+        self.alive = True
+        self.stats = HostStats(host=host)
+
+    @property
+    def occupied(self) -> np.ndarray:
+        return self.slot_query >= 0
+
+    def fill(self, free: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Admit queued queries into the local `free` slots; updates the
+        host's rt/ipi/mpi slices in place and returns (mask bool[nloc],
+        qb f32[nloc, D]) for the splice — mask all-False when nothing
+        was admitted."""
+        nloc = self.hi - self.lo
+        qb = np.zeros((nloc, self.queries.shape[1]), np.float32)
+        mask = np.zeros((nloc,), bool)
+        ids = [self.queue.pop(0)
+               for _ in range(min(len(free), len(self.queue)))]
+        if not ids:
+            return mask, qb
+        rt2 = self.rt.copy()
+        for s, qid in zip(free, ids):
+            mask[s] = True
+            qb[s] = self.queries[qid]
+            rt2[s] = self.r_targets[qid]
+            self.slot_query[s] = qid
+        ip = self.interval_for_target(rt2)
+        ipi2 = np.broadcast_to(np.asarray(ip.ipi, np.float32), (nloc,))
+        mpi2 = np.broadcast_to(np.asarray(ip.mpi, np.float32), (nloc,))
+        self.ipi = np.where(mask, ipi2, self.ipi)
+        self.mpi = np.where(mask, mpi2, self.mpi)
+        self.rt = np.where(mask, rt2, self.rt)
+        self.stats.admitted += len(ids)
+        return mask, qb
+
+    def harvest(self, mask: np.ndarray, topk_d: np.ndarray,
+                topk_i: np.ndarray, ndis: np.ndarray, *,
+                truncated: bool = False) -> int:
+        """Pull the masked local slots' top-k into results; free the
+        slots. The array arguments are the host's SLICE [nloc, ..] of
+        the device state. Raises if a slot's query already has a result
+        — every admitted query must be returned exactly once."""
+        for s in np.nonzero(mask)[0]:
+            qid = int(self.slot_query[s])
+            if self.results[qid] is not None:
+                raise RuntimeError(
+                    f"host {self.host}: query {qid} harvested twice")
+            self.results[qid] = (topk_d[s], topk_i[s])
+            self.stats.ndis_harvested += int(ndis[s])
+            self.slot_query[s] = -1
+        count = int(mask.sum())
+        if truncated:
+            self.stats.truncated += count
+        else:
+            self.stats.completed += count
+        return count
+
+    def kill(self) -> None:
+        """Fault injection: this host's slot slice dies. Its queue is
+        abandoned (those queries stay None — they were never admitted,
+        so there is no state to harvest); the caller harvests the
+        in-flight slots first so every ADMITTED query still returns."""
+        self.alive = False
+        self.stats.killed = True
+        self.stats.abandoned = len(self.queue)
+        self.queue = []
 
 
 class DarthServer:
@@ -70,15 +201,22 @@ class DarthServer:
                  predictor: RecallPredictor,
                  interval_for_target,        # fn: r_t array -> IntervalParams
                  num_slots: int = 64, steps_per_sync: int = 4,
-                 mesh=None):
+                 mesh=None, hosts: int = 1):
         self.engine = engine
         self.predictor = predictor
         self.interval_for_target = interval_for_target
         self.num_slots = num_slots
         self.steps_per_sync = steps_per_sync
+        if hosts < 1 or num_slots % hosts:
+            raise ValueError(
+                f"num_slots {num_slots} must split evenly over "
+                f"{hosts} hosts")
+        self.hosts = hosts
         # When the engine's index was placed on a mesh (dist.place_index),
         # the slot-pool chunks run SPMD over it; use_mesh also activates
         # the activation constraints inside any model-side feature code.
+        # A mesh with a "hosts" axis additionally splits the slot dim of
+        # the chunk inputs over host groups (make_serve_mesh).
         self.mesh = mesh
 
         self._build_chunks()
@@ -161,11 +299,32 @@ class DarthServer:
         if not contents_only:
             self._build_chunks()
 
+    # -- device placement ---------------------------------------------------
+    def _put(self, arr: np.ndarray) -> jax.Array:
+        """Per-chunk input onto the device(s): on a mesh with a "hosts"
+        axis the leading slot dim splits over host groups
+        (dist.sharding slot-dim specs); otherwise a plain transfer."""
+        if self.mesh is not None and "hosts" in self.mesh.axis_names:
+            from repro.dist import sharding as sharding_lib
+            sh = sharding_lib.slot_sharding(self.mesh, self.num_slots,
+                                            trailing=arr.ndim - 1)
+            return jax.device_put(jnp.asarray(arr), sh)
+        return jnp.asarray(arr)
+
     def serve(self, queries: np.ndarray, r_targets: np.ndarray,
-              max_engine_steps: int = 100_000
+              max_engine_steps: int = 100_000,
+              kill_hosts: Optional[Dict[int, int]] = None,
               ) -> Tuple[List[Optional[Tuple[np.ndarray, np.ndarray]]],
                          ServeStats]:
-        """Process all queries; returns per-query (dists, ids) + stats."""
+        """Process all queries; returns per-query (dists, ids) + stats.
+
+        `kill_hosts` is fault injection for the multi-host topology:
+        {host_id: engine_step} kills that host's slot slice at the first
+        sync boundary past the given engine step — slots that finished
+        at that boundary count completed, in-flight slots are harvested
+        (partial top-k, counted as truncated) so every admitted query
+        still returns exactly once, and its remaining queue is
+        abandoned (those results stay None)."""
         from repro.core import api as api_lib
 
         queries = np.asarray(queries, np.float32)
@@ -182,100 +341,138 @@ class DarthServer:
         ctx = (meshctx.use_mesh(self.mesh) if self.mesh is not None
                else contextlib.nullcontext())
         with ctx:
-            return self._serve(queries, r_targets, max_engine_steps)
+            return self._serve(queries, r_targets, max_engine_steps,
+                               kill_hosts or {})
 
     def _serve(self, queries: np.ndarray, r_targets: np.ndarray,
-               max_engine_steps: int = 100_000
+               max_engine_steps: int, kill_hosts: Dict[int, int],
                ) -> Tuple[List[Optional[Tuple[np.ndarray, np.ndarray]]],
                           ServeStats]:
         n, d = queries.shape
         b = self.num_slots
+        sph = b // self.hosts
         stats = ServeStats()
         results: List[Optional[Tuple[np.ndarray, np.ndarray]]] = [None] * n
 
-        queue = list(range(n))
-        slot_query = np.full((b,), -1, np.int64)   # which query occupies slot
+        # Striped query partition: host h owns queries h, h+H, h+2H, ...
+        # (hosts == 1 degrades to the single-controller FIFO). Each host
+        # loop owns slots [h*sph, (h+1)*sph) and only ever touches them.
+        hostslots = [
+            _HostSlots(h, h * sph, (h + 1) * sph,
+                       list(range(h, n, self.hosts)), queries, r_targets,
+                       self.interval_for_target, results)
+            for h in range(self.hosts)]
+        stats.hosts = [hl.stats for hl in hostslots]
 
-        def take_batch(count):
-            ids = [queue.pop(0) for _ in range(min(count, len(queue)))]
-            return ids
+        def gather_inputs():
+            rt = np.concatenate([hl.rt for hl in hostslots])
+            ipi = np.concatenate([hl.ipi for hl in hostslots])
+            mpi = np.concatenate([hl.mpi for hl in hostslots])
+            return rt, ipi, mpi
 
-        def harvest(mask: np.ndarray) -> int:
-            """Pull the masked slots' top-k into results; free the slots."""
-            topk_d = np.asarray(jax.device_get(self.engine.topk_d(st.inner)))
-            topk_i = np.asarray(jax.device_get(self.engine.topk_i(st.inner)))
-            for s in np.nonzero(mask)[0]:
-                results[slot_query[s]] = (topk_d[s], topk_i[s])
-                slot_query[s] = -1
-            return int(mask.sum())
+        def occupied_global():
+            return np.concatenate([hl.occupied for hl in hostslots])
 
-        # initial fill
-        ids = take_batch(b)
-        qb = np.zeros((b, d), np.float32)
-        rt = np.zeros((b,), np.float32)
-        for s, qid in enumerate(ids):
-            qb[s] = queries[qid]
-            rt[s] = r_targets[qid]
-            slot_query[s] = qid
-        ip = self.interval_for_target(rt)
-        ipi = np.broadcast_to(np.asarray(ip.ipi, np.float32), (b,)).copy()
-        mpi = np.broadcast_to(np.asarray(ip.mpi, np.float32), (b,)).copy()
-        st = self._init_chunk(self.engine.index, jnp.asarray(qb),
-                              jnp.asarray(ipi), jnp.asarray(mpi))
+        def state_slices():
+            """Host-side copies of the per-slot device outputs every host
+            loop harvests from (one transfer, then pure local slicing)."""
+            topk_d = np.asarray(jax.device_get(
+                self.engine.topk_d(st.inner)))
+            topk_i = np.asarray(jax.device_get(
+                self.engine.topk_i(st.inner)))
+            ndis = np.asarray(jax.device_get(st.inner.ndis))
+            return topk_d, topk_i, ndis
+
+        def harvest_host(hl: _HostSlots, mask_local: np.ndarray,
+                         arrays, *, truncated: bool = False) -> int:
+            topk_d, topk_i, ndis = arrays
+            sl = slice(hl.lo, hl.hi)
+            return hl.harvest(mask_local, topk_d[sl], topk_i[sl], ndis[sl],
+                              truncated=truncated)
+
+        # initial fill: every host admits into all of its slots
+        fills = [hl.fill(np.arange(sph)) for hl in hostslots]
+        qb = np.concatenate([f[1] for f in fills])
+        rt, ipi, mpi = gather_inputs()
+        st = self._init_chunk(self.engine.index, self._put(qb),
+                              self._put(ipi), self._put(mpi))
         # slots with no query: deactivate
-        occupied = slot_query >= 0
+        occupied = occupied_global()
         st = dataclasses.replace(
             st, inner=engines_lib.set_active(
-                st.inner, st.inner.active & jnp.asarray(occupied)))
-        rt_dev = jnp.asarray(rt)
+                st.inner, st.inner.active & self._put(occupied)))
+        rt_dev = self._put(rt)
 
         while True:
             st = self._run_chunk(self.engine.index, st, rt_dev,
-                                 jnp.asarray(ipi), jnp.asarray(mpi))
+                                 self._put(ipi), self._put(mpi))
             stats.engine_steps += self.steps_per_sync
-            stats.slot_steps += self.steps_per_sync * int(occupied.sum())
+            for hl in hostslots:
+                hl.stats.slot_steps += (self.steps_per_sync
+                                        * int(hl.occupied.sum()))
+            # fault injection: kill the named hosts at this sync boundary
+            dying = [hl for hl in hostslots
+                     if hl.alive and hl.host in kill_hosts
+                     and stats.engine_steps >= kill_hosts[hl.host]]
             active = np.asarray(jax.device_get(st.inner.active))
             finished = occupied & ~active
+            arrays = (state_slices()
+                      if finished.any() or dying else None)
+            changed = False
+            for hl in dying:
+                # slots that finished at this very boundary hold a full
+                # top-k: they completed, only the still-running slots
+                # are truncated — then harvest those too, so no
+                # admitted query is dropped
+                sl = slice(hl.lo, hl.hi)
+                fin_local = hl.occupied & ~active[sl]
+                if fin_local.any():
+                    harvest_host(hl, fin_local, arrays)
+                if hl.occupied.any():
+                    harvest_host(hl, hl.occupied, arrays, truncated=True)
+                hl.kill()
+                changed = True
             if finished.any():
-                stats.completed += harvest(finished)
-                occupied = slot_query >= 0
-                # refill — unless the step budget is already exhausted:
-                # a query spliced in now would run zero steps and be
-                # harvested below as init-state junk (ids -1) instead of
-                # staying None in the queue.
-                if queue and stats.engine_steps < max_engine_steps:
-                    free = np.nonzero(~occupied)[0]
-                    ids = take_batch(len(free))
-                    if ids:
-                        stats.refills += 1
-                        mask = np.zeros((b,), bool)
-                        qb2 = np.zeros((b, d), np.float32)
-                        rt2 = rt.copy()
-                        for s, qid in zip(free, ids):
-                            mask[s] = True
-                            qb2[s] = queries[qid]
-                            rt2[s] = r_targets[qid]
-                            slot_query[s] = qid
-                        ip2 = self.interval_for_target(rt2)
-                        ipi2 = np.broadcast_to(
-                            np.asarray(ip2.ipi, np.float32), (b,))
-                        mpi2 = np.broadcast_to(
-                            np.asarray(ip2.mpi, np.float32), (b,))
-                        ipi = np.where(mask, ipi2, ipi)
-                        mpi = np.where(mask, mpi2, mpi)
-                        rt = np.where(mask, rt2, rt)
-                        rt_dev = jnp.asarray(rt)
+                for hl in hostslots:
+                    if not hl.alive:
+                        continue
+                    sl = slice(hl.lo, hl.hi)
+                    fin_local = hl.occupied & ~active[sl]
+                    if fin_local.any():
+                        harvest_host(hl, fin_local, arrays)
+                        changed = True
+                # per-host refill — unless the step budget is already
+                # exhausted: a query spliced in now would run zero steps
+                # and be harvested below as init-state junk (ids -1)
+                # instead of staying None in the queue.
+                if stats.engine_steps < max_engine_steps:
+                    mask = np.zeros((b,), bool)
+                    qb2 = np.zeros((b, d), np.float32)
+                    for hl in hostslots:
+                        if not hl.alive or not hl.queue:
+                            continue
+                        free = np.nonzero(~hl.occupied)[0]
+                        m_loc, q_loc = hl.fill(free)
+                        if m_loc.any():
+                            hl.stats.refills += 1
+                            mask[hl.lo:hl.hi] = m_loc
+                            qb2[hl.lo:hl.hi] = q_loc
+                    if mask.any():
+                        rt, ipi, mpi = gather_inputs()
+                        rt_dev = self._put(rt)
                         fresh = self._init_chunk(self.engine.index,
-                                                 jnp.asarray(qb2),
-                                                 jnp.asarray(ipi),
-                                                 jnp.asarray(mpi))
-                        st = self._splice(jnp.asarray(mask), fresh, st)
-                        occupied = slot_query >= 0
-                # deactivate empty slots
+                                                 self._put(qb2),
+                                                 self._put(ipi),
+                                                 self._put(mpi))
+                        st = self._splice(self._put(mask), fresh, st)
+                        changed = True
+            if changed:
+                # deactivate empty (and dead-host) slots
+                occupied = occupied_global()
                 st = dataclasses.replace(
                     st, inner=engines_lib.set_active(
-                        st.inner, st.inner.active & jnp.asarray(occupied)))
-            if not occupied.any() and not queue:
+                        st.inner, st.inner.active & self._put(occupied)))
+            if not occupied.any() and not any(hl.queue for hl in hostslots):
                 break
             if stats.engine_steps >= max_engine_steps:
                 # Step budget exhausted: the occupied slots still hold a
@@ -284,6 +481,19 @@ class DarthServer:
                 # None). Queries never admitted from the queue remain
                 # None: they have no state to harvest.
                 if occupied.any():
-                    stats.truncated += harvest(occupied)
+                    arrays = state_slices()
+                    for hl in hostslots:
+                        if hl.occupied.any():
+                            harvest_host(hl, hl.occupied, arrays,
+                                         truncated=True)
                 break
+
+        for hl in hostslots:
+            if hl.alive:
+                hl.stats.abandoned = len(hl.queue)
+            stats.completed += hl.stats.completed
+            stats.slot_steps += hl.stats.slot_steps
+            stats.refills += hl.stats.refills
+            stats.truncated += hl.stats.truncated
+            stats.ndis_harvested += hl.stats.ndis_harvested
         return results, stats

@@ -47,6 +47,19 @@ def test_serve_main_hnsw(monkeypatch, capsys):
     assert "steady-state: target 0.80: mean recall" in out
 
 
+def test_serve_main_multi_host(monkeypatch, capsys):
+    """--hosts N drives the per-host slot loops end-to-end (simulated
+    multi-host on one process; every host must complete its stripe)."""
+    out = _run_main(monkeypatch, capsys, [
+        "--n", "900", "--dim", "16", "--queries", "24", "--learn", "128",
+        "--nlist", "12", "--slots", "8", "--hosts", "2",
+        "--targets", "0.8,0.9",
+    ])
+    assert "multi-host slot pool: 2 host loops x 4 slots" in out
+    assert "steady-state: per-host completed 12/12" in out
+    assert "steady-state: target 0.80: mean recall" in out
+
+
 def test_serve_main_rejects_bad_targets(monkeypatch, capsys):
     with pytest.raises(ValueError, match=r"in \(0, 1\]"):
         _run_main(monkeypatch, capsys, [

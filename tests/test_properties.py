@@ -7,13 +7,19 @@ tests/_vendor when the real package is absent):
   * ivf.build SQ8 storage — per-dim affine round-trip error is bounded
     by half a quantization step, and bucket_sqnorm matches the norms of
     the DEQUANTIZED vectors (what quantized search actually measures).
+  * mutate.delta.DeltaTier — arbitrary insert/delete/wrap interleavings
+    preserve the ring invariants (free-slot-only placement, tombstone
+    pad convention, live-count accounting), and merging an EMPTY delta
+    into a base top-k is the identity.
 """
 import numpy as np
+import jax
 import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
 from repro.dist import collectives
 from repro.index import ivf
+from repro.mutate import delta as delta_lib
 
 
 def _candidates(rng, b, m, inf_frac):
@@ -90,3 +96,111 @@ def test_sq8_round_trip_error_bound(n, d, scale_pow, seed):
     # padding contract survives quantized builds
     assert np.isposinf(sqn[~valid]).all()
     assert (np.asarray(index.bucket_vecs)[~valid] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# DeltaTier ring invariants under arbitrary insert/delete interleavings
+# ---------------------------------------------------------------------------
+
+def _tiny_base(dim):
+    """Smallest possible base index: the properties target the DELTA
+    ring bookkeeping, so the base just anchors MutableIndex (its one
+    bucket never changes)."""
+    from repro.index import ivf as ivf_lib
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(8, dim)).astype(np.float32)
+    return ivf_lib.build(x, nlist=1, iters=1, seed=0)
+
+
+@settings(deadline=None, max_examples=12)
+@given(capacity=st.integers(4, 40), dim=st.integers(2, 8),
+       seed=st.integers(0, 100_000), nops=st.integers(1, 30))
+def test_delta_tier_interleavings_preserve_invariants(capacity, dim, seed,
+                                                      nops):
+    """Arbitrary interleavings of insert / delete (forcing ring wraps
+    through repeated fill-and-free cycles) keep the DeltaTier invariants:
+
+      * free-slot-only placement — a live slot is never overwritten, so
+        every live id still holds exactly the vector it was inserted
+        with;
+      * tombstoned / empty slots carry the pad convention (ids -1,
+        sqnorm +inf) and live slots carry their true sqnorm;
+      * live-count accounting — num_delta == inserts - deletes (into /
+        of the delta), and MutableIndex.num_live == issued - deleted.
+    """
+    from repro.mutate import MutableIndex
+
+    mut = MutableIndex(_tiny_base(dim), capacity=capacity)
+    rng = np.random.default_rng(seed)
+    model = {}            # live delta id -> its vector (the oracle)
+    n_ins = n_del = 0
+    for _ in range(nops):
+        room = capacity - mut.num_delta
+        if model and (room == 0 or rng.random() < 0.45):
+            kill = rng.choice(sorted(model), size=rng.integers(
+                1, len(model) + 1), replace=False)
+            assert mut.delete(kill) == len(kill)
+            for i in kill:
+                model.pop(int(i))
+            n_del += len(kill)
+        elif room > 0:
+            m = int(rng.integers(1, room + 1))
+            vecs = rng.normal(size=(m, dim)).astype(np.float32)
+            ids = mut.insert(vecs)
+            assert len(ids) == m
+            for j, i in enumerate(ids):
+                assert int(i) not in model   # ids never reused
+                model[int(i)] = vecs[j]
+            n_ins += m
+
+        d_ids = np.asarray(jax.device_get(mut.delta.ids))
+        d_vecs = np.asarray(jax.device_get(mut.delta.vecs))
+        d_sqn = np.asarray(jax.device_get(mut.delta.sqnorm))
+        live = d_ids >= 0
+        # live-count accounting
+        assert mut.num_delta == n_ins - n_del == int(live.sum())
+        assert set(d_ids[live].tolist()) == set(model)
+        # free-slot-only placement: every live id still holds its vector
+        for slot in np.nonzero(live)[0]:
+            np.testing.assert_array_equal(d_vecs[slot],
+                                          model[int(d_ids[slot])])
+        # pad convention: dead/empty slots are +inf / -1, live carry
+        # their true sqnorm
+        assert np.isposinf(d_sqn[~live]).all()
+        np.testing.assert_allclose(
+            d_sqn[live], (d_vecs[live] ** 2).sum(axis=1), rtol=1e-5,
+            atol=1e-5)
+    # base ids untouched by delta churn
+    assert mut.num_live == 8 + n_ins - n_del
+
+
+@settings(deadline=None, max_examples=15)
+@given(b=st.integers(1, 8), k=st.integers(1, 10), dim=st.integers(2, 12),
+       capacity=st.integers(10, 64), inf_frac=st.floats(0.0, 0.6),
+       seed=st.integers(0, 10_000))
+def test_empty_delta_merge_is_identity(b, k, dim, capacity, inf_frac,
+                                       seed):
+    """Merging an EMPTY delta's scan into any well-formed base top-k is
+    the identity — the contract that makes mutable_engine bit-for-bit
+    equal to its base engine post-compaction."""
+    rng = np.random.default_rng(seed)
+    delta = delta_lib.make_delta(capacity, dim)
+    q = jnp.asarray(rng.normal(size=(b, dim)).astype(np.float32))
+    dd, di, live, nins = delta_lib.delta_topk(delta, q, k)
+    assert int(live) == 0 and (np.asarray(nins) == 0).all()
+    assert np.isposinf(np.asarray(dd)).all()
+    assert (np.asarray(di) == -1).all()
+
+    # well-formed base top-k: ascending, +inf tail with ids -1
+    base_d = np.sort(rng.uniform(0.0, 100.0, (b, k)).astype(np.float32), 1)
+    n_inf = (rng.random((b, 1)) * (k + 1)).astype(int)
+    tail = np.arange(k)[None, :] >= (k - n_inf)
+    base_d = np.where(tail, np.inf, base_d)
+    base_i = np.where(tail, -1,
+                      rng.integers(0, 10_000, (b, k))).astype(np.int32)
+
+    m_d, m_i = collectives.merge_topk(
+        jnp.concatenate([jnp.asarray(base_d), dd], axis=1),
+        jnp.concatenate([jnp.asarray(base_i), di], axis=1), k)
+    np.testing.assert_array_equal(np.asarray(m_d), base_d)
+    np.testing.assert_array_equal(np.asarray(m_i), base_i)

@@ -5,13 +5,20 @@ recall predictor on synthetic data, run darth_search at declared targets
 {0.80, 0.90, 0.95}, and assert that (a) mean achieved recall is within
 0.03 of every declared target and (b) early termination measurably saves
 distance calculations vs plain_search (the speedup that makes the
-contract useful, paper §4.2)."""
+contract useful, paper §4.2).
+
+The contract is also asserted under the DEPLOYED topology, not just
+`Darth.search`: the multi-host slot-pool server (per-host admission /
+refill / compaction over slot slices) must meet the same targets with
+an ndis speedup — serving-harness structure, not just the index,
+determines what users actually observe."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
 
 from repro.core import api, engines
 from repro.index import flat, hnsw, ivf
+from repro.serve import DarthServer
 
 pytestmark = pytest.mark.slow
 
@@ -56,6 +63,35 @@ def _assert_conformance(d, ds, name):
     assert max(speedups) > 1.5, (name, speedups)
 
 
+def _assert_serve_conformance(d, ds, name, *, hosts):
+    """Same contract, through the deployed topology: every declared
+    target served through the multi-host slot pool lands within
+    TOLERANCE, with a real ndis saving vs plain search (ServeStats
+    aggregates harvested ndis across the per-host loops)."""
+    q = jnp.asarray(ds.queries)
+    n = ds.queries.shape[0]
+    _, gt_i = flat.search(q, jnp.asarray(ds.base), K)
+    _, _, plain = d.search_plain(q)
+    plain_ndis = float(np.asarray(plain.ndis).mean())
+
+    server = DarthServer(d.engine, d.trained.predictor,
+                         d.interval_for_target, num_slots=32,
+                         steps_per_sync=2, hosts=hosts)
+    speedups = []
+    for rt in TARGETS:
+        results, stats = server.serve(
+            ds.queries, np.full((n,), rt, np.float32))
+        assert stats.completed == n, (name, hosts, rt, stats)
+        ids = np.stack([r[1] for r in results])
+        rec = float(np.asarray(flat.recall_at_k(jnp.asarray(ids),
+                                                gt_i)).mean())
+        nd = stats.ndis_harvested / stats.completed
+        assert rec >= rt - TOLERANCE, (name, hosts, rt, rec)
+        assert nd < plain_ndis, (name, hosts, rt, nd, plain_ndis)
+        speedups.append(plain_ndis / max(nd, 1.0))
+    assert max(speedups) > 1.5, (name, hosts, speedups)
+
+
 def test_ivf_meets_declared_targets(conformance_ds):
     ds = conformance_ds
     index = ivf.build(ds.base, nlist=32, seed=0)
@@ -74,3 +110,25 @@ def test_hnsw_meets_declared_targets(conformance_ds):
         ds, lambda **kw: engines.hnsw_engine(index, **kw),
         engines.hnsw_engine(index, k=K, ef=192, max_steps=400))
     _assert_conformance(d, ds, "hnsw")
+
+
+@pytest.mark.parametrize("hosts", [2, 4])
+def test_ivf_multi_host_serving_meets_declared_targets(conformance_ds,
+                                                       hosts):
+    ds = conformance_ds
+    index = ivf.build(ds.base, nlist=32, seed=0)
+    d = _fit_darth(
+        ds, lambda **kw: engines.ivf_engine(index, **kw),
+        engines.ivf_engine(index, k=K, nprobe=32))
+    _assert_serve_conformance(d, ds, "ivf", hosts=hosts)
+
+
+@pytest.mark.parametrize("hosts", [2, 4])
+def test_hnsw_multi_host_serving_meets_declared_targets(conformance_ds,
+                                                        hosts):
+    ds = conformance_ds
+    index = hnsw.build(ds.base, m=16, passes=2, ef_construction=96)
+    d = _fit_darth(
+        ds, lambda **kw: engines.hnsw_engine(index, **kw),
+        engines.hnsw_engine(index, k=K, ef=192, max_steps=400))
+    _assert_serve_conformance(d, ds, "hnsw", hosts=hosts)

@@ -23,13 +23,8 @@ def served_setup():
 
 def test_server_completes_all_queries(served_setup):
     ds, index, d = served_setup
-    def interval_for_target(rt):
-        p = [d.interval_params(float(r)) for r in np.atleast_1d(rt)]
-        return intervals.IntervalParams(
-            ipi=np.array([x.ipi for x in p], np.float32),
-            mpi=np.array([x.mpi for x in p], np.float32))
-
-    server = DarthServer(d.engine, d.trained.predictor, interval_for_target,
+    server = DarthServer(d.engine, d.trained.predictor,
+                         d.interval_for_target,
                          num_slots=32, steps_per_sync=2)
     rts = np.full((200,), 0.9, np.float32)
     results, stats = server.serve(ds.queries, rts)
@@ -81,13 +76,8 @@ def test_step_budget_refills_never_return_junk(served_setup):
     must stay queued (None), never harvested as init-state junk."""
     ds, index, d = served_setup
 
-    def interval_for_target(rt):
-        p = [d.interval_params(float(r)) for r in np.atleast_1d(rt)]
-        return intervals.IntervalParams(
-            ipi=np.array([x.ipi for x in p], np.float32),
-            mpi=np.array([x.mpi for x in p], np.float32))
-
-    server = DarthServer(d.engine, d.trained.predictor, interval_for_target,
+    server = DarthServer(d.engine, d.trained.predictor,
+                         d.interval_for_target,
                          num_slots=8, steps_per_sync=2)
     rts = np.full((60,), 0.8, np.float32)
     results, stats = server.serve(ds.queries[:60], rts, max_engine_steps=8)
@@ -138,13 +128,8 @@ def test_server_rejects_malformed_requests(served_setup):
     broadcast."""
     ds, index, d = served_setup
 
-    def interval_for_target(rt):
-        p = [d.interval_params(float(r)) for r in np.atleast_1d(rt)]
-        return intervals.IntervalParams(
-            ipi=np.array([x.ipi for x in p], np.float32),
-            mpi=np.array([x.mpi for x in p], np.float32))
-
-    server = DarthServer(d.engine, d.trained.predictor, interval_for_target,
+    server = DarthServer(d.engine, d.trained.predictor,
+                         d.interval_for_target,
                          num_slots=8, steps_per_sync=2)
     q = ds.queries[:16]
     with pytest.raises(ValueError, match="does not match"):
@@ -162,13 +147,8 @@ def test_server_hot_swap_predictor_and_engine(served_setup):
     drift-recalibration and mutation-burst paths)."""
     ds, index, d = served_setup
 
-    def interval_for_target(rt):
-        p = [d.interval_params(float(r)) for r in np.atleast_1d(rt)]
-        return intervals.IntervalParams(
-            ipi=np.array([x.ipi for x in p], np.float32),
-            mpi=np.array([x.mpi for x in p], np.float32))
-
-    server = DarthServer(d.engine, d.trained.predictor, interval_for_target,
+    server = DarthServer(d.engine, d.trained.predictor,
+                         d.interval_for_target,
                          num_slots=16, steps_per_sync=2)
     rts = np.full((32,), 0.9, np.float32)
     results, stats = server.serve(ds.queries[:32], rts)
@@ -202,6 +182,221 @@ def test_server_hot_swap_predictor_and_engine(served_setup):
     ids = np.stack([r[1] for r in results])
     rec = float(np.asarray(flat.recall_at_k(jnp.asarray(ids), gt_i)).mean())
     assert rec >= 0.85, rec
+
+
+def test_interval_for_target_is_the_shared_builder(served_setup):
+    """Dedup regression (PR 4 review): Darth.interval_for_target is the
+    ONE per-query IntervalParams builder — element j equals the scalar
+    interval_params(rt[j]) exactly, and the former re-implementations
+    (launch/serve.py, benchmarks/mutate.py) are pinned to it."""
+    import inspect
+
+    ds, index, d = served_setup
+    rt = np.array([0.8, 0.9, 0.95, 0.85, 0.5], np.float32)
+    ip = d.interval_for_target(rt)
+    assert ip.ipi.shape == ip.mpi.shape == (5,)
+    for j, r in enumerate(rt):
+        p = d.interval_params(float(r))
+        assert ip.ipi[j] == np.float32(p.ipi), (j, r)
+        assert ip.mpi[j] == np.float32(p.mpi), (j, r)
+    # scalar input broadcasts like the vector path
+    ip1 = d.interval_for_target(0.9)
+    assert ip1.ipi.shape == (1,)
+    assert ip1.ipi[0] == np.float32(d.interval_params(0.9).ipi)
+
+    # the former call sites must not re-implement the builder
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from repro.launch import serve as serve_launch
+    import benchmarks.mutate as bench_mutate
+    for mod in (serve_launch, bench_mutate):
+        src = inspect.getsource(mod)
+        assert "def interval_for_target" not in src, mod.__name__
+        assert "darth.interval_for_target" in src, mod.__name__
+
+
+@pytest.mark.parametrize("hosts", [2, 4])
+def test_multi_host_matches_single_controller(served_setup, hosts):
+    """Tentpole parity bar: the multi-host slot pool (per-host
+    admission / refill / compaction loops over slot slices) returns
+    EXACTLY the single-controller server's output — per-query topk_d /
+    topk_i, total harvested ndis, and truncated — because per-slot
+    search state never crosses slots."""
+    ds, index, d = served_setup
+    rts = np.tile([0.7, 0.9, 0.8, 0.95], 50).astype(np.float32)
+
+    ref_server = DarthServer(d.engine, d.trained.predictor,
+                             d.interval_for_target,
+                             num_slots=16, steps_per_sync=2, hosts=1)
+    ref, ref_stats = ref_server.serve(ds.queries, rts)
+    assert ref_stats.completed == 200
+
+    server = DarthServer(d.engine, d.trained.predictor,
+                         d.interval_for_target,
+                         num_slots=16, steps_per_sync=2, hosts=hosts)
+    res, stats = server.serve(ds.queries, rts)
+    assert stats.completed == 200 and stats.truncated == 0
+    assert len(stats.hosts) == hosts
+    for a, b in zip(ref, res):
+        np.testing.assert_allclose(a[0], b[0], atol=0)   # dists, exact
+        np.testing.assert_array_equal(a[1], b[1])        # ids
+    assert stats.ndis_harvested == ref_stats.ndis_harvested
+    assert stats.truncated == ref_stats.truncated
+    assert stats.slot_steps > 0
+    # every host really served its stripe (no host starved)
+    for h in stats.hosts:
+        assert h.admitted == 200 // hosts
+        assert h.completed == h.admitted and not h.killed
+
+
+@pytest.mark.parametrize("hosts", [1, 2, 4])
+def test_multi_host_mutable_engine_matches_single_controller(hosts):
+    """The Engine protocol keeps mutable (delta-tier) serving working
+    unchanged through the multi-host split: after an insert/delete
+    burst, every host count returns the hosts=1 output exactly."""
+    from repro import mutate
+    from repro.data import vectors
+
+    ds = vectors.make_dataset(n=2000, d=16, num_learn=192, num_queries=64,
+                              clusters=16, cluster_std=1.0, seed=2)
+    index = ivf.build(ds.base, nlist=16, seed=2)
+    mut = mutate.MutableIndex(index, capacity=512)
+    mut.apply(vectors.mutation_stream(ds, insert_pct=0.2, delete_pct=0.1,
+                                      drift=0.3, steps=4, seed=3))
+
+    def make_engine(**kw):
+        return engines.mutable_engine(
+            engines.ivf_engine(mut.base, **kw), mut.delta)
+
+    d = api.Darth(make_engine=make_engine,
+                  engine=make_engine(k=10, nprobe=16))
+    d.fit(jnp.asarray(ds.learn), jnp.asarray(ds.base), batch=128)
+    rts = np.tile([0.8, 0.9], 32).astype(np.float32)
+
+    ref = None
+    for h in (1, hosts):
+        server = DarthServer(d.engine, d.trained.predictor,
+                             d.interval_for_target,
+                             num_slots=8, steps_per_sync=2, hosts=h)
+        res, stats = server.serve(ds.queries, rts)
+        assert stats.completed == 64
+        if ref is None:
+            ref = (res, stats)
+        else:
+            for a, b in zip(ref[0], res):
+                np.testing.assert_allclose(a[0], b[0], atol=0)
+                np.testing.assert_array_equal(a[1], b[1])
+            assert stats.ndis_harvested == ref[1].ndis_harvested
+
+
+def test_multi_host_truncation_matches_single_controller(served_setup):
+    """Budget truncation under multi-host: with one slot per query (no
+    refill divergence possible) the truncated count and every partial
+    top-k match the single-controller server at hosts {1, 2, 4}."""
+    ds, index, d = served_setup
+
+    def interval_for_target(rt):
+        b = np.atleast_1d(rt).shape[0]
+        # huge intervals: nothing terminates early, the tiny budget hits
+        return intervals.IntervalParams(
+            ipi=np.full((b,), 1e9, np.float32),
+            mpi=np.full((b,), 1e9, np.float32))
+
+    rts = np.full((32,), 0.9, np.float32)
+    ref = None
+    for hosts in (1, 2, 4):
+        server = DarthServer(d.engine, d.trained.predictor,
+                             interval_for_target,
+                             num_slots=32, steps_per_sync=2, hosts=hosts)
+        res, stats = server.serve(ds.queries[:32], rts, max_engine_steps=2)
+        assert stats.truncated == 32 and stats.completed == 0
+        assert all(r is not None for r in res)
+        if ref is None:
+            ref = res
+        else:
+            for a, b in zip(ref, res):
+                np.testing.assert_allclose(a[0], b[0], atol=0)
+                np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_kill_host_returns_every_admitted_query_exactly_once(served_setup):
+    """Fault injection (the PR 3 truncation bug class, per-host): kill
+    one host's slot slice mid-serve — its in-flight queries must be
+    harvested exactly once (partial top-k, counted truncated), its
+    queue abandoned (None), and the surviving hosts must drain their
+    stripes completely."""
+    ds, index, d = served_setup
+    n = 120
+
+    def interval_for_target(rt):
+        b = np.atleast_1d(rt).shape[0]
+        # huge intervals: the predictor never fires, every query runs to
+        # natural termination (nprobe steps) — so the killed host is
+        # GUARANTEED to hold in-flight slots at the kill boundary
+        return intervals.IntervalParams(
+            ipi=np.full((b,), 1e9, np.float32),
+            mpi=np.full((b,), 1e9, np.float32))
+
+    rts = np.full((n,), 0.9, np.float32)
+    server = DarthServer(d.engine, d.trained.predictor,
+                         interval_for_target,
+                         num_slots=16, steps_per_sync=2, hosts=4)
+    results, stats = server.serve(ds.queries[:n], rts,
+                                  kill_hosts={1: 4})
+    dead = stats.hosts[1]
+    assert dead.killed
+    # every admitted query on the dead host came back exactly once:
+    # nothing naturally terminates by step 4 (< nprobe), so all 4
+    # in-flight slots are truncated partial top-ks
+    assert dead.admitted == dead.truncated == 4 and dead.completed == 0
+    assert dead.abandoned == n // 4 - dead.admitted
+    # survivors drained their stripes fully
+    for h in (0, 2, 3):
+        alive = stats.hosts[h]
+        assert not alive.killed and alive.abandoned == 0
+        assert alive.completed == n // 4
+    # global ledger: every query is returned exactly once or abandoned
+    done = [i for i, r in enumerate(results) if r is not None]
+    assert len(done) == stats.completed + stats.truncated
+    assert len(done) + dead.abandoned == n
+    # the dead host's stripe is queries 1, 5, 9, ... (striped partition)
+    none_ids = [i for i, r in enumerate(results) if r is None]
+    assert all(i % 4 == 1 for i in none_ids)
+    # harvested partial top-ks are real results, not init junk
+    for i in done:
+        dists, ids = results[i]
+        assert (ids >= 0).all() and np.isfinite(dists).all()
+
+
+def test_kill_host_counts_finished_slots_as_completed(served_setup):
+    """Review regression: a killed host's slots that FINISHED at the
+    kill boundary hold a full top-k — they count completed, not
+    truncated (only still-running slots are truncated)."""
+    ds, index, d = served_setup
+    n = 120
+    rts = np.full((n,), 0.9, np.float32)
+    server = DarthServer(d.engine, d.trained.predictor,
+                         d.interval_for_target,
+                         num_slots=16, steps_per_sync=2, hosts=4)
+    results, stats = server.serve(ds.queries[:n], rts,
+                                  kill_hosts={1: 4})
+    dead = stats.hosts[1]
+    assert dead.killed
+    assert dead.admitted == dead.completed + dead.truncated
+    # with real intervals these fast queries finish within the first
+    # chunks: the kill must not relabel their full top-ks as truncated
+    assert dead.completed > 0
+    done = [i for i, r in enumerate(results) if r is not None]
+    assert len(done) == stats.completed + stats.truncated
+    assert len(done) + dead.abandoned == n
+
+
+def test_server_rejects_indivisible_host_split():
+    with pytest.raises(ValueError, match="split evenly"):
+        DarthServer(engine=None, predictor=None, interval_for_target=None,
+                    num_slots=10, hosts=4)
 
 
 def test_server_compaction_saves_slot_steps(served_setup):
