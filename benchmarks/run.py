@@ -17,6 +17,7 @@ def main() -> None:
         ("dist_sharded_ivf_probe", dist_search.dist_sharded_ivf_probe),
         ("dist_sharded_hnsw_beam", dist_search.dist_sharded_hnsw_beam),
         ("dist_multi_host_serve", dist_search.dist_multi_host_serve),
+        ("dist_difficulty_serve", dist_search.dist_difficulty_serve),
         ("mutate_burst", mutate.mutate_burst),
         ("table5_predictor_quality", pt.table5_predictor_quality),
         ("table4_training_cost", pt.table4_training_cost),

@@ -60,8 +60,8 @@ def ivf_engine(index: ivf_lib.IVFIndex, *, k: int, nprobe: int) -> Engine:
 
 
 def sharded_ivf_engine(index: ivf_lib.IVFIndex, mesh, *, k: int, nprobe: int,
-                       use_kernel: bool = True,
-                       interpret: bool = True) -> Engine:
+                       use_kernel: bool = True, interpret: bool = True,
+                       pin_merge: bool = True) -> Engine:
     """ShardedIVFEngine: the IVF probe loop over a cap-sharded bucket
     store (dist.place_index + dist.collectives.make_sharded_probe_step).
 
@@ -77,8 +77,13 @@ def sharded_ivf_engine(index: ivf_lib.IVFIndex, mesh, *, k: int, nprobe: int,
     # index goes through every jit boundary as an argument so its
     # committed cap-axis sharding is respected (a closure const would
     # replicate — see the Engine docstring).
+    # pin_merge keeps the candidate top-k merge inside the shard_map so
+    # a hosts-split slot dim never feeds the unpartitionable TopK
+    # custom-call (see make_sharded_probe_step); False is the pre-fix
+    # behavior, kept for collective-traffic benchmarking.
     step = dist_collectives.make_sharded_probe_step(
-        mesh, use_kernel=use_kernel, interpret=interpret)
+        mesh, use_kernel=use_kernel, interpret=interpret,
+        pin_merge=pin_merge)
     return Engine(
         index=index,
         init=lambda idx, q: ivf_lib.init_state(idx, q, k=k, nprobe=nprobe),
@@ -123,7 +128,8 @@ def mutable_engine(base_engine: Engine, delta, *,
 
 
 def sharded_hnsw_engine(index: hnsw_lib.HNSWIndex, mesh, *, k: int, ef: int,
-                        max_steps: int = 0) -> Engine:
+                        max_steps: int = 0,
+                        pin_merge: bool = True) -> Engine:
     """ShardedHNSWEngine: the beam loop over a row-sharded graph
     (dist.place_index + dist.collectives.make_sharded_beam_step).
 
@@ -140,7 +146,11 @@ def sharded_hnsw_engine(index: hnsw_lib.HNSWIndex, mesh, *, k: int, ef: int,
     # the index goes through every jit boundary as an argument so its
     # committed row sharding is respected (a closure const would
     # replicate — see the Engine docstring).
-    step = dist_collectives.make_sharded_beam_step(mesh)
+    # pin_merge: frontier top-k runs inside the shard_map (the TopK
+    # custom-call cannot be partitioned over a hosts-split slot dim —
+    # see make_sharded_beam_step); False is the pre-fix behavior.
+    step = dist_collectives.make_sharded_beam_step(mesh,
+                                                   pin_merge=pin_merge)
     limit = max_steps or 8 * ef
     return Engine(
         index=index,

@@ -50,10 +50,21 @@ SHARD_AXIS = "model"
 # "model"-axis collectives then run WITHIN a host group — the per-chunk
 # all-gather/psum operands shrink from [B, ..] to [B/hosts, ..]. Absent
 # the axis, the spec entry is None and the programs are unchanged.
+#
+# Slot-dim top-k pinning: jax.lax.top_k lowers to a TopK custom-call,
+# which the GSPMD partitioner cannot split — any top-k over the
+# hosts-split slot dim that runs OUTSIDE a shard_map forces the
+# partitioner to all-gather its operand across host groups first (the
+# replicated-frontier reshard the ROADMAP flagged at ~1.12x). Both
+# sharded steps therefore run their candidate merges INSIDE a shard_map
+# whose batch spec is P(BATCH_AXIS, ...), so the custom-call only ever
+# sees each host group's local slot rows (benchmarks/dist_search.py
+# dist_multi_host_serve gates the resulting per-chunk byte win).
 BATCH_AXIS = "hosts"
 
 
 def shard_count(mesh: Mesh, axis: str = SHARD_AXIS) -> int:
+    """Size of `axis` on `mesh` (1 when the mesh lacks the axis)."""
     return int(mesh.shape[axis]) if axis in mesh.axis_names else 1
 
 
@@ -178,7 +189,8 @@ _PROBE_CACHE: "collections.OrderedDict[tuple, Callable]" = \
 
 
 def make_sharded_probe_step(mesh: Mesh, *, axis: str = SHARD_AXIS,
-                            use_kernel: bool = True, interpret: bool = True
+                            use_kernel: bool = True, interpret: bool = True,
+                            pin_merge: bool = True
                             ) -> Callable[[Any, Any], Any]:
     """One IVF probe step over a cap-sharded bucket store.
 
@@ -196,8 +208,16 @@ def make_sharded_probe_step(mesh: Mesh, *, axis: str = SHARD_AXIS,
     masks, ndis from the replicated bucket_sizes) is replicated and
     identical to the single-device step, so results match
     index.ivf.search exactly on any shard count.
+
+    `pin_merge` keeps the running-top-k merge (a jax.lax.top_k, i.e. an
+    unpartitionable TopK custom-call) INSIDE the shard_map so it runs on
+    each host group's local slot rows; False restores the pre-pinning
+    layout (merge outside the shard_map, forcing a cross-host gather of
+    the [B, k + k*shards] candidate array when the mesh has a hosts
+    axis) so benchmarks can measure the before/after traffic. The two
+    layouts are numerically identical.
     """
-    key = (_mesh_key(mesh), axis, use_kernel, interpret)
+    key = (_mesh_key(mesh), axis, use_kernel, interpret, pin_merge)
     nshards = shard_count(mesh, axis)
     bh = _batch_axis(mesh)
 
@@ -223,12 +243,11 @@ def make_sharded_probe_step(mesh: Mesh, *, axis: str = SHARD_AXIS,
         else:
             q_eff = s.q
             bias = s.qsq
-        kth = s.topk_d[:, -1:]
-
-        def scan(q_eff, bias, kth, bucket, vecs, sqn, ids):
+        def scan(q_eff, bias, topk_d, topk_i, bucket, vecs, sqn, ids):
             # Local batch size, NOT the outer b: with a "hosts" batch
             # axis each host group scans only its slot slice.
             bl = q_eff.shape[0]
+            kth = topk_d[:, -1:]
             v = vecs[bucket]                     # [Bl, capS, D] local gather
             sq = sqn[bucket]
             id_ = ids[bucket]
@@ -257,21 +276,34 @@ def make_sharded_probe_step(mesh: Mesh, *, axis: str = SHARD_AXIS,
             i_loc = jnp.where(jnp.isfinite(d_loc), i_loc, -1)
             cand_d = jax.lax.all_gather(d_loc, axis, axis=1, tiled=True)
             cand_i = jax.lax.all_gather(i_loc, axis, axis=1, tiled=True)
-            return cand_d, cand_i, jax.lax.psum(cnt, axis)
+            if not pin_merge:
+                return cand_d, cand_i, jax.lax.psum(cnt, axis)
+            # Merge INSIDE the shard_map: the TopK custom-call then only
+            # sees this host group's slot rows (see BATCH_AXIS note).
+            # Replicated across `axis` within a host group — every
+            # device holds the full gathered candidates, same values.
+            new_d, new_i = merge_topk(
+                jnp.concatenate([topk_d, cand_d], axis=1),
+                jnp.concatenate([topk_i, cand_i], axis=1), k)
+            return new_d, new_i, jax.lax.psum(cnt, axis)
 
         sharded = shard_map(
             scan, mesh=mesh,
-            in_specs=(P(bh, None), P(bh, None), P(bh, None), P(bh),
-                      P(None, axis, None), P(None, axis), P(None, axis)),
+            in_specs=(P(bh, None), P(bh, None), P(bh, None), P(bh, None),
+                      P(bh), P(None, axis, None), P(None, axis),
+                      P(None, axis)),
             out_specs=(P(bh, None), P(bh, None), P(bh)),
             check_rep=False)
-        cand_d, cand_i, cnt = sharded(
-            q_eff, bias, kth, bucket,
+        out_d, out_i, cnt = sharded(
+            q_eff, bias, s.topk_d, s.topk_i, bucket,
             index.bucket_vecs, index.bucket_sqnorm, index.bucket_ids)
 
-        new_d, new_i = merge_topk(
-            jnp.concatenate([s.topk_d, cand_d], axis=1),
-            jnp.concatenate([s.topk_i, cand_i], axis=1), k)
+        if pin_merge:
+            new_d, new_i = out_d, out_i
+        else:
+            new_d, new_i = merge_topk(
+                jnp.concatenate([s.topk_d, out_d], axis=1),
+                jnp.concatenate([s.topk_i, out_i], axis=1), k)
         inserts = jnp.minimum(cnt, k)
         done_probes = s.probe_pos + s.active.astype(jnp.int32)
         return dataclasses.replace(
@@ -298,8 +330,8 @@ _BEAM_CACHE: "collections.OrderedDict[tuple, Callable]" = \
     collections.OrderedDict()
 
 
-def make_sharded_beam_step(mesh: Mesh, *, axis: str = SHARD_AXIS
-                           ) -> Callable[..., Any]:
+def make_sharded_beam_step(mesh: Mesh, *, axis: str = SHARD_AXIS,
+                           pin_merge: bool = True) -> Callable[..., Any]:
     """One HNSW beam expansion over a row-sharded graph.
 
     Returns step(index, state, k=..) -> state, a drop-in replacement for
@@ -330,10 +362,27 @@ def make_sharded_beam_step(mesh: Mesh, *, axis: str = SHARD_AXIS
     all-gather per step — O(B*M*shards) bytes, independent of N and D,
     versus the O(B*M*D) vector gather GSPMD emits for the unsharded
     step on a mesh-placed index.
+
+    `pin_merge` runs the frontier merge's top-k (hnsw.frontier_topk, an
+    unpartitionable TopK custom-call) inside a batch-axis shard_map so
+    it stays on each host group's local slot rows; False restores the
+    pre-pinning layout (merge outside, forcing a cross-host gather of
+    the [B, ef + M] frontier on a hosts mesh). Numerically identical
+    either way — the shard_map wraps the very same frontier_topk.
     """
-    key = (_mesh_key(mesh), axis)
+    key = (_mesh_key(mesh), axis, pin_merge)
     nshards = shard_count(mesh, axis)
     bh = _batch_axis(mesh)
+
+    def local_frontier_topk(cand_d, cand_i, cand_e, ef):
+        from repro.index import hnsw as hnsw_lib
+        fn = shard_map(
+            lambda d, i, e: hnsw_lib.frontier_topk(d, i, e, ef),
+            mesh=mesh,
+            in_specs=(P(bh, None), P(bh, None), P(bh, None)),
+            out_specs=(P(bh, None), P(bh, None), P(bh, None)),
+            check_rep=False)
+        return fn(cand_d, cand_i, cand_e)
 
     def beam_step(index: Any, s: Any, *, k: int) -> Any:
         from repro.index import hnsw as hnsw_lib
@@ -390,8 +439,10 @@ def make_sharded_beam_step(mesh: Mesh, *, axis: str = SHARD_AXIS
         # finite on its single owner shard, so this restores the exact
         # [B, M] layout (and top_k tie order) of the unsharded step.
         dist = dist_all.reshape(b, nshards, mdeg).min(axis=1)
+        topk = (local_frontier_topk if pin_merge and bh is not None
+                else hnsw_lib.frontier_topk)
         return hnsw_lib.merge_expand(s, cand_exp, act, nbrs, dist,
-                                     visited, k=k)
+                                     visited, k=k, topk=topk)
 
     # Same jit discipline as the probe step: the index crosses the jit
     # boundary as an argument so its committed row sharding is respected.

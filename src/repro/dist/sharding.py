@@ -80,6 +80,7 @@ def spec_for(mesh: Mesh, shape: Sequence[int],
 
 
 def replicated(mesh: Mesh) -> NamedSharding:
+    """Fully-replicated NamedSharding (the empty PartitionSpec)."""
     return NamedSharding(mesh, P())
 
 
@@ -99,6 +100,7 @@ def _param_logical(name: str, ndim: int) -> Tuple[Optional[str], ...]:
 
 
 def param_spec(name: str, shape: Sequence[int], mesh: Mesh) -> P:
+    """PartitionSpec for one named parameter (via _param_logical)."""
     return spec_for(mesh, shape, _param_logical(name, len(shape)))
 
 
@@ -197,6 +199,34 @@ def slot_sharding(mesh: Mesh, num_slots: int, trailing: int = 0
     shape = (num_slots,) + (1,) * trailing
     logical = ("hosts",) + (None,) * trailing
     return NamedSharding(mesh, spec_for(mesh, shape, logical))
+
+
+def constrain_slots(tree: PyTree, mesh: Mesh, num_slots: int) -> PyTree:
+    """Pin every per-slot leaf of a search-state tree host-local.
+
+    Applies jax.lax.with_sharding_constraint with the slot dim split
+    over the "hosts" axis (slot_sharding) to each leaf whose leading dim
+    is num_slots, leaving other leaves untouched. Used by the serve
+    chunk jits at the fori_loop carry boundaries so the GSPMD
+    partitioner keeps the whole chunk state split over host groups
+    instead of resolving the loop carry to replicated (which would
+    re-gather the per-slot bookkeeping across hosts every step).
+    Trailing dims stay UNCONSTRAINED — the HNSW visited bitmap [B, N]
+    keeps its node-dim "model" split, only its slot dim is pinned.
+    No-op when the mesh has no "hosts" axis or it does not divide
+    num_slots (the divisibility contract of slot_sharding)."""
+    if ("hosts" not in mesh.axis_names or mesh.shape["hosts"] <= 1
+            or num_slots % mesh.shape["hosts"]):
+        return tree
+
+    def pin(x):
+        if (hasattr(x, "ndim") and x.ndim >= 1 and x.shape[0] == num_slots):
+            spec = P(*(("hosts",) + (P.UNCONSTRAINED,) * (x.ndim - 1)))
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, spec))
+        return x
+
+    return jax.tree.map(pin, tree)
 
 
 def cache_shardings(cache: PyTree, mesh: Mesh) -> PyTree:
@@ -320,4 +350,5 @@ def place_index(index: Any, mesh: Mesh) -> Any:
 
 __all__ = ["param_shardings", "opt_shardings", "batch_shardings",
            "cache_shardings", "param_spec", "spec_for", "replicated",
-           "database_sharding", "place_index", "slot_sharding"]
+           "database_sharding", "place_index", "slot_sharding",
+           "constrain_slots"]

@@ -360,25 +360,42 @@ def select_expand(s: HNSWSearchState
     return jnp.maximum(sel_id, 0), act, cand_exp
 
 
+def frontier_topk(cand_d: jax.Array, cand_i: jax.Array, cand_e: jax.Array,
+                  ef: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Keep the best ef of the concatenated [B, ef + M] frontier.
+
+    The single source of the beam frontier's tie-break order: both
+    merge_expand (below) and the batch-local wrapper the sharded beam
+    step substitutes (dist.collectives.make_sharded_beam_step) call this
+    exact function, so the single-device and sharded steps cannot drift
+    out of parity."""
+    neg, pos = jax.lax.top_k(-cand_d, ef)
+    return (-neg, jnp.take_along_axis(cand_i, pos, axis=1),
+            jnp.take_along_axis(cand_e, pos, axis=1))
+
+
 def merge_expand(s: HNSWSearchState, cand_exp: jax.Array, act: jax.Array,
                  nbrs: jax.Array, dist: jax.Array, visited: jax.Array, *,
-                 k: int) -> HNSWSearchState:
+                 k: int, topk=frontier_topk) -> HNSWSearchState:
     """Merge one expansion's [B, M] candidates into the frontier and
     advance the counters (shared tail of both beam steps; the top_k over
     the concatenated [B, ef + M] layout fixes the tie-break order).
 
     `dist` carries +inf for masked (invalid / already-seen) slots, so
-    the finite count IS the number of new distance computations."""
+    the finite count IS the number of new distance computations.
+
+    `topk` must be observationally identical to frontier_topk — the
+    sharded beam step passes a shard_map-wrapped frontier_topk so the
+    top-k custom-call runs on each host group's local slot rows instead
+    of forcing a cross-host gather (jax.lax.top_k lowers to a TopK
+    custom-call, which the GSPMD partitioner cannot split)."""
     b, ef = s.cand_d.shape
     mdeg = nbrs.shape[1]
     old_kth = s.cand_d[:, k - 1]
     cand_d = jnp.concatenate([s.cand_d, dist], axis=1)
     cand_i = jnp.concatenate([s.cand_i, nbrs], axis=1)
     cand_e = jnp.concatenate([cand_exp, jnp.zeros((b, mdeg), bool)], axis=1)
-    neg, pos = jax.lax.top_k(-cand_d, ef)
-    new_d = -neg
-    new_i = jnp.take_along_axis(cand_i, pos, axis=1)
-    new_e = jnp.take_along_axis(cand_e, pos, axis=1)
+    new_d, new_i, new_e = topk(cand_d, cand_i, cand_e, ef)
 
     ndis_inc = jnp.sum(jnp.isfinite(dist), axis=1)
     inserts = jnp.minimum(jnp.sum(dist < old_kth[:, None], axis=1), k)

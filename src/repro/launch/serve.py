@@ -31,6 +31,14 @@ dim is placed over host groups):
   PYTHONPATH=src python -m repro.launch.serve --hosts 4
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python -m repro.launch.serve --hosts 2 --shards 4
+
+Difficulty-aware serving (--tiers classifies queries at admission from
+the routing scan and gives the hard tier reserved slots, a boosted
+effective target, hedged duplicates on idle capacity, and bounded
+admission under overload; per-tier p50/p99 recall and latency are
+reported after each phase — see docs/architecture.md):
+  PYTHONPATH=src python -m repro.launch.serve --tiers --boost 0.05 \
+      --hedge --max-queue 64 --overload degrade
 """
 from __future__ import annotations
 
@@ -90,6 +98,33 @@ def main() -> None:
                     help="delta ring capacity (0 = sized to the burst)")
     ap.add_argument("--recal-threshold", type=float, default=0.02,
                     help="recall drift that triggers a predictor refit")
+    ap.add_argument("--tiers", action="store_true",
+                    help="difficulty-aware admission: classify queries "
+                         "at admission (serve.difficulty) and partition "
+                         "slots between easy/hard tiers")
+    ap.add_argument("--hard-quantile", type=float, default=0.75,
+                    help="difficulty-score quantile above which a query "
+                         "is hard (--tiers)")
+    ap.add_argument("--hard-slots", type=float, default=0.25,
+                    help="fraction of each host's slots reserved for "
+                         "the hard tier (--tiers)")
+    ap.add_argument("--boost", type=float, default=0.0,
+                    help="extra recall target for hard queries, clipped "
+                         "to 0.99 (--tiers)")
+    ap.add_argument("--hedge", action="store_true",
+                    help="launch hedged duplicates of in-flight hard "
+                         "queries into idle hard slots (--tiers)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="per-host admission bound; overflow is shed or "
+                         "degraded per --overload (--tiers)")
+    ap.add_argument("--overload", choices=("degrade", "shed"),
+                    default="degrade",
+                    help="overload policy beyond --max-queue (--tiers)")
+    ap.add_argument("--degrade-target", type=float, default=0.80,
+                    help="lowered target for --overload degrade")
+    ap.add_argument("--rebalance", action="store_true",
+                    help="steal queued queries from backlogged hosts "
+                         "into idle hosts at refill boundaries (--tiers)")
     args = ap.parse_args()
 
     targets = [float(t) for t in args.targets.split(",")]
@@ -156,9 +191,25 @@ def main() -> None:
 
     rng = np.random.default_rng(0)
     r_targets = rng.choice(targets, size=args.queries).astype(np.float32)
+    tiers = None
+    if args.tiers:
+        from repro.serve import TierConfig
+        tiers = TierConfig(hard_quantile=args.hard_quantile,
+                           hard_slot_fraction=args.hard_slots,
+                           boost=args.boost, hedge=args.hedge,
+                           max_queue=args.max_queue,
+                           overload=args.overload,
+                           degrade_target=args.degrade_target,
+                           rebalance=args.rebalance)
+        print(f"[serve] difficulty tiers: hard q>{args.hard_quantile:.2f}, "
+              f"{args.hard_slots:.0%} hard slots, boost {args.boost:+.2f}"
+              + (", hedging" if args.hedge else "")
+              + (f", max_queue {args.max_queue} ({args.overload})"
+                 if args.max_queue is not None else "")
+              + (", rebalance" if args.rebalance else ""))
     server = DarthServer(darth.engine, darth.trained.predictor,
                          darth.interval_for_target, num_slots=args.slots,
-                         mesh=mesh, hosts=args.hosts)
+                         mesh=mesh, hosts=args.hosts, tiers=tiers)
     monitor = None
     if mutable is not None:
         monitor = mutate.RecalibrationMonitor(
@@ -192,6 +243,20 @@ def main() -> None:
         if server.hosts > 1:
             print(f"[serve] {label}: per-host completed "
                   + "/".join(str(h.completed) for h in stats.hosts))
+        for tier, ts in stats.tiers.items():
+            extra = ""
+            if ts.shed or ts.degraded:
+                extra += f", {ts.shed} shed / {ts.degraded} degraded"
+            if ts.hedged:
+                extra += (f", {ts.hedged} hedged "
+                          f"({ts.hedge_upgrades} upgrades)")
+            print(f"[serve] {label}: tier {tier}: {ts.count} queries, "
+                  f"recall p50/p99 {ts.recall_p50:.3f}/{ts.recall_p99:.3f}"
+                  f" (predicted), latency p50/p99 {ts.latency_p50:.0f}/"
+                  f"{ts.latency_p99:.0f} steps{extra}")
+        if stats.tiers:
+            print(f"[serve] {label}: chunk wall p50/p99 "
+                  f"{stats.chunk_ms_p50:.1f}/{stats.chunk_ms_p99:.1f} ms")
         done = np.array([i for i, r in enumerate(results) if r is not None])
         if stats.truncated or len(done) < len(results):
             print(f"[serve] {label}: step budget hit: {stats.truncated} "

@@ -1,4 +1,9 @@
-from repro.serve import engine
+from repro.serve import difficulty, engine
+from repro.serve.difficulty import (TierConfig, TierStats, assign_tiers,
+                                    difficulty_scores)
 from repro.serve.engine import DarthServer, HostStats, ServeStats
 
-__all__ = ["engine", "DarthServer", "HostStats", "ServeStats"]
+__all__ = [
+    "engine", "difficulty", "DarthServer", "HostStats", "ServeStats",
+    "TierConfig", "TierStats", "assign_tiers", "difficulty_scores",
+]

@@ -78,7 +78,13 @@ def _select_slots(mask: jax.Array, new: PyTree, old: PyTree) -> PyTree:
 
 @dataclasses.dataclass
 class HostStats:
-    """One host loop's counters (ServeStats aggregates these)."""
+    """One host loop's counters (ServeStats aggregates these).
+
+    Admission accounting is exhaustive: every query striped to a host
+    is admitted (then completed or truncated), explicitly shed
+    (shed_ids), or abandoned (its host died, or the step budget ran out
+    before it left the queue) — nothing is silently dropped
+    (tests/test_properties.py pins this under overload)."""
     host: int = 0
     admitted: int = 0            # queries that ever got a slot
     completed: int = 0
@@ -88,10 +94,19 @@ class HostStats:
     ndis_harvested: int = 0      # sum of harvested slots' ndis counters
     killed: bool = False         # fault injection: host died mid-serve
     abandoned: int = 0           # queued on this host, never admitted
+    # difficulty-aware admission (serve.difficulty; all zero/empty when
+    # the server runs untiered)
+    shed: int = 0                # refused at admission (overload="shed")
+    degraded: int = 0            # served at the lowered degrade_target
+    hedged: int = 0              # hedge duplicates launched
+    hedge_upgrades: int = 0      # results replaced by a deeper hedge
+    stolen: int = 0              # queries stolen INTO this host (rebalance)
+    shed_ids: List[int] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
 class ServeStats:
+    """Aggregate serve() outcome across all host loops."""
     completed: int = 0
     slot_steps: int = 0          # engine steps x slots (cost proxy)
     engine_steps: int = 0
@@ -101,23 +116,48 @@ class ServeStats:
     #                              (or their host was killed)
     ndis_harvested: int = 0      # sum of per-query ndis at harvest
     hosts: List[HostStats] = dataclasses.field(default_factory=list)
+    # difficulty-aware admission totals (sums of the HostStats fields;
+    # all zero when the server runs untiered)
+    shed: int = 0
+    degraded: int = 0
+    hedged: int = 0
+    hedge_upgrades: int = 0
+    # per-tier SLO metrics (serve.difficulty.TierStats, keyed "easy" /
+    # "hard"); empty dict when the server runs untiered
+    tiers: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # wall-clock percentiles over the per-chunk device round-trips
+    # (run_chunk dispatch + the sync-boundary fetch), milliseconds;
+    # NaN before any chunk ran
+    chunk_ms_p50: float = float("nan")
+    chunk_ms_p99: float = float("nan")
 
 
 class _HostSlots:
     """One host's slice [lo, hi) of the slot pool.
 
     Owns admission, refill and harvest bookkeeping for its slots and ITS
-    OWN query queue: every decision reads only the host's slice of the
-    device state, so N of these run with no cross-host coordination —
-    the only global synchronization in multi-host serving is the
-    collectives inside the engine step itself."""
+    OWN query queue(s): every decision reads only the host's slice of
+    the device state, so N of these run with no cross-host coordination
+    — the only global synchronization in multi-host serving is the
+    collectives inside the engine step itself. (Rebalance work stealing
+    is driven by the server between chunk boundaries and only moves
+    queue entries — never in-flight slot state.)
+
+    With a difficulty TierConfig (serve.difficulty), admission becomes
+    tier-aware: the tail `hard_frac` of the host's slots is reserved
+    for hard-tier queries (work-conserving — either tier spills into
+    the other's free slots once its own queue drains), hard queries are
+    served at a boosted effective target, overload is degraded or shed
+    at construction instead of queueing unboundedly, and idle hard
+    slots can run hedged duplicates. With tiers=None every tier branch
+    is inert and scheduling is the original single-FIFO behavior."""
 
     def __init__(self, host: int, lo: int, hi: int, queue: List[int],
                  queries: np.ndarray, r_targets: np.ndarray,
-                 interval_for_target, results: List):
+                 interval_for_target, results: List, *,
+                 tiers=None, is_hard: Optional[np.ndarray] = None):
         self.host = host
         self.lo, self.hi = lo, hi
-        self.queue = queue
         self.queries = queries
         self.r_targets = r_targets
         self.interval_for_target = interval_for_target
@@ -130,53 +170,210 @@ class _HostSlots:
         self.alive = True
         self.stats = HostStats(host=host)
 
+        self.tiers = tiers
+        self.is_hard = is_hard
+        self.admit_step = np.zeros((nloc,), np.int64)
+        self.slot_hedge = np.zeros((nloc,), bool)
+        self.hedge_winner: set = set()   # qids whose result came from a
+        #                                  hedge while the primary ran
+        # harvest-time SLO samples: (hard, r_pred, latency, truncated)
+        self.samples: List[Tuple[bool, float, int, bool]] = []
+        self.degraded_ids: List[int] = []
+        if tiers is None:
+            self.queue_easy: List[int] = list(queue)
+            self.queue_hard: List[int] = []
+            self.easy_slots = nloc
+            return
+
+        # hard-tier slot partition: local slots [easy_slots, nloc)
+        self.easy_slots = nloc - int(round(tiers.hard_slot_fraction * nloc))
+
+        # admission control: bound the queue, degrade or shed overflow
+        queue = list(queue)
+        if tiers.max_queue is not None and len(queue) > tiers.max_queue:
+            if tiers.overload == "shed":
+                excess = len(queue) - tiers.max_queue
+                # shed from the arrival tail, hard tier first (priority:
+                # the expensive queries are refused before cheap ones)
+                tail = ([q for q in reversed(queue) if is_hard[q]]
+                        + [q for q in reversed(queue) if not is_hard[q]])
+                drop = set(tail[:excess])
+                self.stats.shed_ids = [q for q in queue if q in drop]
+                self.stats.shed = len(self.stats.shed_ids)
+                queue = [q for q in queue if q not in drop]
+            else:                           # degrade-to-lower-target
+                for qid in queue[tiers.max_queue:]:
+                    if tiers.degrade_target < self.r_targets[qid]:
+                        self.r_targets[qid] = tiers.degrade_target
+                        self.stats.degraded += 1
+                        self.degraded_ids.append(qid)
+        self.queue_easy = [q for q in queue if not is_hard[q]]
+        self.queue_hard = [q for q in queue if is_hard[q]]
+
     @property
     def occupied(self) -> np.ndarray:
+        """bool[nloc]: slots currently holding an in-flight query."""
         return self.slot_query >= 0
 
-    def fill(self, free: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    @property
+    def pending(self) -> int:
+        """Queued-but-unadmitted query count (both tiers)."""
+        return len(self.queue_easy) + len(self.queue_hard)
+
+    def _target_for(self, qid: int) -> float:
+        """Effective recall target: declared (possibly degraded at
+        admission control), plus the hard-tier boost — clipped to 0.99
+        and never below the declared target."""
+        rt = float(self.r_targets[qid])
+        if (self.tiers is not None and self.is_hard[qid]
+                and self.tiers.boost > 0.0):
+            rt = max(rt, min(rt + self.tiers.boost, 0.99))
+        return rt
+
+    def fill(self, free: np.ndarray, step: int = 0
+             ) -> Tuple[np.ndarray, np.ndarray]:
         """Admit queued queries into the local `free` slots; updates the
         host's rt/ipi/mpi slices in place and returns (mask bool[nloc],
         qb f32[nloc, D]) for the splice — mask all-False when nothing
-        was admitted."""
+        was admitted.
+
+        Tiered admission fills each partition from its own queue first
+        (easy slots from the easy FIFO, reserved hard slots from the
+        hard FIFO), then spills the leftover free slots to the other
+        tier's queue so no slot idles while any query waits. With idle
+        hard slots and nothing queued, hedging (TierConfig.hedge)
+        launches duplicates of the oldest in-flight hard queries at a
+        hedge_boost-raised target. `step` is the current engine-step
+        count, recorded per slot for the latency percentiles."""
         nloc = self.hi - self.lo
         qb = np.zeros((nloc, self.queries.shape[1]), np.float32)
         mask = np.zeros((nloc,), bool)
-        ids = [self.queue.pop(0)
-               for _ in range(min(len(free), len(self.queue)))]
-        if not ids:
+        free = [int(s) for s in free]
+        pairs: List[Tuple[int, int]] = []       # (slot, qid)
+        if self.tiers is None:
+            ids = [self.queue_easy.pop(0)
+                   for _ in range(min(len(free), len(self.queue_easy)))]
+            pairs = list(zip(free, ids))
+        else:
+            free_easy = [s for s in free if s < self.easy_slots]
+            free_hard = [s for s in free if s >= self.easy_slots]
+            for slots, own, other in ((free_easy, self.queue_easy,
+                                       self.queue_hard),
+                                      (free_hard, self.queue_hard,
+                                       self.queue_easy)):
+                for s in list(slots):
+                    q = own or other            # own tier first, then spill
+                    if not q:
+                        break
+                    pairs.append((s, q.pop(0)))
+                    slots.remove(s)
+            hedges = (self._plan_hedges(free_hard, len(pairs))
+                      if self.tiers.hedge else [])
+        if not pairs and not (self.tiers is not None and self.tiers.hedge
+                              and hedges):
             return mask, qb
         rt2 = self.rt.copy()
-        for s, qid in zip(free, ids):
+        for s, qid in pairs:
             mask[s] = True
             qb[s] = self.queries[qid]
-            rt2[s] = self.r_targets[qid]
+            rt2[s] = self._target_for(qid)
             self.slot_query[s] = qid
+            self.slot_hedge[s] = False
+            self.admit_step[s] = step
+        if self.tiers is not None and self.tiers.hedge:
+            for s, qid in hedges:
+                mask[s] = True
+                qb[s] = self.queries[qid]
+                rt2[s] = max(self._target_for(qid),
+                             min(self._target_for(qid)
+                                 + self.tiers.hedge_boost, 0.99))
+                self.slot_query[s] = qid
+                self.slot_hedge[s] = True
+                self.admit_step[s] = step
+                self.stats.hedged += 1
         ip = self.interval_for_target(rt2)
         ipi2 = np.broadcast_to(np.asarray(ip.ipi, np.float32), (nloc,))
         mpi2 = np.broadcast_to(np.asarray(ip.mpi, np.float32), (nloc,))
         self.ipi = np.where(mask, ipi2, self.ipi)
         self.mpi = np.where(mask, mpi2, self.mpi)
         self.rt = np.where(mask, rt2, self.rt)
-        self.stats.admitted += len(ids)
+        self.stats.admitted += len(pairs)
         return mask, qb
+
+    def _plan_hedges(self, free_hard: List[int], admitted: int
+                     ) -> List[Tuple[int, int]]:
+        """Hedge targets for leftover free hard slots: the oldest
+        in-flight hard-tier primaries without a hedge yet. Only fires
+        when the queues are fully drained (idle capacity, per the
+        TierConfig.hedge contract)."""
+        if admitted or self.pending or not free_hard:
+            return []
+        occ = self.occupied & ~self.slot_hedge
+        hedged_qids = set(self.slot_query[self.slot_hedge
+                                          & self.occupied].tolist())
+        cands = [(int(self.admit_step[s]), int(self.slot_query[s]))
+                 for s in np.nonzero(occ)[0]
+                 if self.is_hard[self.slot_query[s]]
+                 and int(self.slot_query[s]) not in hedged_qids]
+        cands.sort()
+        return list(zip(free_hard, [qid for _, qid in cands]))
 
     def harvest(self, mask: np.ndarray, topk_d: np.ndarray,
                 topk_i: np.ndarray, ndis: np.ndarray, *,
-                truncated: bool = False) -> int:
+                truncated: bool = False, step: int = 0,
+                r_pred: Optional[np.ndarray] = None) -> int:
         """Pull the masked local slots' top-k into results; free the
         slots. The array arguments are the host's SLICE [nloc, ..] of
         the device state. Raises if a slot's query already has a result
-        — every admitted query must be returned exactly once."""
+        — every admitted query must be returned exactly once. The one
+        sanctioned exception is a hedge duplicate (TierConfig.hedge):
+        its primary already returned, so a naturally-completed hedge
+        UPGRADES the stored result (deeper search at a raised target)
+        and a truncated hedge is dropped — either way the query still
+        has exactly one result."""
+        count = 0
         for s in np.nonzero(mask)[0]:
             qid = int(self.slot_query[s])
             if self.results[qid] is not None:
+                # the qid already returned: only legitimate for a hedge
+                # pair — the hedge arriving second upgrades (unless
+                # truncated), a primary whose hedge won just frees
+                if self.slot_hedge[s]:
+                    if not truncated:
+                        self.results[qid] = (topk_d[s], topk_i[s])
+                        self.stats.ndis_harvested += int(ndis[s])
+                        self.stats.hedge_upgrades += 1
+                    self.slot_query[s] = -1
+                    self.slot_hedge[s] = False
+                    continue
+                if qid in self.hedge_winner:
+                    self.hedge_winner.discard(qid)
+                    self.slot_query[s] = -1
+                    continue
                 raise RuntimeError(
                     f"host {self.host}: query {qid} harvested twice")
+            if self.slot_hedge[s] and truncated:
+                # truncated hedge whose primary is still in flight: drop
+                # it — the primary (admitted earlier, so deeper) is
+                # harvested in this same truncation sweep
+                self.slot_query[s] = -1
+                self.slot_hedge[s] = False
+                continue
             self.results[qid] = (topk_d[s], topk_i[s])
             self.stats.ndis_harvested += int(ndis[s])
+            if self.slot_hedge[s]:
+                # hedge finished before (or with) its primary: its
+                # deeper result wins; the primary frees via hedge_winner
+                self.hedge_winner.add(qid)
+                self.stats.hedge_upgrades += 1
+            if self.tiers is not None:
+                self.samples.append((
+                    bool(self.is_hard[qid]),
+                    float(r_pred[s]) if r_pred is not None else float("nan"),
+                    int(step - self.admit_step[s]), truncated))
             self.slot_query[s] = -1
-        count = int(mask.sum())
+            self.slot_hedge[s] = False
+            count += 1
         if truncated:
             self.stats.truncated += count
         else:
@@ -190,18 +387,72 @@ class _HostSlots:
         in-flight slots first so every ADMITTED query still returns."""
         self.alive = False
         self.stats.killed = True
-        self.stats.abandoned = len(self.queue)
-        self.queue = []
+        self.stats.abandoned = self.pending
+        self.queue_easy = []
+        self.queue_hard = []
+
+
+def _finalize_tiers(hostslots: List[_HostSlots], is_hard: np.ndarray
+                    ) -> Dict[str, Any]:
+    """Fold the host loops' SLO samples into per-tier TierStats.
+
+    recall_p99 is the 1st percentile of harvest-time predicted recall
+    (the recall the worst 1% of the tier got); latency percentiles are
+    over engine steps from admission to harvest. Shed/degraded counts
+    are attributed to tiers via their recorded query ids; hedges only
+    ever duplicate hard-tier queries, so they land on the hard tier."""
+    from repro.serve.difficulty import TierStats
+
+    out: Dict[str, Any] = {}
+    for name, hard in (("easy", False), ("hard", True)):
+        ts = TierStats()
+        ts.count = int(np.sum(is_hard == hard))
+        rp: List[float] = []
+        lat: List[int] = []
+        for hl in hostslots:
+            for h, r, steps, trunc in hl.samples:
+                if h != hard:
+                    continue
+                if trunc:
+                    ts.truncated += 1
+                else:
+                    ts.completed += 1
+                if np.isfinite(r):
+                    rp.append(r)
+                lat.append(steps)
+            ts.shed += sum(1 for q in hl.stats.shed_ids
+                           if bool(is_hard[q]) == hard)
+            ts.degraded += sum(1 for q in hl.degraded_ids
+                               if bool(is_hard[q]) == hard)
+            if hard:
+                ts.hedged += hl.stats.hedged
+                ts.hedge_upgrades += hl.stats.hedge_upgrades
+        if rp:
+            ts.recall_p50 = float(np.percentile(rp, 50))
+            ts.recall_p99 = float(np.percentile(rp, 1))
+        if lat:
+            ts.latency_p50 = float(np.percentile(lat, 50))
+            ts.latency_p99 = float(np.percentile(lat, 99))
+        out[name] = ts
+    return out
 
 
 class DarthServer:
-    """Continuous-batching declarative-recall search server."""
+    """Continuous-batching declarative-recall search server.
+
+    Queries stream through a fixed pool of device slots: each slot runs
+    one query's darth_search at that query's own declared recall target,
+    early-terminated slots are harvested and re-spliced at chunk (sync)
+    boundaries, and the jitted chunks step all slots as one SPMD
+    program. See the module docstring for the multi-host topology and
+    serve.difficulty for the optional difficulty-tier scheduling layer
+    (`tiers`)."""
 
     def __init__(self, engine: engines_lib.Engine,
                  predictor: RecallPredictor,
                  interval_for_target,        # fn: r_t array -> IntervalParams
                  num_slots: int = 64, steps_per_sync: int = 4,
-                 mesh=None, hosts: int = 1):
+                 mesh=None, hosts: int = 1, tiers=None):
         self.engine = engine
         self.predictor = predictor
         self.interval_for_target = interval_for_target
@@ -212,6 +463,10 @@ class DarthServer:
                 f"num_slots {num_slots} must split evenly over "
                 f"{hosts} hosts")
         self.hosts = hosts
+        # Difficulty-aware admission/scheduling policy
+        # (serve.difficulty.TierConfig); None serves every query
+        # identically (the original scheduling).
+        self.tiers = tiers
         # When the engine's index was placed on a mesh (dist.place_index),
         # the slot-pool chunks run SPMD over it; use_mesh also activates
         # the activation constraints inside any model-side feature code.
@@ -233,6 +488,19 @@ class DarthServer:
         eng = self.engine._replace(index=None)
         pred = self.predictor
         steps_per_sync = self.steps_per_sync
+        mesh = self.mesh
+        num_slots = self.num_slots
+
+        def pin(st):
+            # Pin the per-slot chunk state host-local on a "hosts" mesh
+            # (dist.sharding.constrain_slots): applied at the fori_loop
+            # carry boundaries so GSPMD keeps the whole carry split over
+            # host groups instead of resolving it to replicated and
+            # re-gathering the slot bookkeeping across hosts each step.
+            if mesh is not None and "hosts" in mesh.axis_names:
+                from repro.dist import sharding as sharding_lib
+                return sharding_lib.constrain_slots(st, mesh, num_slots)
+            return st
 
         # The engine's index enters these outer jits as an ARGUMENT
         # (re-bound via _replace so the protocol's init/step see the
@@ -247,8 +515,8 @@ class DarthServer:
                 IntervalParams(ipi=ipi, mpi=mpi), r_t)
 
             def do(i, s):
-                return body(s)
-            return jax.lax.fori_loop(0, steps_per_sync, do, st)
+                return pin(body(s))
+            return jax.lax.fori_loop(0, steps_per_sync, do, pin(st))
 
         @jax.jit
         def init_chunk(index, q: jax.Array, ipi: jax.Array, mpi: jax.Array):
@@ -348,11 +616,25 @@ class DarthServer:
                max_engine_steps: int, kill_hosts: Dict[int, int],
                ) -> Tuple[List[Optional[Tuple[np.ndarray, np.ndarray]]],
                           ServeStats]:
+        import time
+
         n, d = queries.shape
         b = self.num_slots
         sph = b // self.hosts
         stats = ServeStats()
         results: List[Optional[Tuple[np.ndarray, np.ndarray]]] = [None] * n
+
+        # Difficulty classification at admission: one host-side routing
+        # scan over the whole batch (serve.difficulty), before any query
+        # touches a slot. r_targets is copied because admission control
+        # may degrade targets in place.
+        is_hard = None
+        if self.tiers is not None:
+            from repro.serve import difficulty as difficulty_lib
+            scores = difficulty_lib.difficulty_scores(self.engine.index,
+                                                      queries)
+            is_hard = difficulty_lib.assign_tiers(scores, self.tiers)
+            r_targets = r_targets.copy()
 
         # Striped query partition: host h owns queries h, h+H, h+2H, ...
         # (hosts == 1 degrades to the single-controller FIFO). Each host
@@ -360,9 +642,11 @@ class DarthServer:
         hostslots = [
             _HostSlots(h, h * sph, (h + 1) * sph,
                        list(range(h, n, self.hosts)), queries, r_targets,
-                       self.interval_for_target, results)
+                       self.interval_for_target, results,
+                       tiers=self.tiers, is_hard=is_hard)
             for h in range(self.hosts)]
         stats.hosts = [hl.stats for hl in hostslots]
+        chunk_ms: List[float] = []
 
         def gather_inputs():
             rt = np.concatenate([hl.rt for hl in hostslots])
@@ -375,23 +659,29 @@ class DarthServer:
 
         def state_slices():
             """Host-side copies of the per-slot device outputs every host
-            loop harvests from (one transfer, then pure local slicing)."""
+            loop harvests from (one transfer, then pure local slicing).
+            r_pred (the predictor's recall estimate at harvest) is only
+            fetched when the tier SLO stats need it."""
             topk_d = np.asarray(jax.device_get(
                 self.engine.topk_d(st.inner)))
             topk_i = np.asarray(jax.device_get(
                 self.engine.topk_i(st.inner)))
             ndis = np.asarray(jax.device_get(st.inner.ndis))
-            return topk_d, topk_i, ndis
+            r_pred = (np.asarray(jax.device_get(st.r_pred))
+                      if self.tiers is not None else None)
+            return topk_d, topk_i, ndis, r_pred
 
         def harvest_host(hl: _HostSlots, mask_local: np.ndarray,
                          arrays, *, truncated: bool = False) -> int:
-            topk_d, topk_i, ndis = arrays
+            topk_d, topk_i, ndis, r_pred = arrays
             sl = slice(hl.lo, hl.hi)
             return hl.harvest(mask_local, topk_d[sl], topk_i[sl], ndis[sl],
-                              truncated=truncated)
+                              truncated=truncated,
+                              step=stats.engine_steps,
+                              r_pred=None if r_pred is None else r_pred[sl])
 
         # initial fill: every host admits into all of its slots
-        fills = [hl.fill(np.arange(sph)) for hl in hostslots]
+        fills = [hl.fill(np.arange(sph), step=0) for hl in hostslots]
         qb = np.concatenate([f[1] for f in fills])
         rt, ipi, mpi = gather_inputs()
         st = self._init_chunk(self.engine.index, self._put(qb),
@@ -404,6 +694,7 @@ class DarthServer:
         rt_dev = self._put(rt)
 
         while True:
+            t0 = time.perf_counter()
             st = self._run_chunk(self.engine.index, st, rt_dev,
                                  self._put(ipi), self._put(mpi))
             stats.engine_steps += self.steps_per_sync
@@ -415,6 +706,9 @@ class DarthServer:
                      if hl.alive and hl.host in kill_hosts
                      and stats.engine_steps >= kill_hosts[hl.host]]
             active = np.asarray(jax.device_get(st.inner.active))
+            # chunk wall time: dispatch + the sync-boundary fetch that
+            # forces the device round-trip
+            chunk_ms.append((time.perf_counter() - t0) * 1e3)
             finished = occupied & ~active
             arrays = (state_slices()
                       if finished.any() or dying else None)
@@ -441,38 +735,48 @@ class DarthServer:
                     if fin_local.any():
                         harvest_host(hl, fin_local, arrays)
                         changed = True
-                # per-host refill — unless the step budget is already
-                # exhausted: a query spliced in now would run zero steps
-                # and be harvested below as init-state junk (ids -1)
-                # instead of staying None in the queue.
-                if stats.engine_steps < max_engine_steps:
-                    mask = np.zeros((b,), bool)
-                    qb2 = np.zeros((b, d), np.float32)
-                    for hl in hostslots:
-                        if not hl.alive or not hl.queue:
-                            continue
-                        free = np.nonzero(~hl.occupied)[0]
-                        m_loc, q_loc = hl.fill(free)
-                        if m_loc.any():
-                            hl.stats.refills += 1
-                            mask[hl.lo:hl.hi] = m_loc
-                            qb2[hl.lo:hl.hi] = q_loc
-                    if mask.any():
-                        rt, ipi, mpi = gather_inputs()
-                        rt_dev = self._put(rt)
-                        fresh = self._init_chunk(self.engine.index,
-                                                 self._put(qb2),
-                                                 self._put(ipi),
-                                                 self._put(mpi))
-                        st = self._splice(self._put(mask), fresh, st)
-                        changed = True
+            # per-host refill — unless the step budget is already
+            # exhausted: a query spliced in now would run zero steps
+            # and be harvested below as init-state junk (ids -1)
+            # instead of staying None in the queue. (Without tiering a
+            # host only has free slots right after a harvest, so this is
+            # a no-op scan on boundaries where nothing finished; with
+            # rebalance/hedging enabled idle capacity can also appear
+            # between harvests, so the refill runs every boundary.)
+            if stats.engine_steps < max_engine_steps:
+                if self.tiers is not None and self.tiers.rebalance:
+                    self._rebalance(hostslots)
+                hedging = self.tiers is not None and self.tiers.hedge
+                mask = np.zeros((b,), bool)
+                qb2 = np.zeros((b, d), np.float32)
+                for hl in hostslots:
+                    if not hl.alive or not (hl.pending or hedging):
+                        continue
+                    free = np.nonzero(~hl.occupied)[0]
+                    if free.size == 0:
+                        continue
+                    m_loc, q_loc = hl.fill(free, step=stats.engine_steps)
+                    if m_loc.any():
+                        hl.stats.refills += 1
+                        mask[hl.lo:hl.hi] = m_loc
+                        qb2[hl.lo:hl.hi] = q_loc
+                if mask.any():
+                    rt, ipi, mpi = gather_inputs()
+                    rt_dev = self._put(rt)
+                    fresh = self._init_chunk(self.engine.index,
+                                             self._put(qb2),
+                                             self._put(ipi),
+                                             self._put(mpi))
+                    st = self._splice(self._put(mask), fresh, st)
+                    changed = True
             if changed:
                 # deactivate empty (and dead-host) slots
                 occupied = occupied_global()
                 st = dataclasses.replace(
                     st, inner=engines_lib.set_active(
                         st.inner, st.inner.active & self._put(occupied)))
-            if not occupied.any() and not any(hl.queue for hl in hostslots):
+            if (not occupied.any()
+                    and not any(hl.pending for hl in hostslots)):
                 break
             if stats.engine_steps >= max_engine_steps:
                 # Step budget exhausted: the occupied slots still hold a
@@ -490,10 +794,52 @@ class DarthServer:
 
         for hl in hostslots:
             if hl.alive:
-                hl.stats.abandoned = len(hl.queue)
+                hl.stats.abandoned = hl.pending
             stats.completed += hl.stats.completed
             stats.slot_steps += hl.stats.slot_steps
             stats.refills += hl.stats.refills
             stats.truncated += hl.stats.truncated
             stats.ndis_harvested += hl.stats.ndis_harvested
+            stats.shed += hl.stats.shed
+            stats.degraded += hl.stats.degraded
+            stats.hedged += hl.stats.hedged
+            stats.hedge_upgrades += hl.stats.hedge_upgrades
+        if chunk_ms:
+            stats.chunk_ms_p50 = float(np.percentile(chunk_ms, 50))
+            stats.chunk_ms_p99 = float(np.percentile(chunk_ms, 99))
+        if self.tiers is not None:
+            stats.tiers = _finalize_tiers(hostslots, is_hard)
         return results, stats
+
+    @staticmethod
+    def _rebalance(hostslots: List[_HostSlots]) -> None:
+        """Queue-level work stealing at a refill boundary.
+
+        Hosts with free slots and a drained queue steal queued queries
+        from the most-backlogged live host's arrival tail, hard tier
+        first (the expensive queries are moved toward idle capacity).
+        Only queue entries move — never in-flight slot state — so a
+        stolen query's RESULT is unchanged (per-slot search state is
+        slot-local); only which host serves it changes. Deterministic:
+        thieves iterate in host order and the donor is the max-pending
+        live host, ties to the lowest host id. Stealing stops once the
+        donor can admit its whole backlog into its own free slots."""
+        live = [hl for hl in hostslots if hl.alive]
+        for thief in live:
+            if thief.pending:
+                continue
+            spare = int((~thief.occupied).sum())
+            while spare > 0:
+                donor = max(live,
+                            key=lambda hl: (hl.pending, -hl.host))
+                if (donor is thief
+                        or donor.pending <= int((~donor.occupied).sum())):
+                    break
+                src = donor.queue_hard or donor.queue_easy
+                qid = src.pop()
+                dst = (thief.queue_hard
+                       if thief.is_hard is not None and thief.is_hard[qid]
+                       else thief.queue_easy)
+                dst.append(qid)
+                thief.stats.stolen += 1
+                spare -= 1

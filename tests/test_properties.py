@@ -204,3 +204,84 @@ def test_empty_delta_merge_is_identity(b, k, dim, capacity, inf_frac,
         jnp.concatenate([jnp.asarray(base_i), di], axis=1), k)
     np.testing.assert_array_equal(np.asarray(m_d), base_d)
     np.testing.assert_array_equal(np.asarray(m_i), base_i)
+
+
+# -- overload admission control (serve.difficulty) ------------------------
+
+_SERVE_FIXTURE = {}
+
+
+def _overload_fixture():
+    """One tiny served stack shared across hypothesis examples (the
+    chunk jits compile once; every example only re-runs the host-side
+    admission logic plus a handful of small device chunks). The stub
+    predictor pins recall at 0, so no query terminates early and every
+    admitted query runs exactly nprobe engine steps — admission
+    decisions, not search dynamics, drive the outcome."""
+    if _SERVE_FIXTURE:
+        return _SERVE_FIXTURE["v"]
+    from repro.core import engines
+    from repro.core.intervals import IntervalParams
+    from repro.data import vectors
+
+    ds = vectors.make_dataset(n=600, d=8, num_learn=16, num_queries=96,
+                              clusters=4, cluster_std=1.0, seed=5)
+    index = ivf.build(ds.base, nlist=4, seed=5)
+    eng = engines.ivf_engine(index, k=5, nprobe=4)
+
+    def predictor(feats):
+        return jnp.zeros((feats.shape[0],), jnp.float32)
+
+    def interval_for_target(rt):
+        rt = np.atleast_1d(rt)
+        return IntervalParams(ipi=np.full(rt.shape, 8.0, np.float32),
+                              mpi=np.full(rt.shape, 4.0, np.float32))
+
+    _SERVE_FIXTURE["v"] = (ds, eng, predictor, interval_for_target)
+    return _SERVE_FIXTURE["v"]
+
+
+@settings(deadline=None, max_examples=10)
+@given(n=st.integers(9, 96), max_queue=st.integers(0, 24),
+       shed=st.booleans(), log_hosts=st.integers(0, 2),
+       hard_quantile=st.floats(0.0, 1.0),
+       hard_frac=st.floats(0.0, 0.5))
+def test_overload_admission_never_silently_drops(n, max_queue, shed,
+                                                 log_hosts, hard_quantile,
+                                                 hard_frac):
+    """Overload admission control: under a query stream exceeding slot
+    capacity with a bounded queue, EVERY query id is accounted for —
+    served (a result came back), or explicitly shed (its id recorded in
+    HostStats.shed_ids, its result None). Nothing is silently dropped,
+    nothing returns twice, and under overload="degrade" every query is
+    served. The per-host ledger (admitted = completed + truncated,
+    stripe = admitted + shed) must balance exactly."""
+    from repro.serve import DarthServer, TierConfig
+
+    ds, eng, predictor, interval_for_target = _overload_fixture()
+    hosts = 2 ** log_hosts
+    tiers = TierConfig(hard_quantile=hard_quantile,
+                       hard_slot_fraction=hard_frac,
+                       max_queue=max_queue,
+                       overload="shed" if shed else "degrade",
+                       degrade_target=0.5)
+    server = DarthServer(eng, predictor, interval_for_target,
+                         num_slots=8, steps_per_sync=2, hosts=hosts,
+                         tiers=tiers)
+    rts = np.full((n,), 0.9, np.float32)
+    results, stats = server.serve(ds.queries[:n], rts)
+
+    served = {i for i, r in enumerate(results) if r is not None}
+    shed_ids = [q for h in stats.hosts for q in h.shed_ids]
+    assert len(shed_ids) == len(set(shed_ids))          # no double-shed
+    assert served.isdisjoint(shed_ids)                  # shed => no result
+    assert served | set(shed_ids) == set(range(n))      # total accounting
+    assert stats.shed == len(shed_ids)
+    if not shed:
+        assert not shed_ids and len(served) == n        # degrade serves all
+        # only queue overflow beyond max_queue is degraded, never more
+        assert stats.degraded <= max(n - hosts * max_queue, 0)
+    for h in stats.hosts:
+        assert h.admitted == h.completed + h.truncated
+        stripe = len(range(h.host, n, hosts))
+        assert stripe == h.admitted + h.shed + h.abandoned

@@ -9,22 +9,33 @@ contract useful, paper §4.2).
 
 The contract is also asserted under the DEPLOYED topology, not just
 `Darth.search`: the multi-host slot-pool server (per-host admission /
-refill / compaction over slot slices) must meet the same targets with
-an ndis speedup — serving-harness structure, not just the index,
-determines what users actually observe."""
+refill / compaction over slot slices, with difficulty tiers enabled)
+must meet the same targets with an ndis speedup — serving-harness
+structure, not just the index, determines what users actually observe.
+The serving assertions cover p99 achieved recall per declared target,
+not only the mean: a mean can hide a tail, and per-query declarations
+are only honored if the worst queries land near their targets too."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
 
 from repro.core import api, engines
 from repro.index import flat, hnsw, ivf
-from repro.serve import DarthServer
+from repro.serve import DarthServer, TierConfig
 
 pytestmark = pytest.mark.slow
 
 TARGETS = (0.80, 0.90, 0.95)
 K = 10
 TOLERANCE = 0.03
+# p99 tail tolerance for the served path. Deliberately wider than the
+# mean tolerance: with 128 queries p99 interpolates between the two
+# worst queries, and per-query recall is quantized to multiples of
+# 1/k = 0.1 — a single unlucky query two k-th-neighbor ties away from
+# its target dominates the percentile. Empirically the worst
+# tiers-boosted gap across both engines x hosts {2,4} x all targets is
+# ~0.19; 0.25 bounds it without flaking on seed jitter.
+P99_TOLERANCE = 0.25
 
 
 @pytest.fixture(scope="module")
@@ -65,29 +76,39 @@ def _assert_conformance(d, ds, name):
 
 def _assert_serve_conformance(d, ds, name, *, hosts):
     """Same contract, through the deployed topology: every declared
-    target served through the multi-host slot pool lands within
-    TOLERANCE, with a real ndis saving vs plain search (ServeStats
-    aggregates harvested ndis across the per-host loops)."""
+    target served through the multi-host slot pool — with difficulty
+    tiers enabled and a hard-tier boost, the shipped configuration —
+    lands within TOLERANCE on the mean AND within P99_TOLERANCE at p99,
+    with a real ndis saving vs plain search (ServeStats aggregates
+    harvested ndis across the per-host loops)."""
     q = jnp.asarray(ds.queries)
     n = ds.queries.shape[0]
     _, gt_i = flat.search(q, jnp.asarray(ds.base), K)
     _, _, plain = d.search_plain(q)
     plain_ndis = float(np.asarray(plain.ndis).mean())
 
+    tiers = TierConfig(hard_quantile=0.75, hard_slot_fraction=0.25,
+                       boost=0.02)
     server = DarthServer(d.engine, d.trained.predictor,
                          d.interval_for_target, num_slots=32,
-                         steps_per_sync=2, hosts=hosts)
+                         steps_per_sync=2, hosts=hosts, tiers=tiers)
     speedups = []
     for rt in TARGETS:
         results, stats = server.serve(
             ds.queries, np.full((n,), rt, np.float32))
         assert stats.completed == n, (name, hosts, rt, stats)
         ids = np.stack([r[1] for r in results])
-        rec = float(np.asarray(flat.recall_at_k(jnp.asarray(ids),
-                                                gt_i)).mean())
+        rec = np.asarray(flat.recall_at_k(jnp.asarray(ids), gt_i))
         nd = stats.ndis_harvested / stats.completed
-        assert rec >= rt - TOLERANCE, (name, hosts, rt, rec)
+        assert float(rec.mean()) >= rt - TOLERANCE, \
+            (name, hosts, rt, float(rec.mean()))
+        p99 = float(np.percentile(rec, 1))
+        assert p99 >= rt - P99_TOLERANCE, (name, hosts, rt, p99)
         assert nd < plain_ndis, (name, hosts, rt, nd, plain_ndis)
+        # per-tier ledger: every query landed in exactly one tier
+        assert set(stats.tiers) == {"easy", "hard"}
+        assert sum(t.count for t in stats.tiers.values()) == n
+        assert sum(t.completed for t in stats.tiers.values()) == n
         speedups.append(plain_ndis / max(nd, 1.0))
     assert max(speedups) > 1.5, (name, hosts, speedups)
 

@@ -421,3 +421,133 @@ def test_server_compaction_saves_slot_steps(served_setup):
     per_query_steps = stats.slot_steps / stats.completed
     assert per_query_steps < natural_steps, \
         (per_query_steps, natural_steps)
+
+
+# -- difficulty-aware admission (serve.difficulty) ------------------------
+
+@pytest.mark.parametrize("hosts", [1, 2, 4])
+def test_uniform_tiers_match_untiered_exactly(served_setup, hosts):
+    """Tiering off ≡ today's server: the identity TierConfig (nothing
+    classified hard, no reserved slots, no boost/hedge/queue bound)
+    must schedule byte-identically to tiers=None at every host count —
+    same per-query results, same harvested ndis, same refill count."""
+    from repro.serve import TierConfig
+
+    ds, index, d = served_setup
+    rts = np.tile([0.7, 0.9, 0.8, 0.95], 50).astype(np.float32)
+
+    outs = []
+    for tiers in (None, TierConfig.uniform()):
+        server = DarthServer(d.engine, d.trained.predictor,
+                             d.interval_for_target, num_slots=16,
+                             steps_per_sync=2, hosts=hosts, tiers=tiers)
+        outs.append(server.serve(ds.queries, rts))
+    (ref, ref_stats), (res, stats) = outs
+    assert stats.completed == ref_stats.completed == 200
+    for a, b in zip(ref, res):
+        np.testing.assert_allclose(a[0], b[0], atol=0)
+        np.testing.assert_array_equal(a[1], b[1])
+    assert stats.ndis_harvested == ref_stats.ndis_harvested
+    assert stats.refills == ref_stats.refills
+    assert stats.shed == stats.degraded == stats.hedged == 0
+    # the uniform policy still reports tier SLOs (everything is "easy")
+    assert stats.tiers["easy"].count == 200
+    assert stats.tiers["hard"].count == 0
+
+
+def test_tiered_serving_boost_only_deepens(served_setup):
+    """A hard-tier boost may only ADD work: every query still returns,
+    per-tier stats ledger balances, and total harvested ndis is >= the
+    untiered serve's (deeper searches for the boosted tail)."""
+    from repro.serve import TierConfig
+
+    ds, index, d = served_setup
+    rts = np.full((200,), 0.85, np.float32)
+    base_server = DarthServer(d.engine, d.trained.predictor,
+                              d.interval_for_target, num_slots=16,
+                              steps_per_sync=2, hosts=2)
+    _, base_stats = base_server.serve(ds.queries, rts)
+
+    server = DarthServer(d.engine, d.trained.predictor,
+                         d.interval_for_target, num_slots=16,
+                         steps_per_sync=2, hosts=2,
+                         tiers=TierConfig(hard_quantile=0.75,
+                                          hard_slot_fraction=0.25,
+                                          boost=0.1))
+    results, stats = server.serve(ds.queries, rts)
+    assert stats.completed == 200
+    assert all(r is not None for r in results)
+    assert stats.ndis_harvested >= base_stats.ndis_harvested
+    easy, hard = stats.tiers["easy"], stats.tiers["hard"]
+    assert easy.count + hard.count == 200
+    assert easy.completed + hard.completed == 200
+    # SLO percentiles are populated for both tiers
+    for t in (easy, hard):
+        assert np.isfinite(t.recall_p50) and np.isfinite(t.recall_p99)
+        assert np.isfinite(t.latency_p50) and np.isfinite(t.latency_p99)
+        assert t.recall_p99 <= t.recall_p50
+        assert t.latency_p99 >= t.latency_p50
+
+
+def test_hedge_harvest_orderings_return_exactly_one_result():
+    """_HostSlots.harvest hedge contract, both completion orders: the
+    hedge finishing SECOND upgrades the stored result (unless
+    truncated: dropped); the hedge finishing FIRST wins and the primary
+    frees silently via hedge_winner. Either way the query has exactly
+    one result and is never 'harvested twice'."""
+    from repro.serve.engine import _HostSlots
+    from repro.serve import TierConfig
+
+    queries = np.zeros((2, 4), np.float32)
+    tc = TierConfig(hard_quantile=0.0, hard_slot_fraction=1.0, hedge=True)
+    is_hard = np.ones((2,), bool)
+
+    def iv(rt):
+        rt = np.atleast_1d(rt)
+        return intervals.IntervalParams(
+            ipi=np.full(rt.shape, 8.0, np.float32),
+            mpi=np.full(rt.shape, 4.0, np.float32))
+
+    def fresh():
+        results = [None, None]
+        hl = _HostSlots(0, 0, 2, [0], queries, np.full((2,), 0.9, np.float32),
+                        iv, results, tiers=tc, is_hard=is_hard)
+        # first fill admits the primary (hedges never launch in a fill
+        # that admitted real work); second fill sees a drained queue
+        # plus an idle hard slot and launches the hedge duplicate
+        hl.fill(np.array([0]), step=0)
+        hl.fill(np.array([1]), step=1)
+        assert hl.slot_hedge[1] and not hl.slot_hedge[0]
+        assert hl.stats.hedged == 1
+        return hl, results
+
+    d = np.arange(10, dtype=np.float32).reshape(2, 5)
+    i = np.arange(10, dtype=np.int32).reshape(2, 5)
+    nd = np.array([7, 9])
+
+    # order A: primary first, hedge second -> hedge upgrades
+    hl, results = fresh()
+    hl.harvest(np.array([True, False]), d, i, nd, step=2)
+    assert results[0] is not None and results[0][1][0] == i[0, 0]
+    hl.harvest(np.array([False, True]), d, i, nd, step=4)
+    assert results[0][1][0] == i[1, 0]      # upgraded to the hedge's topk
+    assert hl.stats.hedge_upgrades == 1
+    assert hl.stats.completed == 1          # ONE query completed, not two
+
+    # order B: hedge first -> wins; primary then frees silently
+    hl, results = fresh()
+    hl.harvest(np.array([False, True]), d, i, nd, step=2)
+    assert results[0] is not None and results[0][1][0] == i[1, 0]
+    assert hl.stats.hedge_upgrades == 1
+    hl.harvest(np.array([True, False]), d, i, nd, step=4)
+    assert results[0][1][0] == i[1, 0]      # hedge result kept
+    assert hl.stats.completed == 1 and not hl.occupied.any()
+
+    # order C: truncated hedge while primary in flight -> hedge dropped,
+    # primary's partial top-k stands
+    hl, results = fresh()
+    hl.harvest(np.array([False, True]), d, i, nd, truncated=True, step=2)
+    assert results[0] is None               # hedge dropped, no result yet
+    hl.harvest(np.array([True, False]), d, i, nd, truncated=True, step=2)
+    assert results[0] is not None and results[0][1][0] == i[0, 0]
+    assert hl.stats.hedge_upgrades == 0 and hl.stats.truncated == 1
