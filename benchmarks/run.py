@@ -19,6 +19,7 @@ def main() -> None:
         ("dist_multi_host_serve", dist_search.dist_multi_host_serve),
         ("dist_difficulty_serve", dist_search.dist_difficulty_serve),
         ("mutate_burst", mutate.mutate_burst),
+        ("mutate_online_compaction", mutate.mutate_online_compaction),
         ("table5_predictor_quality", pt.table5_predictor_quality),
         ("table4_training_cost", pt.table4_training_cost),
         ("fig5_interval_ablation", pt.fig5_interval_ablation),

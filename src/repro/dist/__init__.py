@@ -12,9 +12,11 @@ from repro.dist.collectives import (make_sharded_beam_step,
                                     make_sharded_probe_step)
 from repro.dist.sharding import (batch_shardings, constrain_slots,
                                  opt_shardings, param_shardings,
-                                 place_index, replicated, slot_sharding)
+                                 place_index, refresh_placed_view,
+                                 replicated, slot_sharding)
 
 __all__ = ["collectives", "sharding", "make_sharded_flat_search",
            "make_sharded_probe_step", "make_sharded_beam_step",
-           "param_shardings", "opt_shardings", "place_index", "replicated",
+           "param_shardings", "opt_shardings", "place_index",
+           "refresh_placed_view", "replicated",
            "batch_shardings", "slot_sharding", "constrain_slots"]

@@ -348,7 +348,38 @@ def place_index(index: Any, mesh: Mesh) -> Any:
     return jax.tree.map(lambda a: place("", a), index)
 
 
+def refresh_placed_view(view: Any, mesh: Mesh, *, base: Any = None,
+                        delta: Any = None) -> Any:
+    """Shadow-view placement: re-place ONLY the changed component of an
+    already-placed MutableIndexView (repro.mutate).
+
+    The double-buffered serving swap needs the shadow base ON the mesh
+    before the chunk-boundary hot-swap, and the streaming delta refresh
+    happens every few boundaries — re-placing the whole view each time
+    would re-transfer the large unchanged half too. `base` (when given,
+    an UNPLACED index) is placed with the place_index rules (cap / node
+    dim split over "model"); `delta` (when given) is replicated per
+    mutate's sharding contract. A component passed as None keeps its
+    committed placement untouched, so the transfer cost of a delta
+    write is the ring only, and the shadow base transfer runs off the
+    serve path (before request_swap), never inside a chunk boundary."""
+    import dataclasses
+
+    from repro.mutate.engine import MutableIndexView
+
+    if not isinstance(view, MutableIndexView):
+        raise TypeError(
+            f"refresh_placed_view needs a MutableIndexView, got "
+            f"{type(view).__name__}")
+    rep = replicated(mesh)
+    return dataclasses.replace(
+        view,
+        base=view.base if base is None else place_index(base, mesh),
+        delta=view.delta if delta is None else jax.tree.map(
+            lambda a: jax.device_put(a, rep), delta))
+
+
 __all__ = ["param_shardings", "opt_shardings", "batch_shardings",
            "cache_shardings", "param_spec", "spec_for", "replicated",
-           "database_sharding", "place_index", "slot_sharding",
-           "constrain_slots"]
+           "database_sharding", "place_index", "refresh_placed_view",
+           "slot_sharding", "constrain_slots"]

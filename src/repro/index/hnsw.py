@@ -149,6 +149,27 @@ def _prune_rows(x: np.ndarray, owners: np.ndarray, merged: np.ndarray,
         jnp.asarray(ci_s), jnp.asarray(du_s), pd, m, alpha2))
 
 
+def _pool_prune(x: np.ndarray, owners: np.ndarray, cand_d: np.ndarray,
+                cand_i: np.ndarray, m: int, alpha2: float) -> np.ndarray:
+    """Forward edges from a beam-search candidate pool.
+
+    cand_d / cand_i are the owners' ef-wide search frontier (the
+    ef_construction candidate pool): drop self and invalid entries,
+    distance-sort, RobustPrune to m forward edges. owners: i64[B] node
+    ids; returns i32[B, m] (-1 padded). Shared by the batch build and
+    the streaming insert path — the two were duplicated copies before.
+    """
+    cd = np.where((cand_i == owners[:, None]) | (cand_i < 0), np.inf,
+                  cand_d)
+    ord_ = np.argsort(cd, axis=1, kind="stable")
+    ci_s = np.where(np.take_along_axis(cd, ord_, 1) < np.inf,
+                    np.take_along_axis(cand_i, ord_, 1), -1)
+    cd_s = np.take_along_axis(cd, ord_, axis=1)
+    pd = _pairwise_sq(jnp.asarray(x[np.maximum(ci_s, 0)]))
+    return np.asarray(_robust_prune(
+        jnp.asarray(ci_s), jnp.asarray(cd_s), pd, m, alpha2))
+
+
 def _prune_merged(x: np.ndarray, merged: np.ndarray, m: int, alpha2: float,
                   chunk: int) -> np.ndarray:
     """Distance-sort + alpha-prune candidate lists to degree m (chunked)."""
@@ -198,18 +219,9 @@ def build(x: np.ndarray, m: int = 16, *, ef_construction: int = 64,
             hi = min(n, lo + chunk)
             _, _, s = search(idx, xs[lo:hi], k=m, ef=efc,
                              max_steps=4 * efc)
-            cd = np.asarray(s.cand_d)
-            ci = np.asarray(s.cand_i)
-            # drop self from the candidate pool
-            is_self = ci == np.arange(lo, hi)[:, None]
-            cd = np.where(is_self | (ci < 0), np.inf, cd)
-            ord_ = np.argsort(cd, axis=1, kind="stable")
-            ci_s = np.where(np.take_along_axis(cd, ord_, 1) < np.inf,
-                            np.take_along_axis(ci, ord_, 1), -1)
-            cd_s = np.take_along_axis(cd, ord_, axis=1)
-            pd = _pairwise_sq(xs[jnp.maximum(jnp.asarray(ci_s), 0)])
-            fwd[lo:hi] = np.asarray(_robust_prune(
-                jnp.asarray(ci_s), jnp.asarray(cd_s), pd, m, alpha2))
+            fwd[lo:hi] = _pool_prune(x, np.arange(lo, hi),
+                                     np.asarray(s.cand_d),
+                                     np.asarray(s.cand_i), m, alpha2)
         rev = _reverse_edges(fwd, m)
         # Union with the previous graph: keeps the long "highway" edges the
         # frontier-only candidate pool cannot see (Vamana's visited-set role).
@@ -235,7 +247,24 @@ def insert_nodes(index: HNSWIndex, rows: np.ndarray, *,
     batch build), RobustPrune to m forward edges, then merge the reverse
     proposals into each target's list and re-prune — the reverse-edge
     repair that makes new nodes reachable.
+
+    (Synchronous wrapper: drains insert_nodes_steps in one call.)
     """
+    gen = insert_nodes_steps(index, rows, ef_construction=ef_construction,
+                             alpha=alpha, chunk=chunk)
+    while True:
+        try:
+            next(gen)
+        except StopIteration as stop:
+            return stop.value
+
+
+def insert_nodes_steps(index: HNSWIndex, rows: np.ndarray, *,
+                       ef_construction: int = 64, alpha: float = 1.2,
+                       chunk: int = 1024):
+    """Generator form of insert_nodes: yields after each linked chunk
+    (one bounded unit of work — a background compaction's tick
+    boundary) and returns the updated index via StopIteration.value."""
     rows = np.asarray(rows, np.int64)
     if rows.size == 0:
         return index
@@ -257,17 +286,8 @@ def insert_nodes(index: HNSWIndex, rows: np.ndarray, *,
                         route_ids=index.route_ids)
         _, _, s = search(cur, jnp.asarray(x[sel]), k=m, ef=efc,
                          max_steps=4 * efc)
-        cd = np.asarray(s.cand_d)
-        ci = np.asarray(s.cand_i)
-        is_self = ci == sel[:, None]
-        cd = np.where(is_self | (ci < 0), np.inf, cd)
-        ord_ = np.argsort(cd, axis=1, kind="stable")
-        ci_s = np.where(np.take_along_axis(cd, ord_, 1) < np.inf,
-                        np.take_along_axis(ci, ord_, 1), -1)
-        cd_s = np.take_along_axis(cd, ord_, axis=1)
-        pd = _pairwise_sq(jnp.asarray(x[np.maximum(ci_s, 0)]))
-        fwd = np.asarray(_robust_prune(
-            jnp.asarray(ci_s), jnp.asarray(cd_s), pd, m, alpha2))
+        fwd = _pool_prune(x, sel, np.asarray(s.cand_d),
+                          np.asarray(s.cand_i), m, alpha2)
         nbr[sel] = fwd
         # Reverse-edge repair: every forward target merges the new node
         # into its own list and re-prunes to degree m.
@@ -279,6 +299,7 @@ def insert_nodes(index: HNSWIndex, rows: np.ndarray, *,
             merged = _dedup_rows_vec(
                 np.concatenate([nbr[targets], rev[targets]], axis=1))
             nbr[targets] = _prune_rows(x, targets, merged, m, alpha2)
+        yield
 
     return dataclasses.replace(index, neighbors=jnp.asarray(nbr))
 

@@ -75,6 +75,26 @@ def pack_buckets(x_store: np.ndarray, x_deq: np.ndarray, ids: np.ndarray,
     cap_round; padded slots carry the repo convention vecs 0 / ids -1 /
     sqnorm +inf. Returns (bucket_vecs, bucket_ids, bucket_sqnorm, sizes).
     """
+    gen = pack_buckets_steps(x_store, x_deq, ids, assign, nlist,
+                             cap_round=cap_round)
+    while True:
+        try:
+            next(gen)
+        except StopIteration as stop:
+            return stop.value
+
+
+def pack_buckets_steps(x_store: np.ndarray, x_deq: np.ndarray,
+                       ids: np.ndarray, assign: np.ndarray, nlist: int, *,
+                       cap_round: int = 8, chunk: int = 64):
+    """Incremental pack_buckets: one generator, both pack paths.
+
+    Yields after filling each `chunk` of buckets so a background
+    compaction (mutate.compact) can bound the work per serve-loop tick;
+    pack_buckets drains it in one call for the synchronous build path.
+    Returns (bucket_vecs, bucket_ids, bucket_sqnorm, sizes) via
+    StopIteration.value.
+    """
     d = x_store.shape[1]
     order = np.argsort(assign, kind="stable")
     sizes = np.bincount(assign, minlength=nlist)
@@ -82,14 +102,15 @@ def pack_buckets(x_store: np.ndarray, x_deq: np.ndarray, ids: np.ndarray,
     bucket_vecs = np.zeros((nlist, cap, d), x_store.dtype)
     bucket_ids = np.full((nlist, cap), -1, np.int32)
     bucket_sqnorm = np.full((nlist, cap), np.inf, np.float32)
-    start = 0
-    for c in range(nlist):
-        sz = int(sizes[c])
-        sel = order[start:start + sz]
-        start += sz
-        bucket_vecs[c, :sz] = x_store[sel]
-        bucket_ids[c, :sz] = ids[sel]
-        bucket_sqnorm[c, :sz] = (x_deq[sel] ** 2).sum(axis=1)
+    starts = np.concatenate([[0], np.cumsum(sizes)])
+    for c0 in range(0, nlist, chunk):
+        for c in range(c0, min(nlist, c0 + chunk)):
+            sz = int(sizes[c])
+            sel = order[starts[c]:starts[c] + sz]
+            bucket_vecs[c, :sz] = x_store[sel]
+            bucket_ids[c, :sz] = ids[sel]
+            bucket_sqnorm[c, :sz] = (x_deq[sel] ** 2).sum(axis=1)
+        yield
     return bucket_vecs, bucket_ids, bucket_sqnorm, sizes.astype(np.int32)
 
 

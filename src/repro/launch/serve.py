@@ -94,6 +94,14 @@ def main() -> None:
                     help="fraction of burst inserts drawn OOD "
                          "(mutation_stream)")
     ap.add_argument("--mutation-steps", type=int, default=4)
+    ap.add_argument("--online-compact", action="store_true",
+                    help="with --mutations: stream the events INTO a "
+                         "live serve phase (one per chunk boundary, "
+                         "contents-only delta refreshes), then run "
+                         "compaction as a background incremental "
+                         "rebuild ticked at boundaries and hot-swap "
+                         "the folded base atomically at a drained "
+                         "boundary — no stop-the-world pause")
     ap.add_argument("--delta-cap", type=int, default=0,
                     help="delta ring capacity (0 = sized to the burst)")
     ap.add_argument("--recal-threshold", type=float, default=0.02,
@@ -233,9 +241,10 @@ def main() -> None:
             gt_cache["frozen"] = np.asarray(gt_i).astype(np.int32)
         return gt_cache["frozen"]
 
-    def serve_phase(label: str) -> None:
+    def serve_phase(label: str, on_boundary=None):
         t0 = time.time()
-        results, stats = server.serve(ds.queries, r_targets)
+        results, stats = server.serve(ds.queries, r_targets,
+                                      on_boundary=on_boundary)
         dt = time.time() - t0
         print(f"[serve] {label}: {stats.completed} queries in {dt:.1f}s "
               f"({stats.completed/max(dt, 1e-9):.0f} qps host-side; "
@@ -264,7 +273,7 @@ def main() -> None:
         if done.size == 0:
             print(f"[serve] {label}: no queries completed — skipping "
                   f"recall report")
-            return
+            return stats
         ids = np.stack([results[i][1] for i in done])
         gt_i = ground_truth()
         rec = np.asarray(flat.recall_at_k(jnp.asarray(ids),
@@ -279,10 +288,81 @@ def main() -> None:
             else:
                 print(f"[serve] {label}: target {t:.2f}: no completed "
                       f"queries")
+        return stats
 
     serve_phase("pre-mutation" if mutable is not None else "steady-state")
 
-    if mutable is not None:
+    if mutable is not None and args.online_compact:
+        events = list(vectors.mutation_stream(
+            ds, ins_pct, del_pct, drift=args.drift,
+            steps=args.mutation_steps, seed=1))
+        print(f"[serve] online mutation stream: {len(events)} events, "
+              f"applied one per chunk boundary")
+
+        def push_contents(update_base: bool) -> None:
+            """Contents-only view refresh into the live server: delta
+            always, base only when tombstones changed. Reuses the
+            wrapper closures (and every jit cache); on a mesh the
+            replacement components are re-placed with the committed
+            shardings first."""
+            if mesh is not None:
+                view = dist.refresh_placed_view(
+                    server.engine.index, mesh,
+                    base=mutable.base if update_base else None,
+                    delta=mutable.delta)
+                eng = server.engine._replace(index=view)
+            else:
+                eng = mutate.refresh_view(
+                    server.engine,
+                    base=mutable.base if update_base else None,
+                    delta=mutable.delta)
+            darth.engine = eng
+            server.set_engine(eng, contents_only=True)
+
+        state = {"swapped": False, "ticks": 0}
+
+        def on_boundary(srv) -> None:
+            # one unit of mutation work per boundary; once a swap is
+            # staged, do nothing until the pool drains and applies it
+            if srv.swap_pending or state["swapped"]:
+                return
+            if events:
+                ev = events.pop(0)
+                mutable.apply([ev])
+                push_contents(update_base=(ev.kind == "delete"))
+            elif not mutable.compacting:
+                mutable.begin_compaction()
+            elif mutable.compact_tick():
+                state["ticks"] = mutable.compaction_ticks
+                mutable.swap_compaction()
+                eng = build_engine(**engine_kw)
+                srv.request_swap(eng, contents_only=True)
+                darth.engine = eng
+                state["swapped"] = True
+
+        stats = serve_phase("online-mutation", on_boundary=on_boundary)
+        if not state["swapped"]:
+            # the serve phase finished before the stream / rebuild did:
+            # drain the leftovers synchronously (same generator code
+            # path — background and sync produce the identical shadow)
+            if events:
+                mutable.apply(events)
+                events.clear()
+            if mutable.compacting:
+                while not mutable.compact_tick():
+                    pass
+                mutable.swap_compaction()
+            else:
+                mutable.compact()
+            darth.engine = build_engine(**engine_kw)
+            server.set_engine(darth.engine, contents_only=True)
+        print(f"[serve] online compaction: {stats.swaps} atomic "
+              f"swap(s) mid-serve ({state['ticks']} background ticks), "
+              f"{stats.hedge_epoch_dropped} hedges dropped across "
+              f"epochs; {mutable.num_live} live vectors, delta empty")
+        serve_phase("post-swap")
+
+    elif mutable is not None:
         events = vectors.mutation_stream(
             ds, ins_pct, del_pct, drift=args.drift,
             steps=args.mutation_steps, seed=1)

@@ -7,11 +7,12 @@ declarative-recall contract survives a mutating collection.
 from repro.mutate import compact, delta, engine, index, monitor
 from repro.mutate.delta import DeltaTier, make_delta
 from repro.mutate.engine import (MutableIndexView, MutableSearchState,
-                                 mutable_engine)
-from repro.mutate.index import MutableIndex
+                                 mutable_engine, refresh_view)
+from repro.mutate.index import CompactionJob, MutableIndex
 from repro.mutate.monitor import DriftReport, RecalibrationMonitor
 
 __all__ = ["compact", "delta", "engine", "index", "monitor",
            "DeltaTier", "make_delta", "MutableIndexView",
-           "MutableSearchState", "mutable_engine", "MutableIndex",
+           "MutableSearchState", "mutable_engine", "refresh_view",
+           "MutableIndex", "CompactionJob",
            "DriftReport", "RecalibrationMonitor"]

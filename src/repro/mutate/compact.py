@@ -20,6 +20,20 @@ with `hnsw.insert_nodes` (beam-search candidate pool -> RobustPrune ->
 reverse-edge repair); rows that pointed at a deleted node splice in
 that node's own neighbor list before re-pruning, so the deleted node's
 "highway" role is repaired rather than severed.
+
+Both folds are exposed as INCREMENTAL generators (`compact_ivf_steps`,
+`compact_hnsw_steps`): every `yield` is a tick boundary, the work
+between two yields is one bounded unit (an assign / pack / repair /
+link chunk), so a serve loop can interleave rebuild ticks with chunk
+boundaries and never block for more than one unit. The synchronous
+`compact_ivf` / `compact_hnsw` entry points simply drain the generator
+— one code path, so background and stop-the-world compaction produce
+bit-identical shadows. The generators read the input index ONCE up
+front; jax functional updates mean concurrent deletes REPLACE the
+active base object rather than mutating it, so the begin-time snapshot
+is immutable (snapshot isolation for free) and
+`MutableIndex.swap_compaction` re-applies mid-rebuild deletes to the
+finished shadow.
 """
 from __future__ import annotations
 
@@ -33,13 +47,35 @@ from repro.index import ivf as ivf_lib
 from repro.index import kmeans as kmeans_lib
 
 
+def drain(gen):
+    """Run an incremental-compaction generator to completion and return
+    its final value (the rebuilt base index)."""
+    while True:
+        try:
+            next(gen)
+        except StopIteration as stop:
+            return stop.value
+
+
 def compact_ivf(index: ivf_lib.IVFIndex, delta_ids: np.ndarray,
                 delta_vecs: np.ndarray, *, cap_round: int = 8
                 ) -> ivf_lib.IVFIndex:
-    """Fold live delta entries into the bucket store; drop tombstones."""
+    """Fold live delta entries into the bucket store; drop tombstones.
+    (Synchronous: drains compact_ivf_steps in one call.)"""
+    return drain(compact_ivf_steps(index, delta_ids, delta_vecs,
+                                   cap_round=cap_round))
+
+
+def compact_ivf_steps(index: ivf_lib.IVFIndex, delta_ids: np.ndarray,
+                      delta_vecs: np.ndarray, *, cap_round: int = 8,
+                      assign_chunk: int = 4096, pack_chunk: int = 64):
+    """Incremental IVF fold: snapshot reads, chunked delta re-spill,
+    chunked bucket re-pack; yields between bounded units and returns
+    the shadow IVFIndex via StopIteration.value."""
     cents = np.asarray(index.centroids)
     bv = np.asarray(index.bucket_vecs)
     bi = np.asarray(index.bucket_ids)
+    yield
     live = bi >= 0
     base_store = bv[live]                     # [L, D] stored dtype
     base_ids = bi[live].astype(np.int32)
@@ -47,16 +83,18 @@ def compact_ivf(index: ivf_lib.IVFIndex, delta_ids: np.ndarray,
     # move); the bucket row of each live slot is its assignment
     base_assign = np.broadcast_to(
         np.arange(bi.shape[0], dtype=np.int32)[:, None], bi.shape)[live]
+    yield
 
     scale = np.asarray(index.scale)
     offset = np.asarray(index.offset)
     delta_vecs = np.asarray(delta_vecs, np.float32).reshape(-1, index.dim)
     delta_ids = np.asarray(delta_ids, np.int32).reshape(-1)
-    if delta_ids.size:
-        delta_assign = np.asarray(kmeans_lib.assign(
-            jnp.asarray(delta_vecs), jnp.asarray(cents)))  # re-spill
-    else:
-        delta_assign = np.zeros((0,), np.int32)
+    delta_assign = np.zeros((delta_ids.size,), np.int32)
+    for lo in range(0, delta_ids.size, assign_chunk):   # re-spill
+        hi = min(delta_ids.size, lo + assign_chunk)
+        delta_assign[lo:hi] = np.asarray(kmeans_lib.assign(
+            jnp.asarray(delta_vecs[lo:hi]), jnp.asarray(cents)))
+        yield
 
     if index.quantized:
         base_deq = base_store.astype(np.float32) * scale + offset
@@ -70,8 +108,11 @@ def compact_ivf(index: ivf_lib.IVFIndex, delta_ids: np.ndarray,
     x_deq = np.concatenate([base_deq, delta_deq], axis=0)
     ids = np.concatenate([base_ids, delta_ids])
     assign = np.concatenate([base_assign, delta_assign]).astype(np.int64)
-    bucket_vecs, bucket_ids, bucket_sqnorm, sizes = ivf_lib.pack_buckets(
-        x_store, x_deq, ids, assign, index.nlist, cap_round=cap_round)
+    yield
+    bucket_vecs, bucket_ids, bucket_sqnorm, sizes = yield from (
+        ivf_lib.pack_buckets_steps(x_store, x_deq, ids, assign,
+                                   index.nlist, cap_round=cap_round,
+                                   chunk=pack_chunk))
     return ivf_lib.IVFIndex(
         centroids=index.centroids,
         bucket_vecs=jnp.asarray(bucket_vecs),
@@ -87,10 +128,25 @@ def compact_hnsw(index: hnsw_lib.HNSWIndex, delta_ids: np.ndarray,
                  delta_vecs: np.ndarray, next_id: int, *,
                  ef_construction: int = 64, alpha: float = 1.2,
                  chunk: int = 1024, seed: int = 0) -> hnsw_lib.HNSWIndex:
-    """Grow the graph to `next_id` rows, repair deletions, link delta."""
+    """Grow the graph to `next_id` rows, repair deletions, link delta.
+    (Synchronous: drains compact_hnsw_steps in one call.)"""
+    return drain(compact_hnsw_steps(index, delta_ids, delta_vecs, next_id,
+                                    ef_construction=ef_construction,
+                                    alpha=alpha, chunk=chunk, seed=seed))
+
+
+def compact_hnsw_steps(index: hnsw_lib.HNSWIndex, delta_ids: np.ndarray,
+                       delta_vecs: np.ndarray, next_id: int, *,
+                       ef_construction: int = 64, alpha: float = 1.2,
+                       chunk: int = 1024, seed: int = 0,
+                       repair_chunk: int = 256):
+    """Incremental HNSW fold: snapshot reads, chunked deletion repair,
+    chunked incremental linking; yields between bounded units and
+    returns the shadow HNSWIndex via StopIteration.value."""
     x = np.asarray(index.vectors)
     sq = np.asarray(index.sqnorm)
     nbr = np.asarray(index.neighbors)
+    yield
     n_old, d = x.shape
     m = nbr.shape[1]
     alpha2 = float(alpha) ** 2
@@ -107,6 +163,7 @@ def compact_hnsw(index: hnsw_lib.HNSWIndex, delta_ids: np.ndarray,
     delta_vecs = np.asarray(delta_vecs, np.float32).reshape(-1, d)
     x2[delta_ids] = delta_vecs
     sq2[delta_ids] = (delta_vecs ** 2).sum(axis=1)
+    yield
 
     # 1) deletion repair: rows pointing at a dead node splice in that
     #    node's neighbors (minus dead) and re-prune; dead rows go inert.
@@ -120,8 +177,8 @@ def compact_hnsw(index: hnsw_lib.HNSWIndex, delta_ids: np.ndarray,
         affected = affected[~dead_mask[affected]]
         # chunked: merged lists are m + m*m wide and the re-prune's
         # pairwise block is quadratic in that width
-        for lo in range(0, affected.size, 256):
-            aff = affected[lo:lo + 256]
+        for lo in range(0, affected.size, repair_chunk):
+            aff = affected[lo:lo + repair_chunk]
             own = np.where(ref[aff], -1, nbr2[aff])
             # dead targets' own out-edges, flattened per affected row
             spliced = np.where(ref[aff, :, None],
@@ -133,6 +190,7 @@ def compact_hnsw(index: hnsw_lib.HNSWIndex, delta_ids: np.ndarray,
                 merged, -1)
             merged = hnsw_lib._dedup_rows_vec(merged)
             nbr2[aff] = hnsw_lib._prune_rows(x2, aff, merged, m, alpha2)
+            yield
         nbr2[dead_rows] = -1
 
     # 2) routing sample / entry over LIVE, LINKED nodes only (new rows
@@ -147,15 +205,16 @@ def compact_hnsw(index: hnsw_lib.HNSWIndex, delta_ids: np.ndarray,
                             replace=False).astype(np.int32)
     entry_link = int(old_live[np.argmin(
         ((x2[old_live] - x2[old_live].mean(0)) ** 2).sum(1))])
+    yield
 
     grown = hnsw_lib.HNSWIndex(
         vectors=jnp.asarray(x2), sqnorm=jnp.asarray(sq2),
         neighbors=jnp.asarray(nbr2),
         entry=jnp.asarray(entry_link, jnp.int32),
         route_ids=jnp.asarray(route_link))
-    grown = hnsw_lib.insert_nodes(grown, delta_ids,
-                                  ef_construction=ef_construction,
-                                  alpha=alpha, chunk=chunk)
+    grown = yield from hnsw_lib.insert_nodes_steps(
+        grown, delta_ids, ef_construction=ef_construction,
+        alpha=alpha, chunk=chunk)
 
     # 3) final routing sample drawn over ALL live nodes (incl. new ones,
     #    now linked) so routing covers the folded distribution.

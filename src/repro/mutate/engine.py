@@ -130,3 +130,24 @@ def mutable_engine(base: engines_lib.Engine, delta: delta_lib.DeltaTier, *,
         name=base.name + "+delta",
         k=k,
     )
+
+
+def refresh_view(engine: engines_lib.Engine, *, base: Any = None,
+                 delta: Any = None) -> engines_lib.Engine:
+    """Contents-only view refresh — the cheap half of the
+    double-buffered swap. Returns a new Engine reusing the wrapper's
+    closures (and therefore every jit cache keyed on them) with only
+    the view's base and/or delta replaced. Because init/step read the
+    index from their ARGUMENT, handing the result to
+    DarthServer.set_engine(contents_only=True) retargets every
+    subsequent chunk to the new contents with no rebuild and no
+    recompile; components passed as None keep the current (possibly
+    mesh-placed) buffers untouched."""
+    view = engine.index
+    if not isinstance(view, MutableIndexView):
+        raise TypeError(
+            f"refresh_view needs an Engine carrying a MutableIndexView "
+            f"(mutable_engine), got {type(view).__name__}")
+    return engine._replace(index=MutableIndexView(
+        base=view.base if base is None else base,
+        delta=view.delta if delta is None else delta))

@@ -23,7 +23,7 @@ replicated, tombstones travel row-sharded inside the base arrays).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Iterable, List, Tuple
+from typing import Any, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +38,51 @@ from repro.mutate.engine import MutableIndexView
 
 def _round_up(v: int, m: int) -> int:
     return (v + m - 1) // m * m
+
+
+def _pad_idx(vals) -> np.ndarray:
+    """Pad an index vector to a round length with -1 (fixed-shape
+    scatters; the -1 rows route out of bounds and are dropped)."""
+    vals = np.asarray(vals, np.int64).reshape(-1)
+    out = np.full((_round_up(max(vals.size, 1), 64),), -1, np.int32)
+    out[:vals.size] = vals
+    return out
+
+
+class CompactionJob:
+    """One in-flight background compaction: a shadow base rebuilt
+    incrementally off the serve path (the double-buffer's back buffer).
+
+    Snapshot isolation comes free from jax functional updates: delete()
+    REPLACES the active base object with a masked copy, so the
+    generator's begin-time base reference is immutable and the rebuild
+    never sees a torn read. `deleted_since` records ids deleted after
+    begin so swap_compaction() can re-tombstone them in the finished
+    shadow; `folded_ids` is the delta snapshot baked into the shadow —
+    the swap frees exactly those ring slots, while inserts admitted
+    mid-rebuild stay live in the ring (served from the delta until the
+    next compaction)."""
+
+    def __init__(self, gen, folded_ids: np.ndarray):
+        self._gen = gen
+        self.folded_ids = frozenset(
+            int(i) for i in np.asarray(folded_ids).reshape(-1))
+        self.deleted_since: set = set()
+        self.ticks = 0
+        self.done = False
+        self.shadow: Any = None
+
+    def tick(self) -> bool:
+        """Run one bounded unit of rebuild work; returns True once the
+        shadow is complete and ready for swap_compaction()."""
+        if not self.done:
+            try:
+                next(self._gen)
+                self.ticks += 1
+            except StopIteration as stop:
+                self.shadow = stop.value
+                self.done = True
+        return self.done
 
 
 @jax.jit
@@ -90,6 +135,7 @@ class MutableIndex:
         self._deleted: set = set()
         self._delta_slot: dict = {}   # live delta id -> ring slot
         self._slot_id: dict = {}      # ring slot -> id (live or dead)
+        self._job: Optional[CompactionJob] = None
         if self.kind == "ivf":
             bi = np.asarray(jax.device_get(base.bucket_ids))
             self._next_id = int(bi.max()) + 1 if (bi >= 0).any() else 0
@@ -175,6 +221,7 @@ class MutableIndex:
         ivf_b: List[int] = []
         ivf_s: List[int] = []
         hnsw_rows: List[int] = []
+        newly: List[int] = []
         count = 0
         for i in np.unique(np.asarray(list(ids), np.int64)):
             i = int(i)
@@ -194,24 +241,24 @@ class MutableIndex:
             else:
                 hnsw_rows.append(i)
             self._deleted.add(i)
+            newly.append(i)
             count += 1
 
-        def padded(vals: List[int]) -> np.ndarray:
-            out = np.full((_round_up(max(len(vals), 1), 64),), -1, np.int32)
-            out[:len(vals)] = vals
-            return out
-
         if delta_slots:
-            self.delta = delta_lib.tombstone(self.delta,
-                                             jnp.asarray(padded(delta_slots)))
+            self.delta = delta_lib.tombstone(
+                self.delta, jnp.asarray(_pad_idx(delta_slots)))
         if ivf_b:
             self.base = _mask_ivf_slots(self.base,
-                                        jnp.asarray(padded(ivf_b)),
-                                        jnp.asarray(padded(ivf_s)))
+                                        jnp.asarray(_pad_idx(ivf_b)),
+                                        jnp.asarray(_pad_idx(ivf_s)))
         if hnsw_rows:
             self.base = _mask_hnsw_rows(self.base,
-                                        jnp.asarray(padded(hnsw_rows)))
+                                        jnp.asarray(_pad_idx(hnsw_rows)))
         if count:
+            # a running background rebuild read the begin-time snapshot;
+            # these deletes must be re-applied to its shadow at swap
+            if self._job is not None:
+                self._job.deleted_since.update(newly)
             self.version += 1
         return count
 
@@ -287,30 +334,125 @@ class MutableIndex:
         return out
 
     # -- compaction --------------------------------------------------------
+    @property
+    def compacting(self) -> bool:
+        """True while a background compaction job is in flight."""
+        return self._job is not None
+
+    @property
+    def compaction_ticks(self) -> int:
+        """Ticks the in-flight compaction job has consumed (0 if none)."""
+        return self._job.ticks if self._job is not None else 0
+
+    def begin_compaction(self, *, cap_round: int = 8,
+                         ef_construction: int = 64, alpha: float = 1.2,
+                         chunk: int = 1024, seed: int = 0
+                         ) -> CompactionJob:
+        """Start a background compaction: snapshot the live delta and
+        the current base, and return the job whose tick() advances an
+        incremental shadow rebuild (compact.compact_*_steps) without
+        ever touching the active view. Mutations stay legal while the
+        job runs: inserts land in the ring (NOT folded — they survive
+        the swap live in the delta), deletes mask the active view and
+        are recorded for re-application to the shadow. Call
+        swap_compaction() once tick() returns True."""
+        if self._job is not None:
+            raise RuntimeError("compaction already in progress")
+        d_ids, d_vecs = self._delta_live()
+        if self.kind == "ivf":
+            gen = compact_lib.compact_ivf_steps(
+                self.base, d_ids, d_vecs, cap_round=cap_round)
+        else:
+            gen = compact_lib.compact_hnsw_steps(
+                self.base, d_ids, d_vecs, self._next_id,
+                ef_construction=ef_construction, alpha=alpha,
+                chunk=chunk, seed=seed)
+        self._job = CompactionJob(gen, d_ids)
+        return self._job
+
+    def compact_tick(self) -> bool:
+        """Advance the background rebuild by one bounded work unit;
+        returns True once the shadow is ready to swap."""
+        if self._job is None:
+            raise RuntimeError("no compaction in progress")
+        return self._job.tick()
+
+    def swap_compaction(self) -> None:
+        """Install the finished shadow as the new base — the host half
+        of the atomic hot-swap (the server applies the matching engine
+        swap at a drained chunk boundary via request_swap). Re-applies
+        mid-rebuild deletes as shadow tombstones, frees the folded ring
+        slots (mid-rebuild inserts stay live in the ring), and bumps
+        the mutation epoch. The active view keeps serving unchanged
+        right up to the moment `self.base` is re-pointed."""
+        job = self._job
+        if job is None:
+            raise RuntimeError("no compaction in progress")
+        if not job.done:
+            raise RuntimeError(
+                "compaction not finished: tick() until it returns True")
+        shadow = job.shadow
+        # 1) mid-rebuild deletes: the shadow folded the begin-time live
+        #    set, so anything deleted since must be re-tombstoned there
+        #    (ids inserted after begin were never folded — no-ops here).
+        late = np.fromiter(sorted(job.deleted_since), np.int64,
+                           count=len(job.deleted_since))
+        if late.size:
+            if self.kind == "ivf":
+                bi = np.asarray(jax.device_get(shadow.bucket_ids))
+                b, s = np.nonzero((bi >= 0) & np.isin(bi, late))
+                if b.size:
+                    shadow = _mask_ivf_slots(shadow,
+                                             jnp.asarray(_pad_idx(b)),
+                                             jnp.asarray(_pad_idx(s)))
+            else:
+                rows = late[late < int(shadow.num_vectors)]
+                if rows.size:
+                    shadow = _mask_hnsw_rows(shadow,
+                                             jnp.asarray(_pad_idx(rows)))
+        self.base = shadow
+        # 2) free the folded ring slots — their vectors now live in the
+        #    base. Slots freed by a mid-rebuild delete are already gone
+        #    from _delta_slot; ids inserted mid-rebuild keep theirs.
+        slots = [self._delta_slot.pop(i) for i in sorted(job.folded_ids)
+                 if i in self._delta_slot]
+        if slots:
+            self.delta = delta_lib.tombstone(self.delta,
+                                             jnp.asarray(_pad_idx(slots)))
+            self._live_delta -= len(slots)
+        if not self._delta_slot:
+            # ring fully drained (no mid-rebuild inserts): reset to the
+            # pristine state the synchronous compact() always produced
+            self.delta = delta_lib.make_delta(self.capacity, self.dim)
+            self._cursor = 0
+            self._live_delta = 0
+            self._slot_id.clear()
+        if self.kind == "ivf":
+            self._reindex_ivf()
+        self._job = None
+        self.version += 1
+
+    def _reindex_ivf(self) -> None:
+        """Rebuild the id -> (bucket, slot) delete maps from the base
+        (slots masked at swap time carry id -1 and stay unmapped)."""
+        bi = np.asarray(jax.device_get(self.base.bucket_ids))
+        self._bucket_of = np.full((self._next_id,), -1, np.int32)
+        self._slot_of = np.full((self._next_id,), -1, np.int32)
+        b, s = np.nonzero(bi >= 0)
+        self._bucket_of[bi[b, s]] = b
+        self._slot_of[bi[b, s]] = s
+
     def compact(self, *, cap_round: int = 8, ef_construction: int = 64,
                 alpha: float = 1.2, chunk: int = 1024,
                 seed: int = 0) -> None:
         """Fold the delta into the base and empty the ring. The base
         object is REPLACED (shapes may grow); rebuild engines/views from
-        `self.base` / `self.view()` afterwards."""
-        d_ids, d_vecs = self._delta_live()
-        if self.kind == "ivf":
-            self.base = compact_lib.compact_ivf(
-                self.base, d_ids, d_vecs, cap_round=cap_round)
-            bi = np.asarray(jax.device_get(self.base.bucket_ids))
-            self._bucket_of = np.full((self._next_id,), -1, np.int32)
-            self._slot_of = np.full((self._next_id,), -1, np.int32)
-            b, s = np.nonzero(bi >= 0)
-            self._bucket_of[bi[b, s]] = b
-            self._slot_of[bi[b, s]] = s
-        else:
-            self.base = compact_lib.compact_hnsw(
-                self.base, d_ids, d_vecs, self._next_id,
-                ef_construction=ef_construction, alpha=alpha,
-                chunk=chunk, seed=seed)
-        self.delta = delta_lib.make_delta(self.capacity, self.dim)
-        self._cursor = 0
-        self._live_delta = 0
-        self._delta_slot.clear()
-        self._slot_id.clear()
-        self.version += 1
+        `self.base` / `self.view()` afterwards. Synchronous convenience:
+        begin_compaction + drain every tick + swap_compaction — the
+        exact code path the background rebuild takes, in one call."""
+        self.begin_compaction(cap_round=cap_round,
+                              ef_construction=ef_construction,
+                              alpha=alpha, chunk=chunk, seed=seed)
+        while not self.compact_tick():
+            pass
+        self.swap_compaction()

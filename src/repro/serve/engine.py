@@ -100,6 +100,10 @@ class HostStats:
     degraded: int = 0            # served at the lowered degrade_target
     hedged: int = 0              # hedge duplicates launched
     hedge_upgrades: int = 0      # results replaced by a deeper hedge
+    hedge_epoch_dropped: int = 0  # hedges dropped at harvest because a
+    #                               hot-swap landed between the primary's
+    #                               harvest and the hedge's (the two ran
+    #                               against different index versions)
     stolen: int = 0              # queries stolen INTO this host (rebalance)
     shed_ids: List[int] = dataclasses.field(default_factory=list)
 
@@ -122,6 +126,10 @@ class ServeStats:
     degraded: int = 0
     hedged: int = 0
     hedge_upgrades: int = 0
+    hedge_epoch_dropped: int = 0
+    # hot-swaps (request_swap) applied at drained chunk boundaries
+    # during this serve call
+    swaps: int = 0
     # per-tier SLO metrics (serve.difficulty.TierStats, keyed "easy" /
     # "hard"); empty dict when the server runs untiered
     tiers: Dict[str, Any] = dataclasses.field(default_factory=dict)
@@ -174,6 +182,12 @@ class _HostSlots:
         self.is_hard = is_hard
         self.admit_step = np.zeros((nloc,), np.int64)
         self.slot_hedge = np.zeros((nloc,), bool)
+        # engine/predictor version each slot was admitted under
+        # (DarthServer.engine_epoch at fill time) and the version each
+        # stored result was computed against — a hedge may only upgrade
+        # a result from its own epoch (no cross-version merges)
+        self.slot_epoch = np.zeros((nloc,), np.int64)
+        self.result_epoch: Dict[int, int] = {}
         self.hedge_winner: set = set()   # qids whose result came from a
         #                                  hedge while the primary ran
         # harvest-time SLO samples: (hard, r_pred, latency, truncated)
@@ -230,7 +244,7 @@ class _HostSlots:
             rt = max(rt, min(rt + self.tiers.boost, 0.99))
         return rt
 
-    def fill(self, free: np.ndarray, step: int = 0
+    def fill(self, free: np.ndarray, step: int = 0, epoch: int = 0
              ) -> Tuple[np.ndarray, np.ndarray]:
         """Admit queued queries into the local `free` slots; updates the
         host's rt/ipi/mpi slices in place and returns (mask bool[nloc],
@@ -244,7 +258,10 @@ class _HostSlots:
         hard slots and nothing queued, hedging (TierConfig.hedge)
         launches duplicates of the oldest in-flight hard queries at a
         hedge_boost-raised target. `step` is the current engine-step
-        count, recorded per slot for the latency percentiles."""
+        count, recorded per slot for the latency percentiles; `epoch`
+        is the server's engine_epoch, stamped per slot so harvest can
+        refuse to merge results computed against different index /
+        predictor versions (hot-swap mid-flight)."""
         nloc = self.hi - self.lo
         qb = np.zeros((nloc, self.queries.shape[1]), np.float32)
         mask = np.zeros((nloc,), bool)
@@ -280,6 +297,7 @@ class _HostSlots:
             self.slot_query[s] = qid
             self.slot_hedge[s] = False
             self.admit_step[s] = step
+            self.slot_epoch[s] = epoch
         if self.tiers is not None and self.tiers.hedge:
             for s, qid in hedges:
                 mask[s] = True
@@ -290,6 +308,7 @@ class _HostSlots:
                 self.slot_query[s] = qid
                 self.slot_hedge[s] = True
                 self.admit_step[s] = step
+                self.slot_epoch[s] = epoch
                 self.stats.hedged += 1
         ip = self.interval_for_target(rt2)
         ipi2 = np.broadcast_to(np.asarray(ip.ipi, np.float32), (nloc,))
@@ -330,19 +349,30 @@ class _HostSlots:
         its primary already returned, so a naturally-completed hedge
         UPGRADES the stored result (deeper search at a raised target)
         and a truncated hedge is dropped — either way the query still
-        has exactly one result."""
+        has exactly one result. An upgrade additionally requires the
+        hedge's admission epoch to match the stored result's epoch: a
+        hot-swap between the primary's harvest and the hedge's means
+        the pair searched two different index versions, and replacing
+        one with the other would attribute a single hedge_winner to two
+        versions — such a hedge is dropped (hedge_epoch_dropped)."""
         count = 0
         for s in np.nonzero(mask)[0]:
             qid = int(self.slot_query[s])
             if self.results[qid] is not None:
                 # the qid already returned: only legitimate for a hedge
                 # pair — the hedge arriving second upgrades (unless
-                # truncated), a primary whose hedge won just frees
+                # truncated or from a different epoch), a primary whose
+                # hedge won just frees
                 if self.slot_hedge[s]:
                     if not truncated:
-                        self.results[qid] = (topk_d[s], topk_i[s])
-                        self.stats.ndis_harvested += int(ndis[s])
-                        self.stats.hedge_upgrades += 1
+                        if (int(self.slot_epoch[s])
+                                == self.result_epoch.get(qid)):
+                            self.results[qid] = (topk_d[s], topk_i[s])
+                            self.result_epoch[qid] = int(self.slot_epoch[s])
+                            self.stats.ndis_harvested += int(ndis[s])
+                            self.stats.hedge_upgrades += 1
+                        else:
+                            self.stats.hedge_epoch_dropped += 1
                     self.slot_query[s] = -1
                     self.slot_hedge[s] = False
                     continue
@@ -360,6 +390,7 @@ class _HostSlots:
                 self.slot_hedge[s] = False
                 continue
             self.results[qid] = (topk_d[s], topk_i[s])
+            self.result_epoch[qid] = int(self.slot_epoch[s])
             self.stats.ndis_harvested += int(ndis[s])
             if self.slot_hedge[s]:
                 # hedge finished before (or with) its primary: its
@@ -473,6 +504,15 @@ class DarthServer:
         # A mesh with a "hosts" axis additionally splits the slot dim of
         # the chunk inputs over host groups (make_serve_mesh).
         self.mesh = mesh
+        # Engine/predictor version counter: bumped by every hot-swap
+        # (set_engine / set_predictor, direct or via request_swap).
+        # Slots are stamped with it at admission so harvest can
+        # attribute every result to exactly one version.
+        self.engine_epoch = 0
+        # Staged request_swap payload, applied at the next drained chunk
+        # boundary (or immediately when not serving).
+        self._pending_swap: Optional[Tuple] = None
+        self._serving = False
 
         self._build_chunks()
 
@@ -538,8 +578,11 @@ class DarthServer:
     # -- hot swap (streaming mutations / drift recalibration) --------------
     def set_predictor(self, predictor: RecallPredictor) -> None:
         """Swap a refit recall predictor into the running server (the
-        drift monitor's hot-swap path). Rebuilds the chunk jits."""
+        drift monitor's hot-swap path). Rebuilds the chunk jits and
+        bumps engine_epoch — in-flight slots keep their admission
+        stamp, so a hedge pair spanning the swap can never merge."""
         self.predictor = predictor
+        self.engine_epoch += 1
         self._build_chunks()
 
     def set_engine(self, engine: engines_lib.Engine, *,
@@ -554,7 +597,15 @@ class DarthServer:
         The flag is explicit because name/k/max_steps cannot distinguish
         e.g. two hnsw engines with different ef but an identical
         explicit max_steps — defaulting to reuse would silently keep
-        serving with the old params. The default rebuilds."""
+        serving with the old params. The default rebuilds.
+
+        Safe to call mid-serve (from an on_boundary callback) for DELTA
+        refreshes — ring writes/tombstones leave the base arrays
+        untouched or monotonically masked, and in-flight slots carry a
+        frozen delta snapshot, so they drain correctly against the old
+        view. A swap that REPLACES the base object (a compacted shadow)
+        must instead go through request_swap, which drains the pool
+        first. Bumps engine_epoch either way."""
         if contents_only and (engine.name != self.engine.name
                               or engine.k != self.engine.k
                               or engine.max_steps != self.engine.max_steps):
@@ -564,8 +615,48 @@ class DarthServer:
                 f"max_steps={self.engine.max_steps} -> {engine.name}/"
                 f"k={engine.k}/max_steps={engine.max_steps}")
         self.engine = engine
+        self.engine_epoch += 1
         if not contents_only:
             self._build_chunks()
+
+    def request_swap(self, engine: Optional[engines_lib.Engine] = None,
+                     predictor: Optional[RecallPredictor] = None, *,
+                     contents_only: bool = True) -> None:
+        """Stage an engine and/or predictor hot-swap for the next SAFE
+        chunk boundary — the atomic half of the double-buffered view
+        lifecycle. While the swap is pending the server stops admitting
+        new queries and lets in-flight slots drain against their
+        admission-epoch view (the pool KEEPS STEPPING — this is a
+        drain, not a pause); once no slot is occupied the swap applies
+        atomically between two chunks and admissions resume against the
+        new view, rebuilt state and all. Use this for a compacted
+        shadow base (the base OBJECT is replaced, so shapes may change
+        mid-serve) or a predictor refit; pure delta-contents refreshes
+        don't need the drain — call set_engine(contents_only=True)
+        directly. Outside serve() the swap applies immediately."""
+        if engine is None and predictor is None:
+            raise ValueError("request_swap needs an engine, a predictor "
+                             "or both")
+        if self._pending_swap is not None:
+            raise RuntimeError("a hot-swap is already pending")
+        self._pending_swap = (engine, predictor, contents_only)
+        if not self._serving:
+            self._apply_pending_swap()
+
+    @property
+    def swap_pending(self) -> bool:
+        """True while a request_swap is staged but not yet applied."""
+        return self._pending_swap is not None
+
+    def _apply_pending_swap(self) -> None:
+        """Apply the staged swap (only at a drained boundary, or when
+        not serving)."""
+        engine, predictor, contents_only = self._pending_swap
+        self._pending_swap = None
+        if engine is not None:
+            self.set_engine(engine, contents_only=contents_only)
+        if predictor is not None:
+            self.set_predictor(predictor)
 
     # -- device placement ---------------------------------------------------
     def _put(self, arr: np.ndarray) -> jax.Array:
@@ -582,6 +673,7 @@ class DarthServer:
     def serve(self, queries: np.ndarray, r_targets: np.ndarray,
               max_engine_steps: int = 100_000,
               kill_hosts: Optional[Dict[int, int]] = None,
+              on_boundary=None,
               ) -> Tuple[List[Optional[Tuple[np.ndarray, np.ndarray]]],
                          ServeStats]:
         """Process all queries; returns per-query (dists, ids) + stats.
@@ -592,7 +684,15 @@ class DarthServer:
         at that boundary count completed, in-flight slots are harvested
         (partial top-k, counted as truncated) so every admitted query
         still returns exactly once, and its remaining queue is
-        abandoned (those results stay None)."""
+        abandoned (those results stay None).
+
+        `on_boundary(server)` is invoked once per chunk boundary,
+        between harvest and refill — the hook where streaming mutations
+        push delta refreshes (set_engine contents_only), background
+        compaction runs its budgeted ticks (MutableIndex.compact_tick),
+        and finished shadows are staged for the drained atomic swap
+        (request_swap). It runs on the host while the devices idle at
+        the sync point, so its budget is one tick's worth of work."""
         from repro.core import api as api_lib
 
         queries = np.asarray(queries, np.float32)
@@ -609,14 +709,24 @@ class DarthServer:
         ctx = (meshctx.use_mesh(self.mesh) if self.mesh is not None
                else contextlib.nullcontext())
         with ctx:
-            return self._serve(queries, r_targets, max_engine_steps,
-                               kill_hosts or {})
+            self._serving = True
+            try:
+                return self._serve(queries, r_targets, max_engine_steps,
+                                   kill_hosts or {}, on_boundary)
+            finally:
+                self._serving = False
 
     def _serve(self, queries: np.ndarray, r_targets: np.ndarray,
                max_engine_steps: int, kill_hosts: Dict[int, int],
+               on_boundary=None,
                ) -> Tuple[List[Optional[Tuple[np.ndarray, np.ndarray]]],
                           ServeStats]:
         import time
+
+        # a swap left pending by a previous serve call (budget ran out
+        # mid-drain): the pool is empty now, apply before admitting
+        if self._pending_swap is not None:
+            self._apply_pending_swap()
 
         n, d = queries.shape
         b = self.num_slots
@@ -681,7 +791,8 @@ class DarthServer:
                               r_pred=None if r_pred is None else r_pred[sl])
 
         # initial fill: every host admits into all of its slots
-        fills = [hl.fill(np.arange(sph), step=0) for hl in hostslots]
+        fills = [hl.fill(np.arange(sph), step=0, epoch=self.engine_epoch)
+                 for hl in hostslots]
         qb = np.concatenate([f[1] for f in fills])
         rt, ipi, mpi = gather_inputs()
         st = self._init_chunk(self.engine.index, self._put(qb),
@@ -735,6 +846,22 @@ class DarthServer:
                     if fin_local.any():
                         harvest_host(hl, fin_local, arrays)
                         changed = True
+            # chunk boundary: mutation / compaction hook, then the
+            # drained atomic swap — the pool is retargeted only when NO
+            # slot is in flight, so every admitted query runs start to
+            # finish against one index version (its admission epoch)
+            if on_boundary is not None:
+                on_boundary(self)
+            if (self._pending_swap is not None
+                    and not any(hl.occupied.any() for hl in hostslots)):
+                self._apply_pending_swap()
+                stats.swaps += 1
+                # chunk state was built against the OLD index (shapes
+                # may differ — e.g. HNSW visited rows grow at
+                # compaction); force a full init rebuild at the refill
+                st = None
+                changed = False
+                occupied = occupied_global()
             # per-host refill — unless the step budget is already
             # exhausted: a query spliced in now would run zero steps
             # and be harvested below as init-state junk (ids -1)
@@ -743,7 +870,11 @@ class DarthServer:
             # a no-op scan on boundaries where nothing finished; with
             # rebalance/hedging enabled idle capacity can also appear
             # between harvests, so the refill runs every boundary.)
-            if stats.engine_steps < max_engine_steps:
+            # While a swap is pending, admissions pause: already-running
+            # slots drain against their pinned epoch, new queries wait
+            # for the new index.
+            if (stats.engine_steps < max_engine_steps
+                    and self._pending_swap is None):
                 if self.tiers is not None and self.tiers.rebalance:
                     self._rebalance(hostslots)
                 hedging = self.tiers is not None and self.tiers.hedge
@@ -755,7 +886,8 @@ class DarthServer:
                     free = np.nonzero(~hl.occupied)[0]
                     if free.size == 0:
                         continue
-                    m_loc, q_loc = hl.fill(free, step=stats.engine_steps)
+                    m_loc, q_loc = hl.fill(free, step=stats.engine_steps,
+                                           epoch=self.engine_epoch)
                     if m_loc.any():
                         hl.stats.refills += 1
                         mask[hl.lo:hl.hi] = m_loc
@@ -767,8 +899,18 @@ class DarthServer:
                                              self._put(qb2),
                                              self._put(ipi),
                                              self._put(mpi))
-                    st = self._splice(self._put(mask), fresh, st)
+                    # after a drained swap st is None (old chunk state
+                    # discarded): the pool is empty, so the fresh init
+                    # IS the chunk state — no splice needed
+                    st = (fresh if st is None
+                          else self._splice(self._put(mask), fresh, st))
                     changed = True
+            if st is None:
+                # a swap drained the pool and the refill admitted
+                # nothing (budget exhausted, or the only pending
+                # queries sit on dead hosts): there is no chunk state
+                # left to step — exit; unadmitted queries stay None
+                break
             if changed:
                 # deactivate empty (and dead-host) slots
                 occupied = occupied_global()
@@ -804,6 +946,7 @@ class DarthServer:
             stats.degraded += hl.stats.degraded
             stats.hedged += hl.stats.hedged
             stats.hedge_upgrades += hl.stats.hedge_upgrades
+            stats.hedge_epoch_dropped += hl.stats.hedge_epoch_dropped
         if chunk_ms:
             stats.chunk_ms_p50 = float(np.percentile(chunk_ms, 50))
             stats.chunk_ms_p99 = float(np.percentile(chunk_ms, 99))

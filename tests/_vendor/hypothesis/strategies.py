@@ -42,4 +42,22 @@ def booleans() -> SearchStrategy:
     return SearchStrategy(False, True, lambda rng: rng.random() < 0.5)
 
 
-__all__ = ["SearchStrategy", "integers", "floats", "booleans"]
+def sampled_from(elements) -> SearchStrategy:
+    seq = list(elements)
+    return SearchStrategy(seq[0], seq[-1], lambda rng: rng.choice(seq))
+
+
+def lists(element: SearchStrategy, *, min_size: int = 0,
+          max_size: int = 10) -> SearchStrategy:
+    # endpoints: shortest list of lo-elements, longest of hi-elements;
+    # sampled examples draw length then elements from the child strategy
+    def sample(rng: random.Random):
+        n = rng.randint(min_size, max_size)
+        return [element._sample(rng) for _ in range(n)]
+
+    return SearchStrategy([element._lo] * min_size,
+                          [element._hi] * max_size, sample)
+
+
+__all__ = ["SearchStrategy", "integers", "floats", "booleans",
+           "sampled_from", "lists"]

@@ -105,3 +105,68 @@ def test_ivf_sq8_quantized(clustered_vectors):
     _, ii, st = d.search(q, 0.9)
     rec = float(flat.recall_at_k(ii, gt_i).mean())
     assert rec >= 0.85, rec
+
+
+def test_pool_prune_matches_legacy_inline_block():
+    """Exact parity for the extracted candidate-pool sort/prune helper:
+    the same sort+mask+RobustPrune sequence that build() and
+    insert_nodes carried as duplicated inline copies, replayed here
+    verbatim, must match hnsw._pool_prune bit-for-bit — including self
+    hits, -1 pads, and all-invalid rows."""
+    import jax.numpy as jnp2
+
+    rng = np.random.default_rng(7)
+    n, b, c, m = 200, 16, 24, 8
+    x = rng.normal(size=(n, 8)).astype(np.float32)
+    owners = rng.choice(n, size=b, replace=False).astype(np.int64)
+    cand_i = rng.integers(-1, n, size=(b, c)).astype(np.int32)
+    cand_i[:, 0] = owners                    # guaranteed self-hits
+    cand_i[0] = -1                           # an all-invalid row
+    cand_d = ((x[np.maximum(cand_i, 0)]
+               - x[owners, None, :]) ** 2).sum(2).astype(np.float32)
+
+    # the legacy inline block, verbatim
+    cd = np.where((cand_i == owners[:, None]) | (cand_i < 0), np.inf,
+                  cand_d)
+    ord_ = np.argsort(cd, axis=1, kind="stable")
+    ci_s = np.where(np.take_along_axis(cd, ord_, 1) < np.inf,
+                    np.take_along_axis(cand_i, ord_, 1), -1)
+    cd_s = np.take_along_axis(cd, ord_, axis=1)
+    pd = hnsw._pairwise_sq(jnp2.asarray(x[np.maximum(ci_s, 0)]))
+    legacy = np.asarray(hnsw._robust_prune(
+        jnp2.asarray(ci_s), jnp2.asarray(cd_s), pd, m, 1.2 ** 2))
+
+    got = hnsw._pool_prune(x, owners, cand_d, cand_i, m, 1.2 ** 2)
+    np.testing.assert_array_equal(got, legacy)
+    assert (got[0] == -1).all()              # all-invalid row -> all pad
+
+
+def test_hnsw_build_deterministic_after_prune_refactor(clustered_vectors):
+    """Built graphs are a pure function of (data, params, seed): two
+    builds through the shared _pool_prune path are identical, and the
+    streaming insert path lands every new node with forward edges."""
+    x = clustered_vectors.base[:1500]
+    g1 = hnsw.build(x, m=8, passes=1, ef_construction=32, seed=0)
+    g2 = hnsw.build(x, m=8, passes=1, ef_construction=32, seed=0)
+    np.testing.assert_array_equal(np.asarray(g1.neighbors),
+                                  np.asarray(g2.neighbors))
+    np.testing.assert_array_equal(np.asarray(g1.route_ids),
+                                  np.asarray(g2.route_ids))
+
+    # streaming insert: grow the arrays (the caller's job — compaction
+    # does the same), then link the new rows through the shared helper
+    import dataclasses
+    new = clustered_vectors.base[1500:1600]
+    grown = dataclasses.replace(
+        g1,
+        vectors=jnp.concatenate([g1.vectors, jnp.asarray(new)]),
+        sqnorm=jnp.concatenate([g1.sqnorm,
+                                jnp.asarray((new ** 2).sum(1))]),
+        neighbors=jnp.concatenate(
+            [g1.neighbors,
+             jnp.full((100, g1.degree), -1, jnp.int32)]))
+    linked = hnsw.insert_nodes(grown, np.arange(1500, 1600),
+                               ef_construction=32)
+    nbr = np.asarray(linked.neighbors)
+    assert nbr.shape[0] == 1600
+    assert (nbr[1500:1600] >= 0).any(axis=1).all()

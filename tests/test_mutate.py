@@ -94,6 +94,39 @@ def test_ring_reuse_never_overwrites_live_slots(small_ds):
     assert mut.num_delta == 4
 
 
+def test_delete_of_just_inserted_id_across_wrap(small_ds):
+    """Audit regression (delete-of-just-inserted-id): deleting an id in
+    the same tick it was inserted — after the cursor has wrapped and
+    the insert reused a tombstoned slot — must keep the host live-count,
+    the device live_count and the slot maps agreed, and the freed slot
+    must be reusable without overwriting any live slot."""
+    index = ivf.build(small_ds.base[:500], nlist=8, seed=0)
+    mut = mutate.MutableIndex(index, capacity=4)
+    a = mut.insert(small_ds.queries[:3])       # slots 0,1,2; cursor -> 3
+    mut.delete([int(a[0]), int(a[1])])         # slots 0,1 tombstoned
+    b = mut.insert(small_ds.queries[3:6])      # wraps: slots 3, 0, 1
+    mut.delete([int(b[2])])                    # delete the JUST-inserted id
+    assert mut.num_delta == 3
+    assert int(mutate.delta.live_count(mut.delta)) == 3
+    assert mut.num_live == 500 + 6 - 3
+    # the freed slot is reused; no live slot is overwritten
+    (c,) = mut.insert(small_ds.queries[6:7])
+    live = set(np.asarray(mut.delta.ids).tolist()) - {-1}
+    assert live == {int(a[2]), int(b[0]), int(b[1]), int(c)}
+    assert mut.num_delta == 4
+    assert int(mutate.delta.live_count(mut.delta)) == 4
+    # slot maps agree with the device ring exactly
+    ids_dev = np.asarray(mut.delta.ids)
+    for i, s in mut._delta_slot.items():
+        assert ids_dev[s] == i
+    # deleted ids never surface through the wrapper
+    meng = engines.mutable_engine(
+        engines.ivf_engine(mut.base, k=4, nprobe=8), mut.delta)
+    ws = darth_search.plain_search(meng, jnp.asarray(small_ds.queries[:8]))
+    found = set(np.asarray(meng.topk_i(ws)).ravel().tolist())
+    assert not (found & {int(a[0]), int(a[1]), int(b[2])})
+
+
 def test_mutable_engine_requires_capacity_ge_k(small_ds):
     index = ivf.build(small_ds.base[:500], nlist=8, seed=0)
     eng = engines.ivf_engine(index, k=10, nprobe=4)

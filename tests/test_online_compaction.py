@@ -1,0 +1,305 @@
+"""Double-buffered compaction lifecycle: background incremental rebuild
+(begin/tick/swap) vs the synchronous compact(), mutations landing while
+the rebuild is in flight, and the DarthServer drained atomic swap —
+in-flight chunks keep stepping the active view, the shadow installs at
+an empty-pool boundary, and every result is attributable to exactly one
+index version."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import mutate
+from repro.core import darth_search, engines
+from repro.data import vectors
+from repro.index import hnsw, ivf
+
+
+@pytest.fixture(scope="module")
+def small_ds():
+    return vectors.make_dataset(n=2000, d=16, num_learn=128,
+                                num_queries=64, clusters=16,
+                                cluster_std=1.0, seed=0)
+
+
+def _twins(small_ds, kind):
+    if kind == "ivf":
+        index = ivf.build(small_ds.base, nlist=16, seed=0)
+    else:
+        index = hnsw.build(small_ds.base, m=8, passes=1,
+                           ef_construction=32, seed=0)
+    a = mutate.MutableIndex(index, capacity=512)
+    b = mutate.MutableIndex(index, capacity=512)
+    events = vectors.mutation_stream(small_ds, insert_pct=0.2,
+                                     delete_pct=0.1, drift=0.3,
+                                     steps=4, seed=3)
+    a.apply(events)
+    b.apply(events)
+    return a, b
+
+
+_FIELDS = {"ivf": ("centroids", "bucket_vecs", "bucket_ids",
+                   "bucket_sqnorm"),
+           "hnsw": ("vectors", "neighbors", "sqnorm", "entry",
+                    "route_ids")}
+
+
+def _assert_base_equal(x, y, kind):
+    for f in _FIELDS[kind]:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(x.base, f)), np.asarray(getattr(y.base, f)),
+            err_msg=f"base.{f} diverged")
+
+
+@pytest.mark.parametrize("kind", ["ivf", "hnsw"])
+def test_background_rebuild_equals_sync_compact(small_ds, kind):
+    """Ticking the generator at boundaries and swapping produces the
+    bit-identical base that the synchronous compact() does — they drain
+    the same generator, so there is no second code path to diverge."""
+    sync, bg = _twins(small_ds, kind)
+    sync.compact()
+
+    job = bg.begin_compaction()
+    assert bg.compacting
+    ticks = 0
+    while not bg.compact_tick():
+        ticks += 1
+    assert ticks >= 3          # genuinely incremental, not one big step
+    assert job.done
+    bg.swap_compaction()
+    assert not bg.compacting
+
+    _assert_base_equal(sync, bg, kind)
+    assert bg.num_delta == 0 and sync.num_delta == 0
+    np.testing.assert_array_equal(np.asarray(sync.delta.ids),
+                                  np.asarray(bg.delta.ids))
+    assert bg.num_live == sync.num_live
+    assert bg.version > 0
+
+
+def test_compaction_job_api_contract(small_ds):
+    index = ivf.build(small_ds.base[:500], nlist=8, seed=0)
+    mut = mutate.MutableIndex(index, capacity=64)
+    mut.insert(small_ds.queries[:8])
+    with pytest.raises(RuntimeError, match="no compaction"):
+        mut.compact_tick()
+    with pytest.raises(RuntimeError, match="no compaction"):
+        mut.swap_compaction()
+    mut.begin_compaction()
+    with pytest.raises(RuntimeError, match="already in progress"):
+        mut.begin_compaction()
+    with pytest.raises(RuntimeError, match="not finished"):
+        mut.swap_compaction()
+    while not mut.compact_tick():
+        pass
+    mut.swap_compaction()
+    assert mut.num_delta == 0
+
+
+@pytest.mark.parametrize("kind", ["ivf", "hnsw"])
+def test_mid_rebuild_delete_is_retombstoned_in_shadow(small_ds, kind):
+    """A delete landing while the rebuild runs hits the ACTIVE view
+    immediately and must be re-applied to the shadow at swap — the
+    folded snapshot predates it."""
+    _, mut = _twins(small_ds, kind)
+    delta_id = int(next(iter(mut._delta_slot)))
+    base_id = 7
+    assert base_id not in set(int(i) for i in mut.deleted_ids)
+
+    mut.begin_compaction()
+    mut.compact_tick()                       # snapshot taken, job running
+    assert mut.delete([base_id, delta_id]) == 2
+    # active view already hides them
+    eng = (engines.ivf_engine(mut.base, k=5, nprobe=16) if kind == "ivf"
+           else engines.hnsw_engine(mut.base, k=5, ef=48))
+    meng = engines.mutable_engine(eng, mut.delta)
+    ws = darth_search.plain_search(meng, jnp.asarray(small_ds.queries))
+    assert not ({base_id, delta_id}
+                & set(np.asarray(meng.topk_i(ws)).ravel().tolist()))
+
+    while not mut.compact_tick():
+        pass
+    mut.swap_compaction()
+    # the swapped-in shadow hides them too
+    if kind == "ivf":
+        bi = np.asarray(mut.base.bucket_ids)
+        stored = set(bi[bi >= 0].tolist())
+        assert base_id not in stored and delta_id not in stored
+    else:
+        sq = np.asarray(mut.base.sqnorm)
+        assert np.isposinf(sq[base_id]) and np.isposinf(sq[delta_id])
+    live_ids, _ = mut.live_vectors()
+    assert base_id not in set(int(i) for i in live_ids)
+    assert delta_id not in set(int(i) for i in live_ids)
+
+
+def test_mid_rebuild_insert_survives_in_ring(small_ds):
+    """Ids inserted after begin_compaction were never snapshotted: they
+    must stay live in the delta ring across the swap, and their slots
+    must NOT be freed with the folded ones."""
+    index = ivf.build(small_ds.base[:500], nlist=8, seed=0)
+    mut = mutate.MutableIndex(index, capacity=64)
+    folded = mut.insert(small_ds.queries[:8])
+    mut.begin_compaction()
+    mut.compact_tick()
+    late = mut.insert(small_ds.queries[8:11])
+    while not mut.compact_tick():
+        pass
+    mut.swap_compaction()
+
+    assert mut.num_delta == 3
+    assert set(int(i) for i in late) == set(int(i) for i in mut._delta_slot)
+    assert int(mutate.delta.live_count(mut.delta)) == 3
+    bi = np.asarray(mut.base.bucket_ids)
+    stored = set(bi[bi >= 0].tolist())
+    assert set(int(i) for i in folded) <= stored
+    assert not (set(int(i) for i in late) & stored)
+    # the late inserts are still found, exactly, through the wrapper
+    meng = engines.mutable_engine(
+        engines.ivf_engine(mut.base, k=5, nprobe=8), mut.delta)
+    ws = darth_search.plain_search(meng, jnp.asarray(small_ds.queries[8:11]))
+    np.testing.assert_array_equal(np.asarray(meng.topk_i(ws))[:, 0], late)
+    # a second, quiescent compaction folds them and resets the ring
+    mut.compact()
+    assert mut.num_delta == 0
+    bi = np.asarray(mut.base.bucket_ids)
+    assert set(int(i) for i in late) <= set(bi[bi >= 0].tolist())
+
+
+# --- drained atomic swap in the serving loop --------------------------------
+
+@pytest.fixture(scope="module")
+def served_mutable(small_ds):
+    from repro.core import api
+
+    ds = small_ds
+    index = ivf.build(ds.base, nlist=16, seed=0)
+    mut = mutate.MutableIndex(index, capacity=512)
+
+    def make_engine(**kw):
+        return engines.mutable_engine(
+            engines.ivf_engine(mut.base, **kw), mut.delta)
+
+    d = api.Darth(make_engine=make_engine,
+                  engine=make_engine(k=10, nprobe=16))
+    d.fit(jnp.asarray(ds.learn), jnp.asarray(ds.base), batch=64)
+    return ds, mut, d
+
+
+def test_drained_swap_mid_serve_matches_no_swap(served_mutable):
+    """request_swap with an identical-contents engine must be invisible
+    to results: admissions pause, the pool drains, the swap applies at
+    an empty boundary, and every query's topk/ndis is unchanged (the
+    per-slot search state never mixes index versions)."""
+    from repro.serve import DarthServer
+
+    ds, mut, d = served_mutable
+    rts = np.full((ds.queries.shape[0],), 0.9, np.float32)
+
+    def run(swap_at):
+        server = DarthServer(d.engine, d.trained.predictor,
+                             d.interval_for_target, num_slots=8,
+                             steps_per_sync=2)
+        seen = {"n": 0}
+
+        def on_boundary(srv):
+            seen["n"] += 1
+            if seen["n"] == swap_at and not srv.swap_pending:
+                srv.request_swap(
+                    mutate.refresh_view(srv.engine, delta=mut.delta),
+                    contents_only=True)
+        results, stats = server.serve(
+            ds.queries, rts,
+            on_boundary=on_boundary if swap_at else None)
+        return results, stats
+
+    plain, st0 = run(0)
+    swapped, st1 = run(2)
+    assert st0.swaps == 0 and st1.swaps == 1
+    assert st1.completed == ds.queries.shape[0]
+    assert st1.ndis_harvested == st0.ndis_harvested
+    for a, b in zip(plain, swapped):
+        assert (a is None) == (b is None)
+        if a is not None:
+            np.testing.assert_array_equal(np.asarray(a[0]),
+                                          np.asarray(b[0]))
+            np.testing.assert_array_equal(np.asarray(a[1]),
+                                          np.asarray(b[1]))
+
+
+def test_swap_requires_engine_or_predictor_and_rejects_double(
+        served_mutable):
+    from repro.serve import DarthServer
+
+    ds, mut, d = served_mutable
+    server = DarthServer(d.engine, d.trained.predictor,
+                         d.interval_for_target, num_slots=8)
+    with pytest.raises(ValueError):
+        server.request_swap()
+    # outside a serve the pool is trivially drained: applies immediately
+    epoch0 = server.engine_epoch
+    server.request_swap(mutate.refresh_view(server.engine,
+                                            delta=mut.delta))
+    assert not server.swap_pending
+    assert server.engine_epoch == epoch0 + 1
+
+
+def test_background_compaction_through_serve_boundaries(served_mutable):
+    """End-to-end tentpole path on one server: mutation events land at
+    boundaries as contents-only refreshes, the rebuild ticks in the
+    background, and the folded base hot-swaps mid-serve — zero full-pool
+    pauses, all queries complete, post-swap state matches a synchronous
+    rebuild of a twin."""
+    from repro.serve import DarthServer
+
+    ds, _, d = served_mutable
+    index = ivf.build(ds.base, nlist=16, seed=0)
+    mut = mutate.MutableIndex(index, capacity=512)
+    twin = mutate.MutableIndex(index, capacity=512)
+    events = vectors.mutation_stream(ds, insert_pct=0.2, delete_pct=0.1,
+                                     drift=0.3, steps=2, seed=3)
+    twin.apply(events)
+    twin.compact()
+
+    eng = engines.mutable_engine(
+        engines.ivf_engine(mut.base, k=10, nprobe=16), mut.delta)
+    server = DarthServer(eng, d.trained.predictor, d.interval_for_target,
+                         num_slots=4, steps_per_sync=2)
+    ev = list(events)
+    state = {"swapped": False}
+
+    def on_boundary(srv):
+        if srv.swap_pending or state["swapped"]:
+            return
+        if ev:
+            e = ev.pop(0)
+            mut.apply([e])
+            srv.set_engine(mutate.refresh_view(
+                srv.engine,
+                base=mut.base if e.kind == "delete" else None,
+                delta=mut.delta), contents_only=True)
+        elif not mut.compacting:
+            mut.begin_compaction()
+        elif mut.compact_tick():
+            mut.swap_compaction()
+            srv.request_swap(engines.mutable_engine(
+                engines.ivf_engine(mut.base, k=10, nprobe=16),
+                mut.delta), contents_only=True)
+            state["swapped"] = True
+
+    rts = np.full((ds.queries.shape[0],), 0.9, np.float32)
+    results, stats = server.serve(ds.queries, rts,
+                                  on_boundary=on_boundary)
+    assert stats.completed == ds.queries.shape[0]
+    assert all(r is not None for r in results)
+    assert state["swapped"] and stats.swaps == 1
+    assert not ev and not mut.compacting
+    _assert_base_equal(mut, twin, "ivf")
+    assert mut.num_delta == 0
+    # a mid-stream result may legally contain an id deleted LATER (it
+    # was live in that result's index version); but once every delete
+    # has landed and the fold swapped in, tombstones never surface
+    results2, stats2 = server.serve(ds.queries, rts)
+    assert stats2.completed == ds.queries.shape[0]
+    dead = set(int(i) for i in mut.deleted_ids)
+    for r in results2:
+        assert not (dead & set(np.asarray(r[1]).ravel().tolist()))

@@ -11,6 +11,11 @@ tests/_vendor when the real package is absent):
     preserve the ring invariants (free-slot-only placement, tombstone
     pad convention, live-count accounting), and merging an EMPTY delta
     into a base top-k is the identity.
+  * mutate.MutableIndex compaction under load — arbitrary interleavings
+    of insert/delete/background-tick/swap keep the ledger coherent: the
+    live set always equals a model-dict oracle, tombstones never surface
+    through the serving wrapper (including deletes landing mid-rebuild),
+    and the post-drain base equals the oracle exactly.
 """
 import numpy as np
 import jax
@@ -285,3 +290,105 @@ def test_overload_admission_never_silently_drops(n, max_queue, shed,
         assert h.admitted == h.completed + h.truncated
         stripe = len(range(h.host, n, hosts))
         assert stripe == h.admitted + h.shed + h.abandoned
+
+
+# ---------------------------------------------------------------------------
+# Compaction under load: insert / delete / tick / swap interleavings
+# ---------------------------------------------------------------------------
+
+def _prop_base():
+    """Shared tiny IVF base for the compaction-under-load property —
+    deletes/compactions REPLACE MutableIndex.base functionally, so the
+    built index object is never mutated and examples can share it."""
+    from repro.index import ivf as ivf_lib
+    rng = np.random.default_rng(11)
+    x = rng.normal(size=(96, 6)).astype(np.float32)
+    return x, ivf_lib.build(x, nlist=4, iters=2, seed=0)
+
+
+_PROP_X, _PROP_INDEX = _prop_base()
+
+
+@settings(deadline=None, max_examples=10)
+@given(ops=st.lists(st.sampled_from(["insert", "delete", "tick", "swap"]),
+                    min_size=4, max_size=28),
+       seed=st.integers(0, 100_000))
+def test_compaction_under_load_preserves_ledger_invariants(ops, seed):
+    """Arbitrary interleavings of insert / delete / background-tick /
+    swap keep the mutable-index ledger coherent:
+
+      * the live set is always exactly (issued - tombstoned) — a
+        model-dict oracle over ids -> vectors, regardless of where each
+        id currently lives (base, shadow-in-flight, or delta ring);
+      * tombstones never surface through the serving wrapper, even for
+        ids deleted WHILE their fold was being rebuilt (the
+        deleted_since re-application at swap);
+      * mid-rebuild inserts survive the swap live in the ring;
+      * a full-probe search through mutable_engine returns the exact
+        nearest neighbor of the live universe (brute-force oracle).
+    """
+    from repro import mutate
+    from repro.core import darth_search, engines
+
+    mut = mutate.MutableIndex(_PROP_INDEX, capacity=32)
+    rng = np.random.default_rng(seed)
+    model = {int(i): _PROP_X[i] for i in range(96)}
+    dead = set()
+    for op in ops:
+        if op == "insert":
+            room = 32 - mut.num_delta
+            if room <= 0:
+                continue
+            m = int(rng.integers(1, min(room, 4) + 1))
+            vecs = rng.normal(size=(m, 6)).astype(np.float32)
+            for j, i in enumerate(mut.insert(vecs)):
+                model[int(i)] = vecs[j]
+        elif op == "delete":
+            if not model:
+                continue
+            kill = rng.choice(sorted(model), size=min(3, len(model)),
+                              replace=False)
+            assert mut.delete(kill) == len(kill)
+            for i in kill:
+                model.pop(int(i))
+                dead.add(int(i))
+        elif op == "tick":
+            if not mut.compacting:
+                mut.begin_compaction()
+            else:
+                mut.compact_tick()
+        elif op == "swap":
+            if mut.compacting and mut._job.done:
+                mut.swap_compaction()
+        # ledger: live set == oracle, tombstones out, delta counted
+        assert mut.num_live == len(model)
+        live_ids, live_vecs = mut.live_vectors()
+        assert set(int(i) for i in live_ids) == set(model)
+        assert not (set(int(i) for i in live_ids) & dead)
+        order = np.argsort(live_ids)
+        np.testing.assert_array_equal(
+            live_vecs[order],
+            np.stack([model[int(i)] for i in np.sort(live_ids)]))
+
+    # drain: finish any in-flight rebuild, then fold the leftovers —
+    # the end state must equal the oracle exactly
+    if mut.compacting:
+        while not mut.compact_tick():
+            pass
+        mut.swap_compaction()
+    if mut.num_delta or len(model) != np.count_nonzero(
+            np.asarray(mut.base.bucket_ids) >= 0):
+        mut.compact()
+    bi = np.asarray(mut.base.bucket_ids)
+    assert set(bi[bi >= 0].tolist()) == set(model)
+    assert mut.num_delta == 0
+
+    if model:
+        meng = engines.mutable_engine(
+            engines.ivf_engine(mut.base, k=1, nprobe=4), mut.delta)
+        probe_id = sorted(model)[int(rng.integers(0, len(model)))]
+        ws = darth_search.plain_search(
+            meng, jnp.asarray(model[probe_id][None, :]))
+        assert int(np.asarray(meng.topk_i(ws))[0, 0]) == probe_id
+        assert not (dead
+                    & set(np.asarray(meng.topk_i(ws)).ravel().tolist()))

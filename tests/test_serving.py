@@ -551,3 +551,83 @@ def test_hedge_harvest_orderings_return_exactly_one_result():
     hl.harvest(np.array([True, False]), d, i, nd, truncated=True, step=2)
     assert results[0] is not None and results[0][1][0] == i[0, 0]
     assert hl.stats.hedge_upgrades == 0 and hl.stats.truncated == 1
+
+
+def test_hedge_across_epoch_swap_never_merges_index_versions():
+    """Regression (hot-swap between hedge launch and harvest): the
+    hedge duplicate was admitted AFTER an engine/predictor swap, so its
+    top-k was computed against a different index version than the
+    primary's stored result. Upgrading would merge two versions into
+    one hedge pair — the cross-epoch hedge must be DROPPED instead
+    (hedge_epoch_dropped), keeping the primary's result. A same-epoch
+    pair (the control) still upgrades."""
+    from repro.serve.engine import _HostSlots
+    from repro.serve import TierConfig
+
+    queries = np.zeros((2, 4), np.float32)
+    tc = TierConfig(hard_quantile=0.0, hard_slot_fraction=1.0, hedge=True)
+    is_hard = np.ones((2,), bool)
+
+    def iv(rt):
+        rt = np.atleast_1d(rt)
+        return intervals.IntervalParams(
+            ipi=np.full(rt.shape, 8.0, np.float32),
+            mpi=np.full(rt.shape, 4.0, np.float32))
+
+    def fresh(hedge_epoch):
+        results = [None, None]
+        hl = _HostSlots(0, 0, 2, [0], queries,
+                        np.full((2,), 0.9, np.float32), iv, results,
+                        tiers=tc, is_hard=is_hard)
+        hl.fill(np.array([0]), step=0, epoch=0)       # primary @ epoch 0
+        hl.fill(np.array([1]), step=1, epoch=hedge_epoch)
+        assert hl.slot_hedge[1] and not hl.slot_hedge[0]
+        return hl, results
+
+    d = np.arange(10, dtype=np.float32).reshape(2, 5)
+    i = np.arange(10, dtype=np.int32).reshape(2, 5)
+    nd = np.array([7, 9])
+
+    # swap between launch and harvest: hedge is epoch 1, primary's
+    # stored result is epoch 0 -> no upgrade, counted as dropped
+    hl, results = fresh(hedge_epoch=1)
+    hl.harvest(np.array([True, False]), d, i, nd, step=2)
+    assert results[0][1][0] == i[0, 0]
+    hl.harvest(np.array([False, True]), d, i, nd, step=4)
+    assert results[0][1][0] == i[0, 0]      # primary's result KEPT
+    assert hl.stats.hedge_epoch_dropped == 1
+    assert hl.stats.hedge_upgrades == 0
+    assert hl.stats.completed == 1 and not hl.occupied.any()
+
+    # control: same epoch -> the usual upgrade
+    hl, results = fresh(hedge_epoch=0)
+    hl.harvest(np.array([True, False]), d, i, nd, step=2)
+    hl.harvest(np.array([False, True]), d, i, nd, step=4)
+    assert results[0][1][0] == i[1, 0]      # upgraded
+    assert hl.stats.hedge_upgrades == 1
+    assert hl.stats.hedge_epoch_dropped == 0
+
+
+def test_hedged_serving_stable_under_per_boundary_epoch_bumps(
+        served_setup):
+    """Hedging + an epoch bump at every chunk boundary (the predictor
+    hot-swap path): every query still returns exactly one result and
+    cross-epoch hedge pairs are dropped, never merged."""
+    from repro.serve import TierConfig
+
+    ds, index, d = served_setup
+    tiers = TierConfig(hard_quantile=0.75, hard_slot_fraction=0.25,
+                       hedge=True)
+    server = DarthServer(d.engine, d.trained.predictor,
+                         d.interval_for_target, num_slots=16,
+                         steps_per_sync=2, tiers=tiers)
+    rts = np.full((200,), 0.9, np.float32)
+
+    def bump(srv):
+        srv.set_predictor(d.trained.predictor)
+
+    results, stats = server.serve(ds.queries, rts, on_boundary=bump)
+    assert stats.completed == 200
+    assert all(r is not None for r in results)
+    # every hedge either upgraded within its epoch or was dropped
+    assert stats.hedged >= stats.hedge_upgrades + stats.hedge_epoch_dropped
