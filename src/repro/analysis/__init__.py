@@ -1,0 +1,31 @@
+"""repro.analysis — a trace-time SPMD lint suite ("shardlint").
+
+Static analysis over the jaxprs / compiled HLO of the repo's registered
+jitted entry points (the DarthServer chunk jits, both sharded engine
+steps, the fused kernels) plus the source tree itself, turning the
+sharding bug classes this repo has actually shipped into CI-gated
+checks:
+
+  replicated-constant      a large array constant baked into a compiled
+                           program (a closure-captured index replicates
+                           onto every device, silently undoing
+                           dist.place_index)
+  unpartitionable-topk     a TopK/sort custom-call fed by a dim-0
+                           all-gather (GSPMD could not partition the
+                           merge, so it gathered the sharded operand)
+  collective-n-independence  per-collective bytes must not scale with
+                           the database size (merges move [B, k], never
+                           index rows)
+  retrace-hazard           one trace per chunk signature across a
+                           serving loop with mixed targets, refills and
+                           contents-only mutations
+  pad-convention           raw -1 / inf pad literals outside
+                           repro.core.padding
+
+Run `python -m repro.analysis --gate` (see docs/static_analysis.md).
+This module stays import-light (no jax) so the CLI can force a device
+count before jax initialises.
+"""
+from repro.analysis.findings import Finding, format_findings
+
+__all__ = ["Finding", "format_findings"]

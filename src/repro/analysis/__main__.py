@@ -1,0 +1,130 @@
+"""CLI: `python -m repro.analysis --gate [--selftest] [--json PATH]`.
+
+Forces a multidevice CPU (XLA_FLAGS) BEFORE jax initialises — the
+sharding passes are vacuous at 1 device — then runs the gate and exits
+non-zero on any finding. --selftest additionally loads the known-bad
+corpus (tests/analysis_corpus) and fails unless every historical bug
+repro is DETECTED, so a pass regression cannot silently turn the gate
+green.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import json
+import os
+import sys
+from typing import List
+
+
+def _force_devices(n: int) -> None:
+    flag = f"--xla_force_host_platform_device_count={n}"
+    prev = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in prev:
+        os.environ["XLA_FLAGS"] = f"{prev} {flag}".strip()
+
+
+def _corpus_dir() -> str:
+    from repro.analysis.runner import SRC_ROOT
+    return os.path.join(os.path.dirname(SRC_ROOT), "tests",
+                        "analysis_corpus")
+
+
+def _load_corpus_module(path: str):
+    name = "analysis_corpus_" + os.path.basename(path)[:-3]
+    spec = importlib.util.spec_from_file_location(name, path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def run_selftest() -> List[str]:
+    """Compile each corpus repro and demand its expected pass fires
+    with a file:line finding inside the corpus file. Returns error
+    strings (empty = all detected)."""
+    import jax
+
+    from repro.analysis import hlo_passes
+
+    detectors = {
+        "replicated-constant": hlo_passes.replicated_constants,
+        "unpartitionable-topk": hlo_passes.unpartitionable_topk,
+    }
+    errors: List[str] = []
+    corpus = _corpus_dir()
+    if not os.path.isdir(corpus):
+        return [f"corpus directory missing: {corpus}"]
+    names = [n for n in sorted(os.listdir(corpus))
+             if n.endswith(".py") and not n.startswith("_")]
+    if not names:
+        return [f"no corpus modules under {corpus}"]
+    for name in names:
+        path = os.path.join(corpus, name)
+        mod = _load_corpus_module(path)
+        if getattr(mod, "MIN_DEVICES", 1) > jax.device_count():
+            print(f"selftest SKIP {name} (needs >= {mod.MIN_DEVICES} "
+                  f"devices)")
+            continue
+        fn, args = mod.build_bad()
+        hlo = fn.lower(*args).compile().as_text()
+        found = detectors[mod.EXPECT_PASS](f"corpus/{name}", hlo)
+        located = [f for f in found
+                   if f.file and os.path.basename(f.file) == name
+                   and f.line]
+        if not found:
+            errors.append(f"{name}: {mod.EXPECT_PASS} did NOT fire on "
+                          f"the known-bad repro")
+        elif not located:
+            errors.append(f"{name}: {mod.EXPECT_PASS} fired but "
+                          f"without a file:line anchor into the repro")
+        else:
+            print(f"selftest ok: {name} -> {located[0].location()}")
+    return errors
+
+
+def main(argv=None) -> int:
+    """Parse args, pin the device count, run gate and/or selftest."""
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="trace-time SPMD lint gate (docs/static_analysis.md)")
+    p.add_argument("--gate", action="store_true",
+                   help="run all passes over the registered entry points")
+    p.add_argument("--selftest", action="store_true",
+                   help="require the known-bad corpus to be detected")
+    p.add_argument("--devices", type=int, default=4,
+                   help="forced CPU device count (before jax init; "
+                        "default 4, no-op if XLA_FLAGS already forces)")
+    p.add_argument("--json", metavar="PATH",
+                   help="also write findings + selftest errors as JSON")
+    args = p.parse_args(argv)
+    if not (args.gate or args.selftest):
+        p.error("nothing to do: pass --gate and/or --selftest")
+
+    if args.devices > 0:
+        _force_devices(args.devices)
+
+    from repro.analysis.findings import format_findings
+    from repro.analysis.runner import run_gate
+
+    findings = run_gate() if args.gate else []
+    selftest_errors = run_selftest() if args.selftest else []
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"findings": [x.to_dict() for x in findings],
+                       "selftest_errors": selftest_errors}, f, indent=2)
+
+    if findings:
+        print(format_findings(findings))
+    for e in selftest_errors:
+        print(f"selftest FAIL: {e}")
+    ok = not findings and not selftest_errors
+    if args.gate:
+        print(f"gate: {len(findings)} finding(s)")
+    if ok:
+        print("analysis gate: OK")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

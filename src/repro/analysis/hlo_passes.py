@@ -1,0 +1,158 @@
+"""Passes 1-3 — compiled-HLO text analysis (pure regex, no jax).
+
+Built on repro.utils.hlo's parsing machinery (shape-bytes, computation
+splitting, trip-count-weighted collective accounting). Each pass takes
+compiled HLO text (`jit(f).lower(*args).compile().as_text()`) and
+returns Findings anchored at the `metadata={source_file= source_line=}`
+XLA carries for every instruction, so a gate failure points at the
+Python line that built the bad op.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.findings import Finding
+from repro.utils.hlo import (COLLECTIVES, _shape_bytes,
+                             _split_computations, collective_bytes)
+
+#: Constants smaller than this are assumed deliberate (iota tables,
+#: interval clamps, gbdt thresholds); a closure-captured index shard is
+#: megabytes. 64 KiB sits two orders of magnitude between the classes.
+CONST_BYTES_THRESHOLD = 64 * 1024
+
+_CONST_RE = re.compile(
+    r"=\s*([a-z0-9]+\[[\d,]*\]\S*)\s+constant\(")
+_META_FILE_RE = re.compile(r'source_file="([^"]+)"')
+_META_LINE_RE = re.compile(r"source_line=(\d+)")
+_DEF_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _source_loc(line: str) -> Tuple[Optional[str], Optional[int]]:
+    fm = _META_FILE_RE.search(line)
+    lm = _META_LINE_RE.search(line)
+    return (fm.group(1) if fm else None,
+            int(lm.group(1)) if lm else None)
+
+
+def replicated_constants(entry: str, hlo: str,
+                         threshold: int = CONST_BYTES_THRESHOLD
+                         ) -> List[Finding]:
+    """Pass 1: array constants above `threshold` baked into the program.
+
+    A jax.Array captured by closure instead of passed as an argument
+    compiles to a `constant(...)` instruction — replicated onto every
+    device, silently undoing dist.place_index (the PR 3 bug class; see
+    the Engine protocol docstring). Everything index-sized must cross
+    the jit boundary as an argument.
+    """
+    out: List[Finding] = []
+    for line in hlo.splitlines():
+        m = _CONST_RE.search(line)
+        if not m:
+            continue
+        nbytes = _shape_bytes(m.group(1))
+        if nbytes < threshold:
+            continue
+        f, ln = _source_loc(line)
+        out.append(Finding(
+            "replicated-constant", entry,
+            f"{m.group(1)} ({nbytes} bytes) baked into the compiled "
+            f"program as a constant — a closure-captured array "
+            f"replicates onto every device; pass it as a jit argument",
+            f, ln))
+    return out
+
+
+def _def_map(lines: List[str]) -> Dict[str, str]:
+    defs: Dict[str, str] = {}
+    for line in lines:
+        m = _DEF_NAME_RE.match(line)
+        if m:
+            defs[m.group(1)] = line
+    return defs
+
+
+def _operands(line: str) -> List[str]:
+    # operand list = everything after the opcode's '('; the leading
+    # `%name = type` is cut off by splitting at the first '('
+    return _OPERAND_RE.findall(line.split("(", 1)[-1])
+
+
+def unpartitionable_topk(entry: str, hlo: str, *, max_hops: int = 6
+                         ) -> List[Finding]:
+    """Pass 2: TopK/sort custom-calls fed by a dim-0 all-gather.
+
+    When GSPMD cannot partition a TopK custom-call whose operand
+    carries a sharded dim, it materialises the full operand with an
+    `all-gather` over the sharded (leading) dim right in front of it —
+    the PR 6 bug class (`pin_merge=False`). Deliberate [B, k] merges
+    gather dim 1 inside the shard_map and never match. The back-walk
+    is bounded to `max_hops` def-use hops within one computation, so a
+    dim-0 gather far upstream of an unrelated sort stays quiet.
+    """
+    out: List[Finding] = []
+    for lines in _split_computations(hlo).values():
+        defs = _def_map(lines)
+        gathers = {name for name, line in defs.items()
+                   if ("all-gather" in line.split("=", 1)[-1][:64]
+                       and "dimensions={0}" in line)}
+        if not gathers:
+            continue
+        for name, line in defs.items():
+            body = line.split("=", 1)[-1]
+            is_topk = 'custom_call_target="TopK"' in body
+            is_sort = re.search(r"\bsort(?:\.\d+)?\(", body) is not None
+            if not (is_topk or is_sort):
+                continue
+            frontier = _operands(line)
+            seen = set(frontier)
+            for _ in range(max_hops):
+                hit = [n for n in frontier if n in gathers]
+                if hit:
+                    f, ln = _source_loc(line)
+                    out.append(Finding(
+                        "unpartitionable-topk", entry,
+                        f"{'TopK custom-call' if is_topk else 'sort'} "
+                        f"fed by a dim-0 all-gather (%{hit[0]}): the "
+                        f"merge's operand carries a sharded dim GSPMD "
+                        f"cannot partition — keep the top-k inside the "
+                        f"shard_map (pin_merge)",
+                        f, ln))
+                    break
+                nxt = []
+                for n in frontier:
+                    for op in _operands(defs.get(n, "")):
+                        if op not in seen:
+                            seen.add(op)
+                            nxt.append(op)
+                frontier = nxt
+                if not frontier:
+                    break
+    return out
+
+
+def collective_n_independence(entry: str, hlo_small: str, hlo_large: str,
+                              *, rel_tol: float = 1e-6) -> List[Finding]:
+    """Pass 3: per-collective bytes must match across two index sizes.
+
+    The sharded search steps move [B, k] candidate merges and [B, M]
+    frontiers across shards — batch- and k-sized, never index-sized.
+    If any collective kind's trip-count-weighted bytes differ between
+    the small and large builds of the same entry, index rows are
+    crossing the interconnect and the scan will not scale out.
+    """
+    small = collective_bytes(hlo_small)
+    large = collective_bytes(hlo_large)
+    out: List[Finding] = []
+    for kind in COLLECTIVES:
+        a, b = small.get(kind, 0.0), large.get(kind, 0.0)
+        if abs(a - b) > rel_tol * max(a, b, 1.0):
+            out.append(Finding(
+                "collective-n-independence", entry,
+                f"{kind} bytes scale with the index size "
+                f"({a:.0f} -> {b:.0f} between the small and large "
+                f"builds): collectives must move candidates, not "
+                f"index rows"))
+    return out

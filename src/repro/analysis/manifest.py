@@ -1,0 +1,281 @@
+"""The registered entry points: every jitted program the gate inspects.
+
+Each builder fabricates a small instance of a REAL code path — the
+fused kernels, both sharded engine steps, the sharded flat search and
+the DarthServer chunk jits — from random data (trace-time analysis
+only needs the program structure, not recall), lowers + compiles it,
+and returns the compiled HLO text per artifact tag. Builders derive
+their mesh from the visible device count, so the same manifest runs
+degraded on the 1-device tier-1 host and fully sharded under the CI
+gate's forced multidevice CPU.
+
+Import cost note: this module imports jax (via the libraries it
+registers) — the CLI only imports it AFTER pinning XLA_FLAGS.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.findings import Finding
+from repro.analysis.registry import SIZES, register
+from repro.core import engines as engines_lib
+from repro.core.intervals import IntervalParams
+from repro.core.padding import pad_dists, pad_ids
+from repro.core.predictor import RecallPredictor
+from repro.dist import collectives as dist_collectives
+from repro.dist import sharding as sharding_lib
+from repro.gbdt import model as gbdt_model
+from repro.index import hnsw as hnsw_lib
+from repro.index import ivf as ivf_lib
+from repro.kernels import ops as kernel_ops
+from repro.launch import mesh as mesh_lib
+from repro.serve.engine import DarthServer
+from repro.utils import meshctx
+
+K = 10          # top-k of every fabricated program
+NPROBE = 8      # IVF probes / HNSW ef-equivalent step budget
+BATCH = 8       # query/slot batch
+
+
+def _hlo(fn, *args, mesh=None, **kw) -> str:
+    ctx = (meshctx.use_mesh(mesh) if mesh is not None
+           else contextlib.nullcontext())
+    with ctx:
+        return fn.lower(*args, **kw).compile().as_text()
+
+
+def _make_ivf(n: int, d: int, *, nlist: int = 32,
+              seed: int = 0) -> ivf_lib.IVFIndex:
+    """Fabricated IVF index: random vectors, random (balanced-ish)
+    bucket assignment through the real pack_buckets layout."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    assign = rng.integers(0, nlist, size=n)
+    bv, bi, bsq, sizes = ivf_lib.pack_buckets(
+        x, x, np.arange(n, dtype=np.int32), assign, nlist)
+    return ivf_lib.IVFIndex(
+        centroids=jnp.asarray(rng.normal(size=(nlist, d)).astype(
+            np.float32)),
+        bucket_vecs=jnp.asarray(bv), bucket_ids=jnp.asarray(bi),
+        bucket_sqnorm=jnp.asarray(bsq), bucket_sizes=jnp.asarray(sizes),
+        scale=jnp.ones((d,), jnp.float32),
+        offset=jnp.zeros((d,), jnp.float32))
+
+
+def _make_hnsw(n: int, d: int, *, m: int = 8,
+               seed: int = 0) -> hnsw_lib.HNSWIndex:
+    """Fabricated HNSW graph: random vectors + random adjacency (graph
+    quality is irrelevant at trace time)."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    nbr = rng.integers(0, n, size=(n, m)).astype(np.int32)
+    return hnsw_lib.HNSWIndex(
+        vectors=jnp.asarray(x),
+        sqnorm=jnp.asarray((x ** 2).sum(axis=1)),
+        neighbors=jnp.asarray(nbr),
+        entry=jnp.asarray(0, jnp.int32),
+        route_ids=jnp.asarray(np.arange(64, dtype=np.int32)))
+
+
+def _queries(d: int, *, b: int = BATCH, seed: int = 1) -> jax.Array:
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+
+
+def _search_mesh():
+    """All visible devices on the 1-D ("model",) search mesh."""
+    return mesh_lib.make_search_mesh(0)
+
+
+def _serve_mesh():
+    """("hosts", "model") serve mesh: 2 host groups when >= 4 devices
+    are visible (the CI gate), else single-host (tier-1)."""
+    dc = jax.device_count()
+    hosts = 2 if dc >= 4 and dc % 2 == 0 else 1
+    return mesh_lib.make_serve_mesh(hosts=hosts), hosts
+
+
+def _interval_for_target(r_t) -> IntervalParams:
+    """Fixed intervals: the gate needs interval plumbing, not tuning."""
+    r_t = np.asarray(r_t, np.float32)
+    return IntervalParams(ipi=np.full(r_t.shape, 24.0, np.float32),
+                          mpi=np.full(r_t.shape, 4.0, np.float32))
+
+
+def _predictor() -> RecallPredictor:
+    """Untrained GBDT (empty params): full inference program, zero fit
+    cost; r_pred stays 0 so fabricated serves drain by engine
+    exhaustion, exercising refill."""
+    return RecallPredictor(params=gbdt_model.empty_params(4, 3))
+
+
+# ---------------------------------------------------------------------------
+# Fused kernels
+# ---------------------------------------------------------------------------
+
+@register("kernels/l2_topk")
+def l2_topk(size: str) -> Dict[str, str]:
+    """The fused flat top-k kernel wrapper (interpret mode on CPU)."""
+    n, d = SIZES[size]
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    return {"l2_topk": _hlo(kernel_ops.l2_topk, _queries(d), x, k=K,
+                            interpret=True)}
+
+
+@register("kernels/bucket_topk")
+def bucket_topk(size: str) -> Dict[str, str]:
+    """The fused IVF probe kernel wrapper (interpret mode on CPU)."""
+    n, d = SIZES[size]
+    cap = n // 32
+    rng = np.random.default_rng(3)
+    vecs = jnp.asarray(rng.normal(size=(BATCH, cap, d)).astype(np.float32))
+    sqn = jnp.sum(vecs ** 2, axis=2)
+    ids = jnp.asarray(rng.integers(0, n, size=(BATCH, cap)).astype(
+        np.int32))
+    return {"bucket_topk": _hlo(
+        kernel_ops.bucket_topk, _queries(d), vecs, sqn, ids,
+        pad_dists((BATCH, K)), pad_ids((BATCH, K)), interpret=True)}
+
+
+# ---------------------------------------------------------------------------
+# Sharded search steps
+# ---------------------------------------------------------------------------
+
+@register("dist/flat_search")
+def flat_search(size: str) -> Dict[str, str]:
+    """Sharded exact flat k-NN over a row-sharded database."""
+    n, d = SIZES[size]
+    mesh = _search_mesh()
+    fn = dist_collectives.make_sharded_flat_search(mesh, K)
+    rng = np.random.default_rng(4)
+    x = jax.device_put(
+        jnp.asarray(rng.normal(size=(n, d)).astype(np.float32)),
+        sharding_lib.database_sharding(mesh, n))
+    return {"search": _hlo(fn, _queries(d), x, mesh=mesh)}
+
+
+@register("dist/ivf_probe_step")
+def ivf_probe_step(size: str) -> Dict[str, str]:
+    """One sharded IVF probe step over a cap-sharded bucket store."""
+    n, d = SIZES[size]
+    mesh = _search_mesh()
+    index = sharding_lib.place_index(_make_ivf(n, d), mesh)
+    eng = engines_lib.sharded_ivf_engine(index, mesh, k=K, nprobe=NPROBE)
+    st = eng.init(index, _queries(d))
+    return {"step": _hlo(eng.step, index, st, mesh=mesh)}
+
+
+@register("dist/hnsw_beam_step")
+def hnsw_beam_step(size: str) -> Dict[str, str]:
+    """One sharded HNSW beam expansion over a row-sharded graph."""
+    n, d = SIZES[size]
+    mesh = _search_mesh()
+    index = sharding_lib.place_index(_make_hnsw(n, d), mesh)
+    step = dist_collectives.make_sharded_beam_step(mesh)
+    st = hnsw_lib.init_state(index, _queries(d), ef=16)
+    return {"step": _hlo(step, index, st, mesh=mesh, k=K)}
+
+
+# ---------------------------------------------------------------------------
+# DarthServer chunk jits
+# ---------------------------------------------------------------------------
+
+def _serve_chunks(kind: str, size: str) -> Dict[str, str]:
+    n, d = SIZES[size]
+    mesh, hosts = _serve_mesh()
+    if kind == "ivf":
+        index = sharding_lib.place_index(_make_ivf(n, d), mesh)
+        eng = engines_lib.sharded_ivf_engine(index, mesh, k=K,
+                                             nprobe=NPROBE)
+    else:
+        index = sharding_lib.place_index(_make_hnsw(n, d), mesh)
+        eng = engines_lib.sharded_hnsw_engine(index, mesh, k=K, ef=16,
+                                              max_steps=32)
+    server = DarthServer(eng, _predictor(), _interval_for_target,
+                         num_slots=BATCH, steps_per_sync=2, mesh=mesh,
+                         hosts=hosts)
+    rt = np.full((BATCH,), 0.9, np.float32)
+    p = _interval_for_target(rt)
+    with meshctx.use_mesh(mesh):
+        q_dev = server._put(np.asarray(_queries(d)))
+        rt_dev = server._put(rt)
+        ipi_dev = server._put(p.ipi)
+        mpi_dev = server._put(p.mpi)
+        # AOT-compile init once, run it to get a REAL chunk state (with
+        # the state sharding serve() actually produces), then compile
+        # the step chunk against that state.
+        init_comp = server._init_chunk.lower(index, q_dev, ipi_dev,
+                                             mpi_dev).compile()
+        st = init_comp(index, q_dev, ipi_dev, mpi_dev)
+        run_comp = server._run_chunk.lower(index, st, rt_dev, ipi_dev,
+                                           mpi_dev).compile()
+    return {"init_chunk": init_comp.as_text(),
+            "run_chunk": run_comp.as_text()}
+
+
+@register("serve/chunks_ivf")
+def serve_chunks_ivf(size: str) -> Dict[str, str]:
+    """DarthServer init/run chunk jits around the sharded IVF engine."""
+    return _serve_chunks("ivf", size)
+
+
+@register("serve/chunks_hnsw")
+def serve_chunks_hnsw(size: str) -> Dict[str, str]:
+    """DarthServer init/run chunk jits around the sharded HNSW engine."""
+    return _serve_chunks("hnsw", size)
+
+
+# ---------------------------------------------------------------------------
+# Pass 4: retrace audit (executable, not lowered)
+# ---------------------------------------------------------------------------
+
+@register("serve/retrace_loop", check=True)
+def retrace_loop() -> List[Finding]:
+    """Serve a mixed workload and assert one trace per chunk signature.
+
+    The loop mixes recall targets, forces refills (3x more queries than
+    slots) and pushes a contents-only engine swap from on_boundary —
+    every input class serve() varies at runtime. A second serve with
+    different target VALUES (same shapes) must also stay on the first
+    trace: weak types or Python scalars leaking into the chunk
+    signatures would show up as extra cache entries here.
+    """
+    n, d = SIZES["small"]
+    index = _make_ivf(n, d)
+    eng = engines_lib.ivf_engine(index, k=K, nprobe=NPROBE)
+    server = DarthServer(eng, _predictor(), _interval_for_target,
+                         num_slots=BATCH, steps_per_sync=2)
+    rng = np.random.default_rng(5)
+    q = rng.normal(size=(3 * BATCH, d)).astype(np.float32)
+    rt = np.tile(np.asarray([0.8, 0.9, 0.95], np.float32),
+                 BATCH)[:3 * BATCH]
+
+    def mutate_once(srv, _done=[]):
+        if not _done:
+            _done.append(True)
+            srv.set_engine(engines_lib.ivf_engine(index, k=K,
+                                                  nprobe=NPROBE),
+                           contents_only=True)
+
+    server.serve(q, rt, on_boundary=mutate_once)
+    server.serve(q[:BATCH], np.full((BATCH,), 0.85, np.float32))
+
+    out: List[Finding] = []
+    for tag, fn, limit in (("run_chunk", server._run_chunk, 1),
+                           ("init_chunk", server._init_chunk, 1),
+                           ("splice", server._splice, 1)):
+        traces = fn._cache_size()
+        if traces > limit:
+            out.append(Finding(
+                "retrace-hazard", "serve/retrace_loop",
+                f"{tag} traced {traces}x across a serving loop with "
+                f"mixed targets, refills and a contents-only engine "
+                f"swap (expected {limit}): a weak type or Python "
+                f"scalar is leaking into the chunk signature"))
+    return out

@@ -1,0 +1,131 @@
+"""Pass 5 — pad-convention lint (AST, no jax).
+
+The repo-wide pad/tombstone convention lives in repro.core.padding
+(PAD_ID = -1, PAD_SQNORM = +inf); before it existed, three hand-rolled
+`jnp.full(..., jnp.inf)` sentinels had drifted to subtly different
+dtypes (strong f32 vs weak float — a retrace hazard AND a merge-dtype
+hazard). This pass flags raw `-1` / `inf` literals used AS PAD VALUES
+inside the modules that share the convention, so every new sentinel
+goes through the dtype-pinned helpers.
+
+Scope: src/repro/{index,mutate,dist} only. kernels/ is deliberately
+out of scope — its in-kernel masking literals are an internal contract
+below the index layout, and routing them through repro.core.padding
+would close the fragile kernels -> core.__init__ -> predictor ->
+kernels import cycle.
+
+Flagged contexts (direct arguments only — `x < np.inf` comparisons and
+arithmetic like `.add(-1)` never match):
+
+  jnp/np.full(shape, -1) / full_like(x, inf)     the fill value
+  jnp.pad(..., constant_values=inf)              the pad value
+  arr.at[idx].set(-1)                            tombstone writes
+  jnp.where(mask, -1, x) / where(mask, x, inf)   pad selection
+
+A literal is `-1` (int, not bool, not -1.0 — float -1 is a legitimate
+recall-prediction sentinel) or a top-level `<mod>.inf` attribute
+(`-jnp.inf` mask floors are NOT flagged: -inf is never a pad value
+here). Waive a deliberate non-pad use with a `# padlint: ok` comment
+on the same or the preceding line.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import List
+
+from repro.analysis.findings import Finding
+
+PASS_NAME = "pad-convention"
+
+#: src/repro subpackages that share the pad convention (see module
+#: docstring for why kernels/ is excluded).
+SCOPE = ("index", "mutate", "dist")
+
+WAIVER = "padlint: ok"
+
+_FILL_FUNCS = {"full", "full_like"}
+
+
+def _is_pad_literal(node: ast.expr) -> str:
+    """'' if not a pad literal, else a short description of it."""
+    if (isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub)
+            and isinstance(node.operand, ast.Constant)):
+        v = node.operand.value
+        if isinstance(v, int) and not isinstance(v, bool) and v == 1:
+            return "-1"
+    if isinstance(node, ast.Attribute) and node.attr == "inf":
+        return "inf"
+    return ""
+
+
+def _basename(func: ast.expr) -> str:
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return ""
+
+
+def _flag_args(call: ast.Call) -> List[ast.expr]:
+    """The argument positions of `call` where a raw literal means "this
+    is a pad value" (see module docstring)."""
+    name = _basename(call.func)
+    if name in _FILL_FUNCS:
+        return call.args[1:2]
+    if name == "pad":
+        return [kw.value for kw in call.keywords
+                if kw.arg == "constant_values"]
+    if name == "set" and isinstance(call.func, ast.Attribute):
+        return list(call.args)
+    if name == "where":
+        return call.args[1:3]
+    return []
+
+
+def lint_source(path: str, text: str) -> List[Finding]:
+    """Lint one module's source text; `path` is only used for reporting
+    and waiver lookup (tests feed synthetic sources directly)."""
+    try:
+        tree = ast.parse(text)
+    except SyntaxError as e:
+        return [Finding(PASS_NAME, "tree", f"unparseable: {e}", path,
+                        e.lineno)]
+    lines = text.splitlines()
+
+    def waived(lineno: int) -> bool:
+        for ln in (lineno - 1, lineno - 2):
+            if 0 <= ln < len(lines) and WAIVER in lines[ln]:
+                return True
+        return False
+
+    out: List[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        for arg in _flag_args(node):
+            lit = _is_pad_literal(arg)
+            if lit and not waived(arg.lineno):
+                out.append(Finding(
+                    PASS_NAME, "tree",
+                    f"raw pad literal {lit} in "
+                    f"{_basename(node.func)}(...) — use repro.core."
+                    f"padding (PAD_ID / PAD_SQNORM / pad_ids / "
+                    f"pad_dists), or waive with `# {WAIVER}`",
+                    path, arg.lineno))
+    return out
+
+
+def lint_tree(src_root: str) -> List[Finding]:
+    """Lint every .py under src_root/repro/{index,mutate,dist}."""
+    out: List[Finding] = []
+    for sub in SCOPE:
+        root = os.path.join(src_root, "repro", sub)
+        for dirpath, _, names in sorted(os.walk(root)):
+            for name in sorted(names):
+                if not name.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, name)
+                with open(path, "r") as f:
+                    out.extend(lint_source(path, f.read()))
+    return out

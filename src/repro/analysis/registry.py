@@ -1,0 +1,67 @@
+"""Entry-point registry: what the HLO passes get to look at.
+
+An entry point is a builder that fabricates a small, self-contained
+instance of one of the repo's jitted programs (an engine step, a fused
+kernel, the DarthServer chunk jits) at a requested size, so the gate
+can lower + compile the REAL code paths without datasets or trained
+models — trace-time analysis only needs the program structure.
+
+Builders register with the @register decorator (repro.analysis.manifest
+holds them all); the runner skips entries whose `min_devices` exceeds
+the visible device count, so the same manifest serves the 1-device
+tier-1 fixture and the forced-multidevice CI gate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+#: size label -> (num index rows, dim). The pair varies N ONLY: pass 3
+#: asserts collective bytes do not scale with the database size. D is
+#: held fixed because one-time init collectives legitimately move
+#: vector-sized (D-scaled) payloads — route/entry resolution — and
+#: that is not the bug class; index rows crossing the interconnect is.
+SIZES: Dict[str, Tuple[int, int]] = {
+    "small": (2048, 16),
+    "large": (8192, 16),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class EntryPoint:
+    """One registered jitted program.
+
+    `build(size)` returns (jitted_fn, args) ready for
+    `jitted_fn.lower(*args)` — built under the entry's own mesh, which
+    the builder derives from the CURRENT visible device count.
+    `check`, when set instead, is an executable pass (the retrace
+    audit) returning Findings directly; such entries skip the HLO
+    passes."""
+    name: str
+    build: Optional[Callable[[str], Tuple[Any, tuple]]] = None
+    check: Optional[Callable[[], List[Any]]] = None
+    min_devices: int = 1
+
+
+_REGISTRY: Dict[str, EntryPoint] = {}
+
+
+def register(name: str, *, min_devices: int = 1, check: bool = False):
+    """Decorator: register a builder (or, with check=True, an
+    executable audit) under `name`."""
+    def deco(fn):
+        if name in _REGISTRY:
+            raise ValueError(f"duplicate entry point {name!r}")
+        _REGISTRY[name] = (EntryPoint(name, check=fn,
+                                      min_devices=min_devices)
+                           if check else
+                           EntryPoint(name, build=fn,
+                                      min_devices=min_devices))
+        return fn
+    return deco
+
+
+def entry_points() -> List[EntryPoint]:
+    """All registered entries (manifest import populates the registry)."""
+    from repro.analysis import manifest  # noqa: F401  (registration)
+    return [_REGISTRY[k] for k in sorted(_REGISTRY)]

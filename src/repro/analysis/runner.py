@@ -1,0 +1,54 @@
+"""Gate runner: padlint over the tree + the HLO/retrace passes over
+every registered entry point.
+
+`run_gate()` is the programmatic entry (the pytest fixture calls it
+in-process at 1 device); `python -m repro.analysis --gate` wraps it
+with device forcing and exit codes.
+"""
+from __future__ import annotations
+
+import os
+from typing import List
+
+from repro.analysis import hlo_passes, padlint
+from repro.analysis.findings import Finding
+from repro.analysis.registry import entry_points
+
+#: src root, derived from this file (src/repro/analysis/runner.py).
+SRC_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+
+def run_entry(ep) -> List[Finding]:
+    """All program-level passes over one registered entry point."""
+    import jax
+
+    if ep.min_devices > jax.device_count():
+        return []
+    if ep.check is not None:
+        return list(ep.check())
+    small = ep.build("small")
+    large = ep.build("large")
+    out: List[Finding] = []
+    for tag, hlo in small.items():
+        name = f"{ep.name}:{tag}"
+        out.extend(hlo_passes.replicated_constants(name, hlo))
+        out.extend(hlo_passes.unpartitionable_topk(name, hlo))
+        if tag in large:
+            out.extend(hlo_passes.collective_n_independence(
+                name, hlo, large[tag]))
+    return out
+
+
+def run_gate(*, tree_only: bool = False) -> List[Finding]:
+    """The full gate: source-tree lint, then every entry point.
+
+    tree_only skips the jax-dependent passes (used by lint tooling
+    that must not initialise a device backend).
+    """
+    findings = padlint.lint_tree(SRC_ROOT)
+    if tree_only:
+        return findings
+    for ep in entry_points():
+        findings.extend(run_entry(ep))
+    return findings

@@ -84,9 +84,13 @@ def sharded_ivf_engine(index: ivf_lib.IVFIndex, mesh, *, k: int, nprobe: int,
     step = dist_collectives.make_sharded_probe_step(
         mesh, use_kernel=use_kernel, interpret=interpret,
         pin_merge=pin_merge)
+    # The init's centroid-ranking top_k is pinned the same way (plain
+    # ivf.init_state inside the server's init chunk would all-gather
+    # the hosts-split slot rows to feed the TopK custom-call).
+    init = dist_collectives.make_sharded_ivf_init(mesh)
     return Engine(
         index=index,
-        init=lambda idx, q: ivf_lib.init_state(idx, q, k=k, nprobe=nprobe),
+        init=lambda idx, q: init(idx, q, k=k, nprobe=nprobe),
         step=step,
         topk_d=lambda s: s.topk_d,
         topk_i=lambda s: s.topk_i,

@@ -1,0 +1,69 @@
+"""The repo-wide shard-pad / tombstone convention, in one place.
+
+Every fixed-shape layout in this codebase — IVF bucket slots, HNSW
+adjacency rows, shard padding (dist.place_index), delta-ring slots and
+tombstones (mutate.delta), candidate merges — marks an empty slot the
+same way:
+
+    vecs 0, ids PAD_ID (-1), sqnorm / distance PAD_SQNORM (+inf)
+
++inf sqnorms can never win a top-k and -1 ids are dropped by every
+consumer (recall, merges, scatters route them out of bounds), so a pad
+slot can never surface in a result set through ANY engine. Before this
+module the two literals were hand-rolled at ~40 call sites with subtly
+different dtypes (f32 vs weak float); the pad-convention lint
+(repro.analysis.padlint) now flags raw ``-1`` / ``inf`` pad literals in
+the contract packages (``index``, ``mutate``, ``dist``) so the
+convention has exactly one definition.
+
+This module is intentionally dependency-free inside ``repro`` (jax/numpy
+only): ``index``, ``mutate`` and ``dist`` import it during the
+``repro.core`` package cycle, and a self-contained module is always safe
+to import from a partially initialized package.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Empty / tombstoned id slot (bucket_ids, neighbors, delta ids, merges).
+PAD_ID = -1
+# Empty / tombstoned sqnorm: +inf can never enter a top-k.
+PAD_SQNORM = jnp.inf
+# Masked candidate distance (same value; named for call-site clarity).
+PAD_DIST = PAD_SQNORM
+
+
+def _pin(dtype, kind) -> np.dtype:
+    """Resolve + assert the dtype class (the satellite-2 pinning: pad
+    sentinels must never be weak-typed or land in the wrong family,
+    which would split the jit cache or round +inf into a finite max)."""
+    dt = np.dtype(dtype)
+    assert np.issubdtype(dt, kind), (
+        f"pad sentinel dtype {dt} is not {kind.__name__}")
+    return dt
+
+
+def pad_ids(shape, dtype=jnp.int32) -> jax.Array:
+    """A strongly-typed integer array full of PAD_ID."""
+    return jnp.full(shape, PAD_ID, _pin(dtype, np.integer))
+
+
+def pad_dists(shape, dtype=jnp.float32) -> jax.Array:
+    """A strongly-typed float array full of PAD_SQNORM (+inf)."""
+    return jnp.full(shape, PAD_SQNORM, _pin(dtype, np.floating))
+
+
+def pad_id_scalar(dtype=jnp.int32) -> jax.Array:
+    """Dtype-pinned PAD_ID scalar for ``.at[...].set()`` tombstones."""
+    return jnp.asarray(PAD_ID, _pin(dtype, np.integer))
+
+
+def pad_sqnorm_scalar(dtype=jnp.float32) -> jax.Array:
+    """Dtype-pinned +inf scalar for ``.at[...].set()`` tombstones."""
+    return jnp.asarray(PAD_SQNORM, _pin(dtype, np.floating))
+
+
+__all__ = ["PAD_ID", "PAD_SQNORM", "PAD_DIST", "pad_ids", "pad_dists",
+           "pad_id_scalar", "pad_sqnorm_scalar"]

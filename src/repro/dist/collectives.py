@@ -39,6 +39,8 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.padding import (PAD_DIST, PAD_ID, PAD_SQNORM, pad_dists,
+                                pad_ids)
 from repro.kernels import ops
 
 SHARD_AXIS = "model"
@@ -79,7 +81,7 @@ def merge_topk(cand_d: jax.Array, cand_i: jax.Array, k: int
     neg, pos = jax.lax.top_k(-cand_d, k)
     d = -neg
     i = jnp.take_along_axis(cand_i, pos, axis=1)
-    return d, jnp.where(jnp.isfinite(d), i, -1)
+    return d, jnp.where(jnp.isfinite(d), i, PAD_ID)
 
 
 def make_sharded_flat_search(mesh: Mesh, k: int, *, axis: str = SHARD_AXIS,
@@ -106,13 +108,13 @@ def make_sharded_flat_search(mesh: Mesh, k: int, *, axis: str = SHARD_AXIS,
                   - 2.0 * qf @ x_loc.astype(jnp.float32).T)
             if d2.shape[1] < k:  # fewer local rows than k: pad candidates
                 d2 = jnp.pad(d2, ((0, 0), (0, k - d2.shape[1])),
-                             constant_values=jnp.inf)
+                             constant_values=PAD_DIST)
             neg, i_loc = jax.lax.top_k(-d2, k)
             d_loc = jnp.maximum(-neg, 0.0)
         rows = x_loc.shape[0]
         base = jax.lax.axis_index(axis) * rows
         i_glob = jnp.where(jnp.isfinite(d_loc) & (i_loc >= 0),
-                           i_loc + base, -1)
+                           i_loc + base, PAD_ID)
         cand_d = jax.lax.all_gather(d_loc, axis, axis=1, tiled=True)
         cand_i = jax.lax.all_gather(i_glob, axis, axis=1, tiled=True)
         return merge_topk(cand_d, cand_i, k)
@@ -131,7 +133,7 @@ def make_sharded_flat_search(mesh: Mesh, k: int, *, axis: str = SHARD_AXIS,
         pad = per_shard * nshards - n
         sqn = jnp.sum(x.astype(jnp.float32) ** 2, axis=1)
         xp = jnp.pad(x, ((0, pad), (0, 0)))
-        sqnp = jnp.pad(sqn, (0, pad), constant_values=jnp.inf)
+        sqnp = jnp.pad(sqn, (0, pad), constant_values=PAD_SQNORM)
         return sharded(q, xp, sqnp)
 
     return search
@@ -186,6 +188,51 @@ def sharded_flat_search(q: jax.Array, x: jax.Array, k: int, mesh: Mesh
 # the shard_map program on every search_sharded invocation.
 _PROBE_CACHE: "collections.OrderedDict[tuple, Callable]" = \
     collections.OrderedDict()
+
+_INIT_CACHE: "collections.OrderedDict[tuple, Callable]" = \
+    collections.OrderedDict()
+
+
+def make_sharded_ivf_init(mesh: Mesh, *, axis: str = SHARD_AXIS
+                          ) -> Callable[..., Any]:
+    """IVF search-state init with the probe-order ranking PINNED.
+
+    ivf.init_state ranks centroids with a jax.lax.top_k over [B, nlist]
+    — an unpartitionable TopK custom-call. Inside the server's init
+    chunk the slot dim B is hosts-split, so the plain init forces GSPMD
+    to all-gather the centroid distances across host groups before the
+    ranking (the same bug class the step merges' pin_merge fixed; the
+    analysis gate's unpartitionable-topk pass caught this one). Running
+    ivf.rank_centroids inside a batch-axis shard_map keeps the ranking
+    on each host group's local slot rows. Bookkeeping and results are
+    bit-identical to ivf.init_state on any mesh; without a hosts axis
+    the shard_map is skipped entirely and this IS ivf.init_state.
+    """
+    from repro.index import ivf as ivf_lib
+
+    key = (_mesh_key(mesh), axis)
+    bh = _batch_axis(mesh)
+
+    def init(index: Any, q: jax.Array, *, k: int, nprobe: int) -> Any:
+        qf = q.astype(jnp.float32)
+        qsq = jnp.sum(qf ** 2, axis=1, keepdims=True)
+        if bh is None:
+            order, first_nn = ivf_lib.rank_centroids(
+                index.centroids, qf, qsq, nprobe)
+        else:
+            rank = shard_map(
+                lambda c, qf_loc, qsq_loc: ivf_lib.rank_centroids(
+                    c, qf_loc, qsq_loc, nprobe),
+                mesh=mesh,
+                in_specs=(P(None, None), P(bh, None), P(bh, None)),
+                out_specs=(P(bh, None), P(bh)),
+                check_rep=False)
+            order, first_nn = rank(index.centroids, qf, qsq)
+        return ivf_lib.fresh_state(qf, qsq, order, first_nn, k)
+
+    return _memoized(_INIT_CACHE, key,
+                     lambda: jax.jit(init,
+                                     static_argnames=("k", "nprobe")))
 
 
 def make_sharded_probe_step(mesh: Mesh, *, axis: str = SHARD_AXIS,
@@ -252,8 +299,8 @@ def make_sharded_probe_step(mesh: Mesh, *, axis: str = SHARD_AXIS,
             sq = sqn[bucket]
             id_ = ids[bucket]
             if use_kernel:
-                run_d = jnp.full((bl, k), jnp.inf, jnp.float32)
-                run_i = jnp.full((bl, k), -1, jnp.int32)
+                run_d = pad_dists((bl, k))
+                run_i = pad_ids((bl, k))
                 d_loc, i_loc, cnt = ops.bucket_probe(
                     q_eff, v, sq, id_, bias, kth, run_d, run_i,
                     interpret=interpret)
@@ -262,18 +309,18 @@ def make_sharded_probe_step(mesh: Mesh, *, axis: str = SHARD_AXIS,
                         - 2.0 * jnp.einsum("bd,bcd->bc", q_eff,
                                            v.astype(jnp.float32))
                         + bias)
-                dist = jnp.where(id_ >= 0, jnp.maximum(dist, 0.0), jnp.inf)
+                dist = jnp.where(id_ >= 0, jnp.maximum(dist, 0.0), PAD_DIST)
                 cnt = jnp.sum(dist < kth, axis=1).astype(jnp.int32)
                 if dist.shape[1] < k:   # tiny shard slice: pad candidates
                     pad = k - dist.shape[1]
                     dist = jnp.pad(dist, ((0, 0), (0, pad)),
-                                   constant_values=jnp.inf)
+                                   constant_values=PAD_DIST)
                     id_ = jnp.pad(id_, ((0, 0), (0, pad)),
-                                  constant_values=-1)
+                                  constant_values=PAD_ID)
                 neg, sel = jax.lax.top_k(-dist, k)
                 d_loc = -neg
                 i_loc = jnp.take_along_axis(id_, sel, axis=1)
-            i_loc = jnp.where(jnp.isfinite(d_loc), i_loc, -1)
+            i_loc = jnp.where(jnp.isfinite(d_loc), i_loc, PAD_ID)
             cand_d = jax.lax.all_gather(d_loc, axis, axis=1, tiled=True)
             cand_i = jax.lax.all_gather(i_loc, axis, axis=1, tiled=True)
             if not pin_merge:
@@ -421,7 +468,7 @@ def make_sharded_beam_step(mesh: Mesh, *, axis: str = SHARD_AXIS,
             vecs = vec_loc[loc]                              # [Bl, M, D]
             dist = (sqn_loc[loc]
                     - 2.0 * jnp.einsum("bd,bmd->bm", q, vecs) + qsq)
-            dist = jnp.where(new, jnp.maximum(dist, 0.0), jnp.inf)
+            dist = jnp.where(new, jnp.maximum(dist, 0.0), PAD_DIST)
             # 3. merge the masked per-shard frontiers
             dist_all = jax.lax.all_gather(dist, axis, axis=1, tiled=True)
             return nbrs, dist_all, vis_loc
@@ -451,5 +498,6 @@ def make_sharded_beam_step(mesh: Mesh, *, axis: str = SHARD_AXIS,
 
 
 __all__ = ["make_sharded_flat_search", "sharded_flat_search",
-           "make_sharded_probe_step", "make_sharded_beam_step",
-           "merge_topk", "shard_count", "SHARD_AXIS", "BATCH_AXIS"]
+           "make_sharded_ivf_init", "make_sharded_probe_step",
+           "make_sharded_beam_step", "merge_topk", "shard_count",
+           "SHARD_AXIS", "BATCH_AXIS"]

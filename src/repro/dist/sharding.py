@@ -26,6 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.padding import PAD_ID, PAD_SQNORM
+
 PyTree = Any
 
 # Row-parallel (output) projections: first of the trailing two dims is
@@ -261,14 +263,14 @@ def database_sharding(mesh: Mesh, n_rows: int) -> NamedSharding:
 # Bucket-store arrays whose cap dim (axis 1) is split across shards.
 # bucket_sizes [nlist] is NOT here: it replicates so the replicated probe
 # bookkeeping (ndis counters) can read true bucket populations directly.
-_CAP_SHARDED_NAMES = {"bucket_vecs": 0.0, "bucket_ids": -1,
-                      "bucket_sqnorm": np.inf}  # name -> cap-pad value
+_CAP_SHARDED_NAMES = {"bucket_vecs": 0.0, "bucket_ids": PAD_ID,
+                      "bucket_sqnorm": PAD_SQNORM}  # name -> cap-pad value
 
 # HNSW graph arrays whose node dim (axis 0) is split across shards.
 # entry / route_ids replicate: routing and frontier bookkeeping stay
 # replicated, only vector rows and adjacency rows live on their shard.
-_ROW_SHARDED_NAMES = {"vectors": 0.0, "neighbors": -1,
-                      "sqnorm": np.inf}  # name -> row-pad value
+_ROW_SHARDED_NAMES = {"vectors": 0.0, "neighbors": PAD_ID,
+                      "sqnorm": PAD_SQNORM}  # name -> row-pad value
 
 
 def place_index(index: Any, mesh: Mesh) -> Any:

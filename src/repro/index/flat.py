@@ -14,6 +14,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.padding import PAD_DIST, pad_dists, pad_ids
+
 
 @functools.partial(jax.jit, static_argnames=("k", "chunk"))
 def search(q: jax.Array, x: jax.Array, k: int,
@@ -27,7 +29,7 @@ def search(q: jax.Array, x: jax.Array, k: int,
     pad = n_chunks * chunk - n
     xp = jnp.pad(x, ((0, pad), (0, 0)))
     xsq = jnp.concatenate([jnp.sum(xp[:n].astype(jnp.float32) ** 2, axis=1),
-                           jnp.full((pad,), jnp.inf, jnp.float32)])
+                           pad_dists((pad,))])
     xc = xp.reshape(n_chunks, chunk, d)
     xsqc = xsq.reshape(n_chunks, chunk)
 
@@ -41,11 +43,10 @@ def search(q: jax.Array, x: jax.Array, k: int,
         neg, pos = jax.lax.top_k(-cand_d, k)
         return (-neg, jnp.take_along_axis(cand_i, pos, axis=1)), None
 
-    init = (jnp.full((b, k), jnp.inf, jnp.float32),
-            jnp.full((b, k), -1, jnp.int32))
+    init = (pad_dists((b, k)), pad_ids((b, k)))
     offs = (jnp.arange(n_chunks, dtype=jnp.int32) * chunk)
     (best_d, best_i), _ = jax.lax.scan(body, init, (xc, xsqc, offs))
-    best_d = jnp.where(best_i >= 0, jnp.maximum(best_d + qsq, 0.0), jnp.inf)
+    best_d = jnp.where(best_i >= 0, jnp.maximum(best_d + qsq, 0.0), PAD_DIST)
     return best_d, best_i
 
 

@@ -32,6 +32,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.padding import PAD_DIST, PAD_ID, pad_dists, pad_ids
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
@@ -76,7 +78,7 @@ def _robust_prune(cand_i: jax.Array, cand_d: jax.Array, pd: jax.Array,
     """
     b, c = cand_i.shape
     alive = cand_i >= 0
-    out = jnp.full((b, m), -1, jnp.int32)
+    out = pad_ids((b, m))
     col = jnp.arange(c)
 
     def body(t, carry):
@@ -86,7 +88,7 @@ def _robust_prune(cand_i: jax.Array, cand_d: jax.Array, pd: jax.Array,
         pick = jnp.argmin(score, axis=1)                       # [B]
         has = jnp.take_along_axis(alive, pick[:, None], 1)[:, 0]
         pick_id = jnp.take_along_axis(cand_i, pick[:, None], 1)[:, 0]
-        out = out.at[:, t].set(jnp.where(has, pick_id, -1))
+        out = out.at[:, t].set(jnp.where(has, pick_id, PAD_ID))
         # Kill candidates dominated by the pick: alpha*d(pick,c) <= d(u,c).
         pd_pick = jnp.take_along_axis(pd, pick[:, None, None], 1)[:, 0, :]
         dominated = alpha * pd_pick <= cand_d
@@ -108,7 +110,7 @@ def _dedup_rows_vec(ids: np.ndarray) -> np.ndarray:
     mask = np.zeros_like(dup)
     np.put_along_axis(mask, order, dup, axis=1)
     out = ids.copy()
-    out[mask] = -1
+    out[mask] = PAD_ID
     return out
 
 
@@ -124,7 +126,7 @@ def _reverse_edges(fwd: np.ndarray, slots: int) -> np.ndarray:
     grp_start = np.r_[True, dst[1:] != dst[:-1]] if len(dst) else np.zeros(0, bool)
     pos = (np.arange(len(dst))
            - np.maximum.accumulate(np.where(grp_start, np.arange(len(dst)), 0)))
-    rev = np.full((n, slots), -1, np.int32)
+    rev = np.full((n, slots), PAD_ID, np.int32)
     keep = pos < slots
     rev[dst[keep], pos[keep]] = src[keep]
     return rev
@@ -139,10 +141,10 @@ def _prune_rows(x: np.ndarray, owners: np.ndarray, merged: np.ndarray,
     build re-prune and the streaming insert/delete repair paths."""
     vi = x[np.maximum(merged, 0)]
     du = ((vi - x[owners, None, :]) ** 2).sum(axis=2).astype(np.float32)
-    du = np.where((merged >= 0) & (merged != owners[:, None]), du, np.inf)
+    du = np.where((merged >= 0) & (merged != owners[:, None]), du, PAD_DIST)
     ord_ = np.argsort(du, axis=1, kind="stable")
     ci_s = np.where(np.take_along_axis(du, ord_, 1) < np.inf,
-                    np.take_along_axis(merged, ord_, 1), -1)
+                    np.take_along_axis(merged, ord_, 1), PAD_ID)
     du_s = np.take_along_axis(du, ord_, axis=1)
     pd = _pairwise_sq(jnp.asarray(x[np.maximum(ci_s, 0)]))
     return np.asarray(_robust_prune(
@@ -159,11 +161,11 @@ def _pool_prune(x: np.ndarray, owners: np.ndarray, cand_d: np.ndarray,
     ids; returns i32[B, m] (-1 padded). Shared by the batch build and
     the streaming insert path — the two were duplicated copies before.
     """
-    cd = np.where((cand_i == owners[:, None]) | (cand_i < 0), np.inf,
+    cd = np.where((cand_i == owners[:, None]) | (cand_i < 0), PAD_DIST,
                   cand_d)
     ord_ = np.argsort(cd, axis=1, kind="stable")
     ci_s = np.where(np.take_along_axis(cd, ord_, 1) < np.inf,
-                    np.take_along_axis(cand_i, ord_, 1), -1)
+                    np.take_along_axis(cand_i, ord_, 1), PAD_ID)
     cd_s = np.take_along_axis(cd, ord_, axis=1)
     pd = _pairwise_sq(jnp.asarray(x[np.maximum(ci_s, 0)]))
     return np.asarray(_robust_prune(
@@ -291,7 +293,7 @@ def insert_nodes_steps(index: HNSWIndex, rows: np.ndarray, *,
         nbr[sel] = fwd
         # Reverse-edge repair: every forward target merges the new node
         # into its own list and re-prunes to degree m.
-        fwd_full = np.full((n, m), -1, np.int32)
+        fwd_full = np.full((n, m), PAD_ID, np.int32)
         fwd_full[sel] = fwd
         rev = _reverse_edges(fwd_full, m)
         targets = np.nonzero((rev >= 0).any(axis=1))[0]
@@ -342,8 +344,11 @@ def init_state(index: HNSWIndex, q: jax.Array, *, ef: int) -> HNSWSearchState:
     e = index.route_ids[r_best]                             # [B]
     ed = jnp.maximum(jnp.take_along_axis(rd, r_best[:, None], 1)[:, 0], 0.0)
     first_nn = jnp.sqrt(ed)
-    cand_d = jnp.full((b, ef), jnp.inf, jnp.float32).at[:, 0].set(ed)
-    cand_i = jnp.full((b, ef), -1, jnp.int32).at[:, 0].set(e)
+    # Frontier sentinels via the shared pad helpers (dtype-pinned: the
+    # three hand-rolled fulls here and in mutate's tombstone writes used
+    # to mix strong f32 with weak floats — see core/padding.py).
+    cand_d = pad_dists((b, ef)).at[:, 0].set(ed)
+    cand_i = pad_ids((b, ef)).at[:, 0].set(e)
     cand_exp = jnp.zeros((b, ef), bool)
     visited = jnp.zeros((b, n), bool).at[jnp.arange(b), e].set(True)
     # The routing scan above really computes R distances per query, so
@@ -370,7 +375,7 @@ def select_expand(s: HNSWSearchState
     definition so the two stay in exact parity. Returns
     (sel_id_safe i32[B], act bool[B], cand_exp bool[B, ef])."""
     b, ef = s.cand_d.shape
-    unexp_d = jnp.where(s.cand_exp | (s.cand_i < 0), jnp.inf, s.cand_d)
+    unexp_d = jnp.where(s.cand_exp | (s.cand_i < 0), PAD_DIST, s.cand_d)
     sel = jnp.argmin(unexp_d, axis=1)                       # [B]
     sel_d = jnp.take_along_axis(unexp_d, sel[:, None], 1)[:, 0]
     # Natural termination: no unexpanded candidate among the best ef.
@@ -451,7 +456,7 @@ def beam_step(index: HNSWIndex, s: HNSWSearchState, *,
     vecs = index.vectors[nbrs_safe]                         # [B, M, D]
     dist = (index.sqnorm[nbrs_safe] - 2.0 * jnp.einsum("bd,bmd->bm", s.q, vecs)
             + s.qsq)
-    dist = jnp.where(new, jnp.maximum(dist, 0.0), jnp.inf)
+    dist = jnp.where(new, jnp.maximum(dist, 0.0), PAD_DIST)
     return merge_expand(s, cand_exp, act, nbrs, dist, visited, k=k)
 
 

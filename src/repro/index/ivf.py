@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.padding import (PAD_DIST, PAD_ID, PAD_SQNORM, pad_dists,
+                                pad_ids)
 from repro.index import kmeans as kmeans_lib
 
 
@@ -100,8 +102,8 @@ def pack_buckets_steps(x_store: np.ndarray, x_deq: np.ndarray,
     sizes = np.bincount(assign, minlength=nlist)
     cap = int(max(8, -(-int(max(sizes.max(), 1)) // cap_round) * cap_round))
     bucket_vecs = np.zeros((nlist, cap, d), x_store.dtype)
-    bucket_ids = np.full((nlist, cap), -1, np.int32)
-    bucket_sqnorm = np.full((nlist, cap), np.inf, np.float32)
+    bucket_ids = np.full((nlist, cap), PAD_ID, np.int32)
+    bucket_sqnorm = np.full((nlist, cap), PAD_SQNORM, np.float32)
     starts = np.concatenate([[0], np.cumsum(sizes)])
     for c0 in range(0, nlist, chunk):
         for c in range(c0, min(nlist, c0 + chunk)):
@@ -169,27 +171,43 @@ class IVFSearchState:
     ninserts: jax.Array     # i32[B] result-set updates so far
 
 
-@functools.partial(jax.jit, static_argnames=("k", "nprobe"))
-def init_state(index: IVFIndex, q: jax.Array, *, k: int,
-               nprobe: int) -> IVFSearchState:
-    b = q.shape[0]
-    qf = q.astype(jnp.float32)
-    qsq = jnp.sum(qf**2, axis=1, keepdims=True)
-    cd = (jnp.sum(index.centroids**2, axis=1)[None, :]
-          - 2.0 * qf @ index.centroids.T)                      # [B, nlist]
+def rank_centroids(centroids: jax.Array, qf: jax.Array, qsq: jax.Array,
+                   nprobe: int) -> Tuple[jax.Array, jax.Array]:
+    """Rank the nprobe closest centroids per query; also returns the
+    first-NN distance feature. Shared by init_state and the sharded
+    init (dist.collectives pins this top_k inside a batch-axis
+    shard_map on a hosts mesh — one definition keeps them in parity)."""
+    cd = (jnp.sum(centroids**2, axis=1)[None, :]
+          - 2.0 * qf @ centroids.T)                            # [B, nlist]
     neg, order = jax.lax.top_k(-cd, nprobe)
     first_nn = jnp.sqrt(jnp.maximum(-neg[:, 0] + qsq[:, 0], 0.0))
+    return order.astype(jnp.int32), first_nn
+
+
+def fresh_state(qf: jax.Array, qsq: jax.Array, order: jax.Array,
+                first_nn: jax.Array, k: int) -> IVFSearchState:
+    """Assemble the start-of-search state around a ranked probe order."""
+    b = qf.shape[0]
     return IVFSearchState(
         q=qf, qsq=qsq,
-        probe_order=order.astype(jnp.int32),
+        probe_order=order,
         first_nn=first_nn,
         probe_pos=jnp.zeros((b,), jnp.int32),
-        topk_d=jnp.full((b, k), jnp.inf, jnp.float32),
-        topk_i=jnp.full((b, k), -1, jnp.int32),
+        topk_d=pad_dists((b, k)),
+        topk_i=pad_ids((b, k)),
         active=jnp.ones((b,), bool),
         ndis=jnp.zeros((b,), jnp.int32),
         ninserts=jnp.zeros((b,), jnp.int32),
     )
+
+
+@functools.partial(jax.jit, static_argnames=("k", "nprobe"))
+def init_state(index: IVFIndex, q: jax.Array, *, k: int,
+               nprobe: int) -> IVFSearchState:
+    qf = q.astype(jnp.float32)
+    qsq = jnp.sum(qf**2, axis=1, keepdims=True)
+    order, first_nn = rank_centroids(index.centroids, qf, qsq, nprobe)
+    return fresh_state(qf, qsq, order, first_nn, k)
 
 
 @jax.jit
@@ -213,9 +231,9 @@ def probe_step(index: IVFIndex, s: IVFSearchState) -> IVFSearchState:
     else:
         dots = jnp.einsum("bd,bcd->bc", s.q, vecs)
     dist = sqn - 2.0 * dots + s.qsq
-    dist = jnp.where(ids >= 0, jnp.maximum(dist, 0.0), jnp.inf)
+    dist = jnp.where(ids >= 0, jnp.maximum(dist, 0.0), PAD_DIST)
     # Inactive queries contribute nothing.
-    dist = jnp.where(s.active[:, None], dist, jnp.inf)
+    dist = jnp.where(s.active[:, None], dist, PAD_DIST)
 
     old_kth = s.topk_d[:, -1]
     cand_d = jnp.concatenate([s.topk_d, dist], axis=1)

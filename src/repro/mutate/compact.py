@@ -42,6 +42,7 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.padding import PAD_ID, PAD_SQNORM
 from repro.index import hnsw as hnsw_lib
 from repro.index import ivf as ivf_lib
 from repro.index import kmeans as kmeans_lib
@@ -153,8 +154,8 @@ def compact_hnsw_steps(index: hnsw_lib.HNSWIndex, delta_ids: np.ndarray,
 
     n_new = max(int(next_id), n_old)
     x2 = np.zeros((n_new, d), np.float32)
-    sq2 = np.full((n_new,), np.inf, np.float32)
-    nbr2 = np.full((n_new, m), -1, np.int32)
+    sq2 = np.full((n_new,), PAD_SQNORM, np.float32)
+    nbr2 = np.full((n_new, m), PAD_ID, np.int32)
     x2[:n_old] = x
     sq2[:n_old] = sq
     nbr2[:n_old] = nbr
@@ -179,19 +180,19 @@ def compact_hnsw_steps(index: hnsw_lib.HNSWIndex, delta_ids: np.ndarray,
         # pairwise block is quadratic in that width
         for lo in range(0, affected.size, repair_chunk):
             aff = affected[lo:lo + repair_chunk]
-            own = np.where(ref[aff], -1, nbr2[aff])
+            own = np.where(ref[aff], PAD_ID, nbr2[aff])
             # dead targets' own out-edges, flattened per affected row
             spliced = np.where(ref[aff, :, None],
                                nbr2[np.maximum(nbr2[aff], 0)],
-                               -1).reshape(aff.size, -1)
+                               PAD_ID).reshape(aff.size, -1)
             merged = np.concatenate([own, spliced], axis=1)
             merged = np.where(
                 (merged >= 0) & ~dead_mask[np.maximum(merged, 0)],
-                merged, -1)
+                merged, PAD_ID)
             merged = hnsw_lib._dedup_rows_vec(merged)
             nbr2[aff] = hnsw_lib._prune_rows(x2, aff, merged, m, alpha2)
             yield
-        nbr2[dead_rows] = -1
+        nbr2[dead_rows] = PAD_ID
 
     # 2) routing sample / entry over LIVE, LINKED nodes only (new rows
     #    are not linked yet, so they cannot seed the link searches).

@@ -27,6 +27,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.padding import (PAD_ID, pad_dists, pad_id_scalar, pad_ids,
+                                pad_sqnorm_scalar)
 from repro.kernels import ops
 
 
@@ -50,8 +52,8 @@ def make_delta(capacity: int, dim: int) -> DeltaTier:
     """Empty delta ring (all slots carry the pad convention)."""
     return DeltaTier(
         vecs=jnp.zeros((capacity, dim), jnp.float32),
-        ids=jnp.full((capacity,), -1, jnp.int32),
-        sqnorm=jnp.full((capacity,), jnp.inf, jnp.float32),
+        ids=pad_ids((capacity,)),
+        sqnorm=pad_dists((capacity,)),
     )
 
 
@@ -77,8 +79,8 @@ def tombstone(delta: DeltaTier, slots: jax.Array) -> DeltaTier:
     s = jnp.where(slots >= 0, slots, delta.ids.shape[0])
     return dataclasses.replace(
         delta,
-        ids=delta.ids.at[s].set(-1),
-        sqnorm=delta.sqnorm.at[s].set(jnp.inf),
+        ids=delta.ids.at[s].set(pad_id_scalar(delta.ids.dtype)),
+        sqnorm=delta.sqnorm.at[s].set(pad_sqnorm_scalar(delta.sqnorm.dtype)),
     )
 
 
@@ -100,6 +102,6 @@ def delta_topk(delta: DeltaTier, q: jax.Array, k: int, *,
     d, i_loc = ops.l2_topk(q, delta.vecs, k=k, x_sqnorm=delta.sqnorm,
                            interpret=interpret)
     g = delta.ids[jnp.maximum(i_loc, 0)]
-    g = jnp.where((i_loc >= 0) & jnp.isfinite(d), g, -1)
+    g = jnp.where((i_loc >= 0) & jnp.isfinite(d), g, PAD_ID)
     nins = jnp.sum(jnp.isfinite(d), axis=1).astype(jnp.int32)
     return d, g, live_count(delta), nins

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.padding import PAD_ID, pad_id_scalar, pad_sqnorm_scalar
 from repro.index import hnsw as hnsw_lib
 from repro.index import ivf as ivf_lib
 from repro.mutate import compact as compact_lib
@@ -44,7 +45,7 @@ def _pad_idx(vals) -> np.ndarray:
     """Pad an index vector to a round length with -1 (fixed-shape
     scatters; the -1 rows route out of bounds and are dropped)."""
     vals = np.asarray(vals, np.int64).reshape(-1)
-    out = np.full((_round_up(max(vals.size, 1), 64),), -1, np.int32)
+    out = np.full((_round_up(max(vals.size, 1), 64),), PAD_ID, np.int32)
     out[:vals.size] = vals
     return out
 
@@ -95,8 +96,10 @@ def _mask_ivf_slots(index: ivf_lib.IVFIndex, b_idx: jax.Array,
     b = jnp.where(b_idx >= 0, b_idx, nb)
     return dataclasses.replace(
         index,
-        bucket_ids=index.bucket_ids.at[b, s_idx].set(-1),
-        bucket_sqnorm=index.bucket_sqnorm.at[b, s_idx].set(jnp.inf),
+        bucket_ids=index.bucket_ids.at[b, s_idx].set(
+            pad_id_scalar(index.bucket_ids.dtype)),
+        bucket_sqnorm=index.bucket_sqnorm.at[b, s_idx].set(
+            pad_sqnorm_scalar(index.bucket_sqnorm.dtype)),
         bucket_sizes=index.bucket_sizes.at[b].add(-1))
 
 
@@ -108,7 +111,8 @@ def _mask_hnsw_rows(index: hnsw_lib.HNSWIndex,
     allocated — id = row is an invariant)."""
     r = jnp.where(rows >= 0, rows, index.sqnorm.shape[0])
     return dataclasses.replace(
-        index, sqnorm=index.sqnorm.at[r].set(jnp.inf))
+        index, sqnorm=index.sqnorm.at[r].set(
+            pad_sqnorm_scalar(index.sqnorm.dtype)))
 
 
 class MutableIndex:
@@ -139,8 +143,8 @@ class MutableIndex:
         if self.kind == "ivf":
             bi = np.asarray(jax.device_get(base.bucket_ids))
             self._next_id = int(bi.max()) + 1 if (bi >= 0).any() else 0
-            self._bucket_of = np.full((self._next_id,), -1, np.int32)
-            self._slot_of = np.full((self._next_id,), -1, np.int32)
+            self._bucket_of = np.full((self._next_id,), PAD_ID, np.int32)
+            self._slot_of = np.full((self._next_id,), PAD_ID, np.int32)
             b, s = np.nonzero(bi >= 0)
             self._bucket_of[bi[b, s]] = b
             self._slot_of[bi[b, s]] = s
@@ -150,25 +154,29 @@ class MutableIndex:
     # -- introspection -----------------------------------------------------
     @property
     def dim(self) -> int:
+        """Vector dimensionality of the wrapped base index."""
         return (self.base.dim if self.kind == "ivf"
                 else self.base.vectors.shape[1])
 
     @property
     def num_live(self) -> int:
-        # every id ever issued is live unless tombstoned (ring placement
-        # never overwrites a live slot)
+        """Live vectors: every id ever issued minus the tombstones
+        (ring placement never overwrites a live slot)."""
         return self._next_id - len(self._deleted)
 
     @property
     def num_delta(self) -> int:
+        """Live entries currently in the delta ring (not yet folded)."""
         return self._live_delta
 
     @property
     def deleted_ids(self) -> np.ndarray:
+        """Tombstoned global ids, as an int64 array (unordered)."""
         return np.fromiter(self._deleted, np.int64,
                            count=len(self._deleted))
 
     def view(self) -> MutableIndexView:
+        """Immutable snapshot (base + delta) for engine construction."""
         return MutableIndexView(base=self.base, delta=self.delta)
 
     # -- mutations ---------------------------------------------------------
@@ -204,11 +212,11 @@ class MutableIndex:
         pad = _round_up(m, 64) - m
         self.delta = delta_lib.write(
             self.delta,
-            jnp.asarray(np.concatenate([slots, np.full(pad, -1)])
+            jnp.asarray(np.concatenate([slots, np.full(pad, PAD_ID)])
                         .astype(np.int32)),
             jnp.asarray(np.concatenate([vecs, np.zeros((pad, self.dim),
                                                        np.float32)])),
-            jnp.asarray(np.concatenate([ids, np.full(pad, -1)])
+            jnp.asarray(np.concatenate([ids, np.full(pad, PAD_ID)])
                         .astype(np.int32)))
         self._live_delta += m
         self.version += 1
@@ -236,8 +244,8 @@ class MutableIndex:
                     continue               # folded id moved by compaction?
                 ivf_b.append(int(self._bucket_of[i]))
                 ivf_s.append(int(self._slot_of[i]))
-                self._bucket_of[i] = -1
-                self._slot_of[i] = -1
+                self._bucket_of[i] = PAD_ID
+                self._slot_of[i] = PAD_ID
             else:
                 hnsw_rows.append(i)
             self._deleted.add(i)
@@ -328,7 +336,7 @@ class MutableIndex:
         _, rows = training_lib.ground_truth(
             jnp.asarray(q), jnp.asarray(live_vecs), k, mesh=mesh)
         rows = np.asarray(rows)
-        out = np.where(rows >= 0, live_ids[np.maximum(rows, 0)], -1
+        out = np.where(rows >= 0, live_ids[np.maximum(rows, 0)], PAD_ID
                        ).astype(np.int32)
         self._gt_cache[key] = out
         return out
@@ -436,8 +444,8 @@ class MutableIndex:
         """Rebuild the id -> (bucket, slot) delete maps from the base
         (slots masked at swap time carry id -1 and stay unmapped)."""
         bi = np.asarray(jax.device_get(self.base.bucket_ids))
-        self._bucket_of = np.full((self._next_id,), -1, np.int32)
-        self._slot_of = np.full((self._next_id,), -1, np.int32)
+        self._bucket_of = np.full((self._next_id,), PAD_ID, np.int32)
+        self._slot_of = np.full((self._next_id,), PAD_ID, np.int32)
         b, s = np.nonzero(bi >= 0)
         self._bucket_of[bi[b, s]] = b
         self._slot_of[bi[b, s]] = s

@@ -25,6 +25,7 @@ from typing import Dict, Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.padding import PAD_ID
 from repro.index import flat
 
 
@@ -54,7 +55,9 @@ class RecalibrationMonitor:
         dim = mutable.dim
         self._q = np.zeros((self.capacity, dim), np.float32)
         self._rt = np.zeros((self.capacity,), np.float32)
-        self._ids = np.full((self.capacity, self.k), -1, np.int64)
+        self._ids = np.full((self.capacity, self.k), PAD_ID, np.int64)
+        # -1 is the "never written" epoch sentinel (the mutation-version
+        # stamp), not a pad id — padlint: ok
         self._ver = np.full((self.capacity,), -1, np.int64)
         self._n = 0
         self._cursor = 0

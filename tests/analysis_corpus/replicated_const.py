@@ -1,0 +1,30 @@
+"""Known-bad corpus: the replicated-constant bug class (PR 3).
+
+A ~256 KiB score table is captured by closure instead of crossing the
+jit boundary as an argument, so it compiles into the program as a
+`constant(...)` — replicated onto every device. This is exactly how a
+closure-captured index shard silently undoes dist.place_index; the
+gate's replicated-constant pass must flag it with a file:line into
+this module (python -m repro.analysis --selftest asserts it does).
+"""
+MIN_DEVICES = 1
+EXPECT_PASS = "replicated-constant"
+
+
+def build_bad():
+    """The bad program: (jitted_fn, args) ready to lower."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    # 64 * 1024 f32 = 256 KiB, well above the 64 KiB gate threshold.
+    table = jnp.asarray(np.random.default_rng(0).normal(
+        size=(64, 1024)).astype(np.float32))
+
+    @jax.jit
+    def score(q):
+        # BUG: `table` is a closure capture, not an argument — it bakes
+        # into the compiled HLO as a replicated constant right here.
+        return q @ table.T
+
+    return score, (jnp.zeros((8, 1024), jnp.float32),)
