@@ -4,7 +4,10 @@ The paper's kind is serving, so this is the end-to-end driver (deliverable
 b): a small LM embeds queries (mean-pooled hidden states), the DARTH
 serving engine retrieves context with *per-request declared recall*
 (continuous batching + compaction), and the LM decodes a few tokens
-conditioned on the retrieved ids.
+conditioned on the retrieved ids. The serve runs traced (repro.obs):
+it ends by replaying one request's termination story through
+``repro.obs.explain`` — why that query stopped, at which predicted
+recall, and what it crossed in flight.
 
 Run:  PYTHONPATH=src python examples/rag_serve.py
 """
@@ -19,6 +22,8 @@ from repro.core import api, engines
 from repro.data import vectors
 from repro.index import flat, ivf
 from repro.models import model_zoo
+from repro.obs import Tracer
+from repro.obs.explain import explain
 from repro.serve import DarthServer
 
 
@@ -63,12 +68,20 @@ def main():
     r_targets = np.where(np.arange(n_req) % 2 == 0, 0.8, 0.95
                          ).astype(np.float32)
 
+    tracer = Tracer(label="rag")            # in-memory trace of the serve
     server = DarthServer(darth.engine, darth.trained.predictor,
-                         darth.interval_for_target, num_slots=32)
+                         darth.interval_for_target, num_slots=32,
+                         tracer=tracer)
     t0 = time.time()
     results, stats = server.serve(req_emb, r_targets)
     print(f"served {stats.completed} requests in {time.time()-t0:.1f}s "
           f"({stats.engine_steps} engine steps, {stats.refills} refills)")
+
+    # --- Explain one request: the worst-served query's full story.
+    print("\nwhy did the worst request terminate? (repro.obs.explain)")
+    for line in explain(tracer.last_spans).splitlines():
+        print("  " + line)
+    print()
 
     # recall check vs exact
     gt_d, gt_i = flat.search(jnp.asarray(req_emb), jnp.asarray(corpus), 5)

@@ -34,6 +34,7 @@ from repro.index import hnsw as hnsw_lib
 from repro.index import ivf as ivf_lib
 from repro.kernels import ops as kernel_ops
 from repro.launch import mesh as mesh_lib
+from repro.obs import trace as obs_trace
 from repro.serve.engine import DarthServer
 from repro.utils import meshctx
 
@@ -186,7 +187,8 @@ def hnsw_beam_step(size: str) -> Dict[str, str]:
 # DarthServer chunk jits
 # ---------------------------------------------------------------------------
 
-def _serve_chunks(kind: str, size: str) -> Dict[str, str]:
+def _serve_chunks(kind: str, size: str, *, traced: bool = False
+                  ) -> Dict[str, str]:
     n, d = SIZES[size]
     mesh, hosts = _serve_mesh()
     if kind == "ivf":
@@ -197,9 +199,10 @@ def _serve_chunks(kind: str, size: str) -> Dict[str, str]:
         index = sharding_lib.place_index(_make_hnsw(n, d), mesh)
         eng = engines_lib.sharded_hnsw_engine(index, mesh, k=K, ef=16,
                                               max_steps=32)
+    tracer = obs_trace.Tracer(traj_cap=16) if traced else None
     server = DarthServer(eng, _predictor(), _interval_for_target,
                          num_slots=BATCH, steps_per_sync=2, mesh=mesh,
-                         hosts=hosts)
+                         hosts=hosts, tracer=tracer)
     rt = np.full((BATCH,), 0.9, np.float32)
     p = _interval_for_target(rt)
     with meshctx.use_mesh(mesh):
@@ -212,9 +215,14 @@ def _serve_chunks(kind: str, size: str) -> Dict[str, str]:
         # the step chunk against that state.
         init_comp = server._init_chunk.lower(index, q_dev, ipi_dev,
                                              mpi_dev).compile()
-        st = init_comp(index, q_dev, ipi_dev, mpi_dev)
-        run_comp = server._run_chunk.lower(index, st, rt_dev, ipi_dev,
-                                           mpi_dev).compile()
+        if traced:
+            st, traj = init_comp(index, q_dev, ipi_dev, mpi_dev)
+            run_comp = server._run_chunk.lower(index, st, traj, rt_dev,
+                                               ipi_dev, mpi_dev).compile()
+        else:
+            st = init_comp(index, q_dev, ipi_dev, mpi_dev)
+            run_comp = server._run_chunk.lower(index, st, rt_dev, ipi_dev,
+                                               mpi_dev).compile()
     return {"init_chunk": init_comp.as_text(),
             "run_chunk": run_comp.as_text()}
 
@@ -229,6 +237,15 @@ def serve_chunks_ivf(size: str) -> Dict[str, str]:
 def serve_chunks_hnsw(size: str) -> Dict[str, str]:
     """DarthServer init/run chunk jits around the sharded HNSW engine."""
     return _serve_chunks("hnsw", size)
+
+
+@register("serve/chunks_traced")
+def serve_chunks_traced(size: str) -> Dict[str, str]:
+    """The TRACED chunk jits (repro.obs trajectory ring riding the
+    carry): same programs as serve/chunks_ivf plus the fixed-shape
+    [slots, traj_cap] ring, so the sharding lints check the ring stays
+    split over host groups like the rest of the chunk state."""
+    return _serve_chunks("ivf", size, traced=True)
 
 
 # ---------------------------------------------------------------------------
@@ -256,20 +273,37 @@ def retrace_loop() -> List[Finding]:
     rt = np.tile(np.asarray([0.8, 0.9, 0.95], np.float32),
                  BATCH)[:3 * BATCH]
 
-    def mutate_once(srv, _done=[]):
-        if not _done:
-            _done.append(True)
-            srv.set_engine(engines_lib.ivf_engine(index, k=K,
-                                                  nprobe=NPROBE),
-                           contents_only=True)
+    def make_mutator():
+        done = []
 
-    server.serve(q, rt, on_boundary=mutate_once)
+        def mutate_once(srv):
+            if not done:
+                done.append(True)
+                srv.set_engine(engines_lib.ivf_engine(index, k=K,
+                                                      nprobe=NPROBE),
+                               contents_only=True)
+        return mutate_once
+
+    server.serve(q, rt, on_boundary=make_mutator())
     server.serve(q[:BATCH], np.full((BATCH,), 0.85, np.float32))
+
+    # The TRACED server runs the same mixed workload: the trajectory
+    # ring rides the chunk carry with a fixed shape, so it must not add
+    # cache entries either (a data-dependent ring shape, or the span
+    # bookkeeping leaking host values into the jit signature, would).
+    traced = DarthServer(eng, _predictor(), _interval_for_target,
+                         num_slots=BATCH, steps_per_sync=2,
+                         tracer=obs_trace.Tracer(traj_cap=16))
+    traced.serve(q, rt, on_boundary=make_mutator())
+    traced.serve(q[:BATCH], np.full((BATCH,), 0.85, np.float32))
 
     out: List[Finding] = []
     for tag, fn, limit in (("run_chunk", server._run_chunk, 1),
                            ("init_chunk", server._init_chunk, 1),
-                           ("splice", server._splice, 1)):
+                           ("splice", server._splice, 1),
+                           ("run_chunk[traced]", traced._run_chunk, 1),
+                           ("init_chunk[traced]", traced._init_chunk, 1),
+                           ("splice[traced]", traced._splice, 1)):
         traces = fn._cache_size()
         if traces > limit:
             out.append(Finding(

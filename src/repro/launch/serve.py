@@ -39,6 +39,12 @@ admission under overload; per-tier p50/p99 recall and latency are
 reported after each phase — see docs/architecture.md):
   PYTHONPATH=src python -m repro.launch.serve --tiers --boost 0.05 \
       --hedge --max-queue 64 --overload degrade
+
+Observability (--trace DIR writes every phase's per-query lifecycle
+spans to DIR/trace.jsonl and prints one termination story; --metrics
+exports the Prometheus page + event log — see docs/observability.md):
+  PYTHONPATH=src python -m repro.launch.serve --trace /tmp/tr --metrics
+  python -m repro.obs.explain /tmp/tr/trace.jsonl --qid 7
 """
 from __future__ import annotations
 
@@ -133,6 +139,16 @@ def main() -> None:
     ap.add_argument("--rebalance", action="store_true",
                     help="steal queued queries from backlogged hosts "
                          "into idle hosts at refill boundaries (--tiers)")
+    ap.add_argument("--trace", type=str, default=None, metavar="DIR",
+                    help="per-query tracing (repro.obs): write every "
+                         "serve phase's lifecycle spans to DIR/"
+                         "trace.jsonl and print one explain() story; "
+                         "replay any query later with python -m "
+                         "repro.obs.explain DIR/trace.jsonl --qid N")
+    ap.add_argument("--metrics", action="store_true",
+                    help="aggregate serving metrics (repro.obs) and "
+                         "write the Prometheus exposition page + JSONL "
+                         "event log to --trace DIR (or results/)")
     args = ap.parse_args()
 
     targets = [float(t) for t in args.targets.split(",")]
@@ -215,14 +231,30 @@ def main() -> None:
               + (f", max_queue {args.max_queue} ({args.overload})"
                  if args.max_queue is not None else "")
               + (", rebalance" if args.rebalance else ""))
+    tracer = None
+    if args.trace is not None:
+        import os
+        from repro.obs import Tracer
+        os.makedirs(args.trace, exist_ok=True)
+        trace_path = os.path.join(args.trace, "trace.jsonl")
+        open(trace_path, "w").close()     # fresh file per run
+        tracer = Tracer(path=trace_path)
+        print(f"[serve] tracing -> {trace_path}")
+    registry = None
+    if args.metrics:
+        from repro.obs import MetricsRegistry
+        registry = MetricsRegistry()
     server = DarthServer(darth.engine, darth.trained.predictor,
                          darth.interval_for_target, num_slots=args.slots,
-                         mesh=mesh, hosts=args.hosts, tiers=tiers)
+                         mesh=mesh, hosts=args.hosts, tiers=tiers,
+                         tracer=tracer, metrics=registry)
     monitor = None
     if mutable is not None:
         monitor = mutate.RecalibrationMonitor(
             mutable, darth, targets=targets,
-            threshold=args.recal_threshold, mesh=mesh)
+            threshold=args.recal_threshold, mesh=mesh, metrics=registry)
+        if registry is not None:
+            mutable.attach_metrics(registry)
 
     gt_cache = {}
 
@@ -243,6 +275,8 @@ def main() -> None:
 
     def serve_phase(label: str, on_boundary=None):
         t0 = time.time()
+        if tracer is not None:
+            tracer.label = label       # spans carry the phase name
         results, stats = server.serve(ds.queries, r_targets,
                                       on_boundary=on_boundary)
         dt = time.time() - t0
@@ -321,6 +355,12 @@ def main() -> None:
 
         state = {"swapped": False, "ticks": 0}
 
+        def trace_event(srv, kind: str, **attrs) -> None:
+            """Server-level compaction span, stamped at the boundary."""
+            if srv.tracer is not None:
+                srv.tracer.event(kind, step=srv.boundary_step,
+                                 epoch=srv.engine_epoch, **attrs)
+
         def on_boundary(srv) -> None:
             # one unit of mutation work per boundary; once a swap is
             # staged, do nothing until the pool drains and applies it
@@ -332,13 +372,20 @@ def main() -> None:
                 push_contents(update_base=(ev.kind == "delete"))
             elif not mutable.compacting:
                 mutable.begin_compaction()
+                trace_event(srv, "compact_begin")
             elif mutable.compact_tick():
                 state["ticks"] = mutable.compaction_ticks
+                trace_event(srv, "compact_tick",
+                            tick=mutable.compaction_ticks, done=True)
                 mutable.swap_compaction()
+                trace_event(srv, "compact_swap")
                 eng = build_engine(**engine_kw)
                 srv.request_swap(eng, contents_only=True)
                 darth.engine = eng
                 state["swapped"] = True
+            else:
+                trace_event(srv, "compact_tick",
+                            tick=mutable.compaction_ticks, done=False)
 
         stats = serve_phase("online-mutation", on_boundary=on_boundary)
         if not state["swapped"]:
@@ -394,6 +441,25 @@ def main() -> None:
               f"({time.time()-t0:.1f}s): {mutable.num_live} live vectors, "
               f"delta empty")
         serve_phase("post-compaction")
+
+    if tracer is not None:
+        from repro.obs import explain as explain_lib
+        print(f"[serve] trace: {len(tracer.last_spans)} spans in the "
+              f"last phase; story of its worst-served query:")
+        for line in explain_lib.explain(tracer.last_spans).splitlines():
+            print(f"[serve]   {line}")
+    if registry is not None:
+        import os
+        out_dir = args.trace if args.trace is not None else "results"
+        os.makedirs(out_dir, exist_ok=True)
+        prom = os.path.join(out_dir, "metrics.prom")
+        events_path = os.path.join(out_dir, "events.jsonl")
+        registry.write_prometheus(prom)
+        registry.write_events(events_path, append=False)
+        served = registry.counter("darth_queries_total")
+        print(f"[serve] metrics -> {prom} (+ {events_path}): "
+              f"{int(sum(served.values.values()))} query outcomes, "
+              f"{len(registry.events)} events")
 
     if mesh is not None:
         # HLO collective-traffic report only — compile, don't execute

@@ -140,6 +140,9 @@ class MutableIndex:
         self._delta_slot: dict = {}   # live delta id -> ring slot
         self._slot_id: dict = {}      # ring slot -> id (live or dead)
         self._job: Optional[CompactionJob] = None
+        # optional obs.MetricsRegistry (attach_metrics): compaction
+        # begin/tick/swap land in its event log
+        self.metrics = None
         if self.kind == "ivf":
             bi = np.asarray(jax.device_get(base.bucket_ids))
             self._next_id = int(bi.max()) + 1 if (bi >= 0).any() else 0
@@ -150,6 +153,11 @@ class MutableIndex:
             self._slot_of[bi[b, s]] = s
         else:
             self._next_id = int(base.num_vectors)
+
+    def attach_metrics(self, registry) -> None:
+        """Attach an obs.MetricsRegistry: compaction begin/tick/swap
+        land in its event log from then on (None detaches)."""
+        self.metrics = registry
 
     # -- introspection -----------------------------------------------------
     @property
@@ -376,6 +384,9 @@ class MutableIndex:
                 ef_construction=ef_construction, alpha=alpha,
                 chunk=chunk, seed=seed)
         self._job = CompactionJob(gen, d_ids)
+        if self.metrics is not None:
+            self.metrics.event("compact_begin", version=int(self.version),
+                               folded=len(self._job.folded_ids))
         return self._job
 
     def compact_tick(self) -> bool:
@@ -383,7 +394,11 @@ class MutableIndex:
         returns True once the shadow is ready to swap."""
         if self._job is None:
             raise RuntimeError("no compaction in progress")
-        return self._job.tick()
+        done = self._job.tick()
+        if self.metrics is not None:
+            self.metrics.event("compact_tick", tick=self._job.ticks,
+                               done=done)
+        return done
 
     def swap_compaction(self) -> None:
         """Install the finished shadow as the new base — the host half
@@ -437,8 +452,15 @@ class MutableIndex:
             self._slot_id.clear()
         if self.kind == "ivf":
             self._reindex_ivf()
+        ticks = job.ticks
         self._job = None
         self.version += 1
+        if self.metrics is not None:
+            self.metrics.event("compact_swap", version=int(self.version),
+                               ticks=ticks)
+            self.metrics.counter(
+                "darth_compactions_total",
+                "background compactions swapped in").inc()
 
     def _reindex_ivf(self) -> None:
         """Rebuild the id -> (bucket, slot) delete maps from the base

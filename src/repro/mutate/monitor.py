@@ -44,9 +44,12 @@ class RecalibrationMonitor:
     def __init__(self, mutable, darth, *,
                  targets: Sequence[float] = (0.8, 0.9, 0.95),
                  threshold: float = 0.02, capacity: int = 2048,
-                 mesh=None):
+                 mesh=None, metrics=None):
         self.mutable = mutable
         self.darth = darth
+        # optional obs.MetricsRegistry: drift checks and recalibrations
+        # land in its event log + gauges (docs/observability.md)
+        self.metrics = metrics
         self.targets = tuple(float(t) for t in targets)
         self.threshold = float(threshold)
         self.capacity = int(capacity)
@@ -104,9 +107,19 @@ class RecalibrationMonitor:
             achieved[t] = float(rec[sel].mean())
             counts[t] = int(sel.sum())
             worst = max(worst, t - achieved[t])
-        return DriftReport(achieved=achieved, counts=counts,
-                           worst_gap=worst, num_queries=int(cur.sum()),
-                           drifted=worst > self.threshold)
+        rep = DriftReport(achieved=achieved, counts=counts,
+                          worst_gap=worst, num_queries=int(cur.sum()),
+                          drifted=worst > self.threshold)
+        if self.metrics is not None:
+            self.metrics.event("drift", worst_gap=rep.worst_gap,
+                               num_queries=rep.num_queries,
+                               drifted=rep.drifted,
+                               version=int(self.mutable.version))
+            self.metrics.gauge(
+                "darth_drift_worst_gap",
+                "declared-minus-achieved recall gap at the last drift "
+                "check").set(rep.worst_gap)
+        return rep
 
     # -- recalibration -----------------------------------------------------
     def recalibrate(self, learn_q: np.ndarray, *, server=None,
@@ -119,6 +132,13 @@ class RecalibrationMonitor:
             jnp.asarray(live_vecs),
             ids=live_ids, batch=batch, seed=seed, mesh=self.mesh)
         self.recalibrations += 1
+        if self.metrics is not None:
+            self.metrics.event("recal", recalibrations=self.recalibrations,
+                               version=int(self.mutable.version),
+                               hot_swapped=server is not None)
+            self.metrics.counter(
+                "darth_recalibrations_total",
+                "predictor refits triggered by drift").inc()
         if server is not None:
             server.set_predictor(trained.predictor)
         # Drop the replay ring: its entries were served by the OLD

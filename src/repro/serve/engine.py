@@ -58,9 +58,27 @@ import numpy as np
 from repro.core import darth_search, engines as engines_lib
 from repro.core.intervals import IntervalParams
 from repro.core.predictor import RecallPredictor
+from repro.obs import stats as obs_stats
+from repro.obs import trace as obs_trace
 from repro.utils import meshctx
 
 PyTree = Any
+
+
+@dataclasses.dataclass
+class _ObsArrays:
+    """Per-boundary device fetches the tracer needs at harvest, sliced
+    per host by harvest_host: DARTH's early-stop mask and predictor
+    call counts (termination-reason attribution) plus the trajectory
+    ring with the engine-step count its columns are relative to
+    (traj_base — the step count when the ring's chunk state was last
+    rebuilt from scratch). All fetched at the SAME sync boundary the
+    server already pays for the active mask: tracing adds no device
+    round-trips."""
+    early: Optional[np.ndarray] = None     # bool[nloc]
+    npred: Optional[np.ndarray] = None     # i32[nloc]
+    traj: Optional[np.ndarray] = None      # f32[nloc, traj_cap]
+    traj_base: int = 0
 
 
 def _select_slots(mask: jax.Array, new: PyTree, old: PyTree) -> PyTree:
@@ -163,13 +181,17 @@ class _HostSlots:
     def __init__(self, host: int, lo: int, hi: int, queue: List[int],
                  queries: np.ndarray, r_targets: np.ndarray,
                  interval_for_target, results: List, *,
-                 tiers=None, is_hard: Optional[np.ndarray] = None):
+                 tiers=None, is_hard: Optional[np.ndarray] = None,
+                 tracer: Optional[obs_trace.Tracer] = None,
+                 epoch: int = 0, collect_samples: bool = False):
         self.host = host
         self.lo, self.hi = lo, hi
         self.queries = queries
         self.r_targets = r_targets
         self.interval_for_target = interval_for_target
         self.results = results
+        self.tracer = tracer
+        self.collect_samples = collect_samples
         nloc = hi - lo
         self.slot_query = np.full((nloc,), -1, np.int64)
         self.rt = np.zeros((nloc,), np.float32)
@@ -193,6 +215,7 @@ class _HostSlots:
         # harvest-time SLO samples: (hard, r_pred, latency, truncated)
         self.samples: List[Tuple[bool, float, int, bool]] = []
         self.degraded_ids: List[int] = []
+        self._degraded: set = set()
         if tiers is None:
             self.queue_easy: List[int] = list(queue)
             self.queue_hard: List[int] = []
@@ -215,12 +238,25 @@ class _HostSlots:
                 self.stats.shed_ids = [q for q in queue if q in drop]
                 self.stats.shed = len(self.stats.shed_ids)
                 queue = [q for q in queue if q not in drop]
+                if tracer is not None:
+                    for qid in self.stats.shed_ids:
+                        tracer.terminal(
+                            qid, "shed", host=host, step=0, epoch=epoch,
+                            target=float(self.r_targets[qid]),
+                            tier=self._tier_of(qid))
             else:                           # degrade-to-lower-target
                 for qid in queue[tiers.max_queue:]:
                     if tiers.degrade_target < self.r_targets[qid]:
+                        declared = float(self.r_targets[qid])
                         self.r_targets[qid] = tiers.degrade_target
                         self.stats.degraded += 1
                         self.degraded_ids.append(qid)
+                        self._degraded.add(qid)
+                        if tracer is not None:
+                            tracer.event(
+                                "degrade", qid=qid, host=host, step=0,
+                                epoch=epoch, declared=declared,
+                                degraded_to=float(tiers.degrade_target))
         self.queue_easy = [q for q in queue if not is_hard[q]]
         self.queue_hard = [q for q in queue if is_hard[q]]
 
@@ -233,6 +269,12 @@ class _HostSlots:
     def pending(self) -> int:
         """Queued-but-unadmitted query count (both tiers)."""
         return len(self.queue_easy) + len(self.queue_hard)
+
+    def _tier_of(self, qid: int) -> Optional[str]:
+        """Difficulty-tier label for trace spans (None when untiered)."""
+        if self.tiers is None or self.is_hard is None:
+            return None
+        return "hard" if self.is_hard[qid] else "easy"
 
     def _target_for(self, qid: int) -> float:
         """Effective recall target: declared (possibly degraded at
@@ -298,6 +340,13 @@ class _HostSlots:
             self.slot_hedge[s] = False
             self.admit_step[s] = step
             self.slot_epoch[s] = epoch
+            if self.tracer is not None:
+                self.tracer.event(
+                    "admit", qid=qid, host=self.host, step=step,
+                    epoch=epoch, slot=int(self.lo + s),
+                    target=float(self.r_targets[qid]),
+                    effective_target=float(rt2[s]),
+                    tier=self._tier_of(qid), refill=step > 0)
         if self.tiers is not None and self.tiers.hedge:
             for s, qid in hedges:
                 mask[s] = True
@@ -310,6 +359,13 @@ class _HostSlots:
                 self.admit_step[s] = step
                 self.slot_epoch[s] = epoch
                 self.stats.hedged += 1
+                if self.tracer is not None:
+                    self.tracer.event(
+                        "admit", qid=qid, host=self.host, step=step,
+                        epoch=epoch, slot=int(self.lo + s),
+                        target=float(self.r_targets[qid]),
+                        effective_target=float(rt2[s]),
+                        tier=self._tier_of(qid), hedge=True)
         ip = self.interval_for_target(rt2)
         ipi2 = np.broadcast_to(np.asarray(ip.ipi, np.float32), (nloc,))
         mpi2 = np.broadcast_to(np.asarray(ip.mpi, np.float32), (nloc,))
@@ -337,10 +393,42 @@ class _HostSlots:
         cands.sort()
         return list(zip(free_hard, [qid for _, qid in cands]))
 
+    def _terminal_attrs(self, s: int, qid: int, ndis: np.ndarray,
+                        r_pred: Optional[np.ndarray],
+                        obs: Optional[_ObsArrays], step: int) -> Dict:
+        """Terminal-span payload for local slot ``s`` holding ``qid``:
+        targets, tier, counters and the drained trajectory window."""
+        attrs: Dict[str, Any] = {
+            "target": float(self.r_targets[qid]),
+            "effective_target": float(self.rt[s]),
+            "admit_step": int(self.admit_step[s]),
+            "ndis": int(ndis[s]),
+            "slot": int(self.lo + s),
+        }
+        tier = self._tier_of(qid)
+        if tier is not None:
+            attrs["tier"] = tier
+        if qid in self._degraded:
+            attrs["degraded"] = True
+        if bool(self.slot_hedge[s]):
+            attrs["hedge"] = True
+        if r_pred is not None:
+            attrs["r_pred"] = float(r_pred[s])
+        if obs is not None:
+            if obs.npred is not None:
+                attrs["npred"] = int(obs.npred[s])
+            if obs.traj is not None:
+                attrs["trajectory"] = obs_trace.traj_window(
+                    obs.traj[s], int(self.admit_step[s]), step,
+                    obs.traj_base)
+        return attrs
+
     def harvest(self, mask: np.ndarray, topk_d: np.ndarray,
                 topk_i: np.ndarray, ndis: np.ndarray, *,
                 truncated: bool = False, step: int = 0,
-                r_pred: Optional[np.ndarray] = None) -> int:
+                r_pred: Optional[np.ndarray] = None,
+                reason: Optional[str] = None,
+                obs: Optional[_ObsArrays] = None) -> int:
         """Pull the masked local slots' top-k into results; free the
         slots. The array arguments are the host's SLICE [nloc, ..] of
         the device state. Raises if a slot's query already has a result
@@ -356,6 +444,7 @@ class _HostSlots:
         one with the other would attribute a single hedge_winner to two
         versions — such a hedge is dropped (hedge_epoch_dropped)."""
         count = 0
+        trunc_reason = reason or "budget_truncated"
         for s in np.nonzero(mask)[0]:
             qid = int(self.slot_query[s])
             if self.results[qid] is not None:
@@ -371,14 +460,35 @@ class _HostSlots:
                             self.result_epoch[qid] = int(self.slot_epoch[s])
                             self.stats.ndis_harvested += int(ndis[s])
                             self.stats.hedge_upgrades += 1
+                            if self.tracer is not None:
+                                self.tracer.upgrade_terminal(
+                                    qid, step=step,
+                                    **self._terminal_attrs(
+                                        s, qid, ndis, r_pred, obs, step))
                         else:
                             self.stats.hedge_epoch_dropped += 1
+                            if self.tracer is not None:
+                                self.tracer.event(
+                                    "hedge_drop", qid=qid, host=self.host,
+                                    step=step,
+                                    epoch=int(self.slot_epoch[s]),
+                                    cause="epoch")
+                    elif self.tracer is not None:
+                        self.tracer.event(
+                            "hedge_drop", qid=qid, host=self.host,
+                            step=step, epoch=int(self.slot_epoch[s]),
+                            cause="truncated")
                     self.slot_query[s] = -1
                     self.slot_hedge[s] = False
                     continue
                 if qid in self.hedge_winner:
                     self.hedge_winner.discard(qid)
                     self.slot_query[s] = -1
+                    if self.tracer is not None:
+                        self.tracer.event(
+                            "hedge_primary_freed", qid=qid,
+                            host=self.host, step=step,
+                            epoch=int(self.slot_epoch[s]))
                     continue
                 raise RuntimeError(
                     f"host {self.host}: query {qid} harvested twice")
@@ -388,18 +498,36 @@ class _HostSlots:
                 # harvested in this same truncation sweep
                 self.slot_query[s] = -1
                 self.slot_hedge[s] = False
+                if self.tracer is not None:
+                    self.tracer.event(
+                        "hedge_drop", qid=qid, host=self.host, step=step,
+                        epoch=int(self.slot_epoch[s]), cause="truncated")
                 continue
             self.results[qid] = (topk_d[s], topk_i[s])
             self.result_epoch[qid] = int(self.slot_epoch[s])
             self.stats.ndis_harvested += int(ndis[s])
+            if self.tracer is not None:
+                if truncated:
+                    term_reason = trunc_reason
+                elif obs is not None and obs.early is not None:
+                    term_reason = ("interval_met" if bool(obs.early[s])
+                                   else "engine_exhausted")
+                else:
+                    term_reason = "interval_met"
+                self.tracer.terminal(
+                    qid, term_reason, host=self.host, step=step,
+                    epoch=int(self.slot_epoch[s]),
+                    **self._terminal_attrs(s, qid, ndis, r_pred, obs,
+                                           step))
             if self.slot_hedge[s]:
                 # hedge finished before (or with) its primary: its
                 # deeper result wins; the primary frees via hedge_winner
                 self.hedge_winner.add(qid)
                 self.stats.hedge_upgrades += 1
-            if self.tiers is not None:
+            if self.tiers is not None or self.collect_samples:
                 self.samples.append((
-                    bool(self.is_hard[qid]),
+                    bool(self.is_hard[qid])
+                    if self.is_hard is not None else False,
                     float(r_pred[s]) if r_pred is not None else float("nan"),
                     int(step - self.admit_step[s]), truncated))
             self.slot_query[s] = -1
@@ -411,14 +539,23 @@ class _HostSlots:
             self.stats.completed += count
         return count
 
-    def kill(self) -> None:
+    def kill(self, *, step: int = 0, epoch: int = 0) -> None:
         """Fault injection: this host's slot slice dies. Its queue is
         abandoned (those queries stay None — they were never admitted,
         so there is no state to harvest); the caller harvests the
-        in-flight slots first so every ADMITTED query still returns."""
+        in-flight slots first so every ADMITTED query still returns.
+        Each abandoned queue entry gets a terminal trace span (reason
+        ``abandoned``, cause ``host_killed``)."""
         self.alive = False
         self.stats.killed = True
         self.stats.abandoned = self.pending
+        if self.tracer is not None:
+            for qid in self.queue_easy + self.queue_hard:
+                self.tracer.terminal(
+                    qid, "abandoned", host=self.host, step=step,
+                    epoch=epoch, cause="host_killed",
+                    target=float(self.r_targets[qid]),
+                    tier=self._tier_of(qid))
         self.queue_easy = []
         self.queue_hard = []
 
@@ -459,11 +596,11 @@ def _finalize_tiers(hostslots: List[_HostSlots], is_hard: np.ndarray
                 ts.hedged += hl.stats.hedged
                 ts.hedge_upgrades += hl.stats.hedge_upgrades
         if rp:
-            ts.recall_p50 = float(np.percentile(rp, 50))
-            ts.recall_p99 = float(np.percentile(rp, 1))
+            ts.recall_p50 = obs_stats.p50(rp)
+            ts.recall_p99 = obs_stats.p01(rp)
         if lat:
-            ts.latency_p50 = float(np.percentile(lat, 50))
-            ts.latency_p99 = float(np.percentile(lat, 99))
+            ts.latency_p50 = obs_stats.p50(lat)
+            ts.latency_p99 = obs_stats.p99(lat)
         out[name] = ts
     return out
 
@@ -483,7 +620,10 @@ class DarthServer:
                  predictor: RecallPredictor,
                  interval_for_target,        # fn: r_t array -> IntervalParams
                  num_slots: int = 64, steps_per_sync: int = 4,
-                 mesh=None, hosts: int = 1, tiers=None):
+                 mesh=None, hosts: int = 1, tiers=None,
+                 tracer: Optional[obs_trace.Tracer] = None,
+                 metrics=None):
+        from repro.obs import metrics as obs_metrics
         self.engine = engine
         self.predictor = predictor
         self.interval_for_target = interval_for_target
@@ -513,6 +653,18 @@ class DarthServer:
         # boundary (or immediately when not serving).
         self._pending_swap: Optional[Tuple] = None
         self._serving = False
+        # Observability (repro.obs): a Tracer makes the chunk jits carry
+        # the per-slot predicted-recall trajectory ring (fixed shape —
+        # the traced chunks are a different program, built once here)
+        # and the host loops emit lifecycle spans; a MetricsRegistry
+        # aggregates counters/histograms per serve call. Both optional,
+        # zero cost when None.
+        self.tracer = tracer
+        self.metrics = obs_metrics.serve_metrics(metrics)
+        # engine-step count at the most recent chunk boundary of the
+        # serve in progress — lets on_boundary hooks stamp the trace
+        # events they emit (compaction begin/tick/swap)
+        self.boundary_step = 0
 
         self._build_chunks()
 
@@ -547,25 +699,61 @@ class DarthServer:
         # traced value): a closure-captured index would be baked in as a
         # replicated constant, silently undoing dist.place_index for
         # sharded engines.
-        @jax.jit
-        def run_chunk(index, st: darth_search.DarthState, r_t: jax.Array,
-                      ipi: jax.Array, mpi: jax.Array):
-            body = darth_search.make_darth_body(
-                eng._replace(index=index), pred,
-                IntervalParams(ipi=ipi, mpi=mpi), r_t)
+        if self.tracer is None:
+            @jax.jit
+            def run_chunk(index, st: darth_search.DarthState,
+                          r_t: jax.Array, ipi: jax.Array, mpi: jax.Array):
+                body = darth_search.make_darth_body(
+                    eng._replace(index=index), pred,
+                    IntervalParams(ipi=ipi, mpi=mpi), r_t)
 
-            def do(i, s):
-                return pin(body(s))
-            return jax.lax.fori_loop(0, steps_per_sync, do, pin(st))
+                def do(i, s):
+                    return pin(body(s))
+                return jax.lax.fori_loop(0, steps_per_sync, do, pin(st))
 
-        @jax.jit
-        def init_chunk(index, q: jax.Array, ipi: jax.Array, mpi: jax.Array):
-            # Pass the REAL per-slot mpi through: init only reads ipi
-            # today, but IntervalParams(mpi=ipi) would silently lie to
-            # any future reader of params.mpi at init time.
-            return darth_search.init_darth_state(
-                eng._replace(index=index), q,
-                IntervalParams(ipi=ipi, mpi=mpi))
+            @jax.jit
+            def init_chunk(index, q: jax.Array, ipi: jax.Array,
+                           mpi: jax.Array):
+                # Pass the REAL per-slot mpi through: init only reads
+                # ipi today, but IntervalParams(mpi=ipi) would silently
+                # lie to any future reader of params.mpi at init time.
+                return darth_search.init_darth_state(
+                    eng._replace(index=index), q,
+                    IntervalParams(ipi=ipi, mpi=mpi))
+        else:
+            # Traced chunks: same programs, with the predicted-recall
+            # trajectory ring riding the fori_loop carry. The ring's
+            # shape is fixed ([slots, traj_cap]) and its write is a
+            # dynamic-index .at[].set — no extra retraces, no host
+            # syncs; the host drains it only at the boundaries where
+            # serve() already fetches the active mask. Its leading slot
+            # dim means pin() splits it over host groups like the rest
+            # of the carry.
+            traj_cap = self.tracer.traj_cap
+
+            @jax.jit
+            def run_chunk(index, st: darth_search.DarthState,
+                          traj: jax.Array, r_t: jax.Array,
+                          ipi: jax.Array, mpi: jax.Array):
+                body = darth_search.make_darth_body(
+                    eng._replace(index=index), pred,
+                    IntervalParams(ipi=ipi, mpi=mpi), r_t)
+
+                def do(i, carry):
+                    s, tr = carry
+                    s = body(s)
+                    return pin((s, obs_trace.traj_record(
+                        tr, s.steps, s.r_pred)))
+                return jax.lax.fori_loop(0, steps_per_sync, do,
+                                         pin((st, traj)))
+
+            @jax.jit
+            def init_chunk(index, q: jax.Array, ipi: jax.Array,
+                           mpi: jax.Array):
+                st = darth_search.init_darth_state(
+                    eng._replace(index=index), q,
+                    IntervalParams(ipi=ipi, mpi=mpi))
+                return st, obs_trace.traj_init(q.shape[0], traj_cap)
 
         @jax.jit
         def splice(mask, new_st, old_st):
@@ -723,6 +911,11 @@ class DarthServer:
                           ServeStats]:
         import time
 
+        tr = self.tracer
+        mets = self.metrics
+        if tr is not None:
+            tr.begin()
+
         # a swap left pending by a previous serve call (budget ran out
         # mid-drain): the pool is empty now, apply before admitting
         if self._pending_swap is not None:
@@ -753,7 +946,9 @@ class DarthServer:
             _HostSlots(h, h * sph, (h + 1) * sph,
                        list(range(h, n, self.hosts)), queries, r_targets,
                        self.interval_for_target, results,
-                       tiers=self.tiers, is_hard=is_hard)
+                       tiers=self.tiers, is_hard=is_hard, tracer=tr,
+                       epoch=self.engine_epoch,
+                       collect_samples=mets is not None)
             for h in range(self.hosts)]
         stats.hosts = [hl.stats for hl in hostslots]
         chunk_ms: List[float] = []
@@ -771,32 +966,57 @@ class DarthServer:
             """Host-side copies of the per-slot device outputs every host
             loop harvests from (one transfer, then pure local slicing).
             r_pred (the predictor's recall estimate at harvest) is only
-            fetched when the tier SLO stats need it."""
+            fetched when the tier SLO stats, metrics, or tracer need it;
+            the tracer additionally drains the early mask, predictor
+            counts, and the trajectory ring AT THIS SAME boundary — no
+            extra sync points."""
             topk_d = np.asarray(jax.device_get(
                 self.engine.topk_d(st.inner)))
             topk_i = np.asarray(jax.device_get(
                 self.engine.topk_i(st.inner)))
             ndis = np.asarray(jax.device_get(st.inner.ndis))
+            need_rp = (self.tiers is not None or tr is not None
+                       or mets is not None)
             r_pred = (np.asarray(jax.device_get(st.r_pred))
-                      if self.tiers is not None else None)
-            return topk_d, topk_i, ndis, r_pred
+                      if need_rp else None)
+            obs = None
+            if tr is not None:
+                obs = _ObsArrays(
+                    early=np.asarray(jax.device_get(st.early)),
+                    npred=np.asarray(jax.device_get(st.npred)),
+                    traj=np.asarray(jax.device_get(traj)),
+                    traj_base=traj_base)
+            return topk_d, topk_i, ndis, r_pred, obs
 
         def harvest_host(hl: _HostSlots, mask_local: np.ndarray,
-                         arrays, *, truncated: bool = False) -> int:
-            topk_d, topk_i, ndis, r_pred = arrays
+                         arrays, *, truncated: bool = False,
+                         reason: Optional[str] = None) -> int:
+            topk_d, topk_i, ndis, r_pred, obs = arrays
             sl = slice(hl.lo, hl.hi)
+            obs_loc = None
+            if obs is not None:
+                obs_loc = _ObsArrays(
+                    early=obs.early[sl], npred=obs.npred[sl],
+                    traj=obs.traj[sl], traj_base=obs.traj_base)
             return hl.harvest(mask_local, topk_d[sl], topk_i[sl], ndis[sl],
                               truncated=truncated,
                               step=stats.engine_steps,
-                              r_pred=None if r_pred is None else r_pred[sl])
+                              r_pred=None if r_pred is None else r_pred[sl],
+                              reason=reason, obs=obs_loc)
 
         # initial fill: every host admits into all of its slots
         fills = [hl.fill(np.arange(sph), step=0, epoch=self.engine_epoch)
                  for hl in hostslots]
         qb = np.concatenate([f[1] for f in fills])
         rt, ipi, mpi = gather_inputs()
-        st = self._init_chunk(self.engine.index, self._put(qb),
-                              self._put(ipi), self._put(mpi))
+        traj = None
+        traj_base = 0          # engine_steps at the ring's last rebuild
+        if tr is None:
+            st = self._init_chunk(self.engine.index, self._put(qb),
+                                  self._put(ipi), self._put(mpi))
+        else:
+            st, traj = self._init_chunk(self.engine.index, self._put(qb),
+                                        self._put(ipi), self._put(mpi))
         # slots with no query: deactivate
         occupied = occupied_global()
         st = dataclasses.replace(
@@ -806,8 +1026,13 @@ class DarthServer:
 
         while True:
             t0 = time.perf_counter()
-            st = self._run_chunk(self.engine.index, st, rt_dev,
-                                 self._put(ipi), self._put(mpi))
+            if tr is None:
+                st = self._run_chunk(self.engine.index, st, rt_dev,
+                                     self._put(ipi), self._put(mpi))
+            else:
+                st, traj = self._run_chunk(self.engine.index, st, traj,
+                                           rt_dev, self._put(ipi),
+                                           self._put(mpi))
             stats.engine_steps += self.steps_per_sync
             for hl in hostslots:
                 hl.stats.slot_steps += (self.steps_per_sync
@@ -834,8 +1059,9 @@ class DarthServer:
                 if fin_local.any():
                     harvest_host(hl, fin_local, arrays)
                 if hl.occupied.any():
-                    harvest_host(hl, hl.occupied, arrays, truncated=True)
-                hl.kill()
+                    harvest_host(hl, hl.occupied, arrays, truncated=True,
+                                 reason="host_killed")
+                hl.kill(step=stats.engine_steps, epoch=self.engine_epoch)
                 changed = True
             if finished.any():
                 for hl in hostslots:
@@ -850,16 +1076,26 @@ class DarthServer:
             # drained atomic swap — the pool is retargeted only when NO
             # slot is in flight, so every admitted query runs start to
             # finish against one index version (its admission epoch)
+            self.boundary_step = stats.engine_steps
             if on_boundary is not None:
+                swap_was_pending = self._pending_swap is not None
                 on_boundary(self)
+                if (tr is not None and not swap_was_pending
+                        and self._pending_swap is not None):
+                    tr.event("swap_staged", step=stats.engine_steps,
+                             epoch=self.engine_epoch)
             if (self._pending_swap is not None
                     and not any(hl.occupied.any() for hl in hostslots)):
                 self._apply_pending_swap()
                 stats.swaps += 1
+                if tr is not None:
+                    tr.event("swap_applied", step=stats.engine_steps,
+                             epoch=self.engine_epoch)
                 # chunk state was built against the OLD index (shapes
                 # may differ — e.g. HNSW visited rows grow at
                 # compaction); force a full init rebuild at the refill
                 st = None
+                traj = None
                 changed = False
                 occupied = occupied_global()
             # per-host refill — unless the step budget is already
@@ -876,7 +1112,7 @@ class DarthServer:
             if (stats.engine_steps < max_engine_steps
                     and self._pending_swap is None):
                 if self.tiers is not None and self.tiers.rebalance:
-                    self._rebalance(hostslots)
+                    self._rebalance(hostslots, step=stats.engine_steps)
                 hedging = self.tiers is not None and self.tiers.hedge
                 mask = np.zeros((b,), bool)
                 qb2 = np.zeros((b, d), np.float32)
@@ -901,9 +1137,22 @@ class DarthServer:
                                              self._put(mpi))
                     # after a drained swap st is None (old chunk state
                     # discarded): the pool is empty, so the fresh init
-                    # IS the chunk state — no splice needed
-                    st = (fresh if st is None
-                          else self._splice(self._put(mask), fresh, st))
+                    # IS the chunk state — no splice needed. With a
+                    # tracer, fresh is (state, ring) and the splice
+                    # selects both per slot (a spliced slot's ring row
+                    # resets to NO_PREDICTION, clearing the previous
+                    # occupant's trajectory); on a full rebuild the
+                    # ring's column origin moves to the current step
+                    # (traj_base) since state.steps restarts at 0.
+                    if tr is None:
+                        st = (fresh if st is None
+                              else self._splice(self._put(mask), fresh, st))
+                    elif st is None:
+                        st, traj = fresh
+                        traj_base = stats.engine_steps
+                    else:
+                        st, traj = self._splice(self._put(mask), fresh,
+                                                (st, traj))
                     changed = True
             if st is None:
                 # a swap drained the pool and the refill admitted
@@ -937,6 +1186,17 @@ class DarthServer:
         for hl in hostslots:
             if hl.alive:
                 hl.stats.abandoned = hl.pending
+                if tr is not None:
+                    # queued to the end (step budget ran out before
+                    # admission): close them out so the trace ledger
+                    # stays exhaustive — served ∪ shed ∪ abandoned
+                    for qid in hl.queue_easy + hl.queue_hard:
+                        tr.terminal(
+                            qid, "abandoned", host=hl.host,
+                            step=stats.engine_steps,
+                            epoch=self.engine_epoch, cause="budget",
+                            target=float(hl.r_targets[qid]),
+                            tier=hl._tier_of(qid))
             stats.completed += hl.stats.completed
             stats.slot_steps += hl.stats.slot_steps
             stats.refills += hl.stats.refills
@@ -947,15 +1207,57 @@ class DarthServer:
             stats.hedged += hl.stats.hedged
             stats.hedge_upgrades += hl.stats.hedge_upgrades
             stats.hedge_epoch_dropped += hl.stats.hedge_epoch_dropped
-        if chunk_ms:
-            stats.chunk_ms_p50 = float(np.percentile(chunk_ms, 50))
-            stats.chunk_ms_p99 = float(np.percentile(chunk_ms, 99))
+        stats.chunk_ms_p50 = obs_stats.p50(chunk_ms)
+        stats.chunk_ms_p99 = obs_stats.p99(chunk_ms)
         if self.tiers is not None:
             stats.tiers = _finalize_tiers(hostslots, is_hard)
+        if mets is not None:
+            self._export_metrics(mets, stats, hostslots, chunk_ms)
+        if tr is not None:
+            tr.finish()
         return results, stats
 
-    @staticmethod
-    def _rebalance(hostslots: List[_HostSlots]) -> None:
+    def _export_metrics(self, mets, stats: ServeStats,
+                        hostslots: List[_HostSlots],
+                        chunk_ms: List[float]) -> None:
+        """Fold one serve call's outcome into the metrics registry:
+        query counts by terminal outcome, scheduling counters labelled
+        per host, and the latency / recall / service-step histograms."""
+        qt = mets.counter("darth_queries_total")
+        abandoned = sum(h.abandoned for h in stats.hosts)
+        for v, outcome in ((stats.completed, "completed"),
+                           (stats.truncated, "truncated"),
+                           (stats.shed, "shed"),
+                           (abandoned, "abandoned")):
+            if v:
+                qt.inc(v, outcome=outcome)
+        for hl in hostslots:
+            host = str(hl.host)
+            if hl.stats.refills:
+                mets.counter("darth_refills_total").inc(
+                    hl.stats.refills, host=host)
+            if hl.stats.hedged:
+                mets.counter("darth_hedges_total").inc(
+                    hl.stats.hedged, host=host)
+            if hl.stats.stolen:
+                mets.counter("darth_steals_total").inc(
+                    hl.stats.stolen, host=host)
+        if stats.swaps:
+            mets.counter("darth_swaps_total").inc(stats.swaps)
+        lat_h = mets.histogram("darth_chunk_latency_ms")
+        for v in chunk_ms:
+            lat_h.observe(v)
+        rec_h = mets.histogram("darth_harvest_recall")
+        steps_h = mets.histogram("darth_service_steps")
+        for hl in hostslots:
+            for _, r, steps, _ in hl.samples:
+                if np.isfinite(r):
+                    rec_h.observe(r)
+                steps_h.observe(steps)
+        mets.gauge("darth_engine_epoch").set(self.engine_epoch)
+
+    def _rebalance(self, hostslots: List[_HostSlots],
+                   step: int = 0) -> None:
         """Queue-level work stealing at a refill boundary.
 
         Hosts with free slots and a drained queue steal queued queries
@@ -986,3 +1288,7 @@ class DarthServer:
                 dst.append(qid)
                 thief.stats.stolen += 1
                 spare -= 1
+                if self.tracer is not None:
+                    self.tracer.event(
+                        "steal", qid=qid, host=thief.host, step=step,
+                        epoch=self.engine_epoch, donor=donor.host)
