@@ -1,0 +1,54 @@
+"""Per-commit benchmark artifact writer shared by every invocation.
+
+The per-commit perf trajectory only works if EVERY benchmark run —
+nightly lane, local `python -m benchmarks.run`, or a single module's
+`__main__` — leaves a `results/BENCH_<utc>.json` behind with enough
+metadata (commit hash + git-clean flag) to place it on the series.
+CI uploads whatever matches `results/BENCH_*.json`.
+"""
+from __future__ import annotations
+
+import datetime
+import json
+import os
+import subprocess
+from typing import Dict
+
+
+def git_meta() -> dict:
+    """Best-effort commit metadata: hash, branch, and a `dirty` flag so
+    artifacts from uncommitted working trees are never mistaken for the
+    commit's true numbers."""
+    meta: Dict[str, object] = {}
+    for key, cmd in (("commit", ["git", "rev-parse", "HEAD"]),
+                     ("branch", ["git", "rev-parse", "--abbrev-ref",
+                                 "HEAD"])):
+        try:
+            meta[key] = subprocess.run(
+                cmd, capture_output=True, text=True, timeout=10,
+                check=True).stdout.strip()
+        except Exception:
+            meta[key] = "unknown"
+    try:
+        status = subprocess.run(
+            ["git", "status", "--porcelain"], capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip()
+        meta["dirty"] = bool(status)
+    except Exception:
+        meta["dirty"] = None     # unknown: not a git checkout
+    return meta
+
+
+def write_bench_artifact(all_out: dict, *,
+                         results_dir: str = "results") -> str:
+    """Write `<results_dir>/BENCH_<utc>.json` stamping `all_out` (a
+    {bench_name: payload} dict) with git metadata. Returns the path."""
+    os.makedirs(results_dir, exist_ok=True)
+    stamp = datetime.datetime.now(datetime.timezone.utc).strftime(
+        "%Y%m%dT%H%M%SZ")
+    path = os.path.join(results_dir, f"BENCH_{stamp}.json")
+    payload = {"meta": {**git_meta(), "timestamp_utc": stamp},
+               "benchmarks": all_out}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return path

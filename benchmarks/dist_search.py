@@ -188,6 +188,103 @@ def dist_sharded_hnsw_beam(b: int = 32, k: int = 10, m: int = 8,
     return rows, headline
 
 
+def dist_residency(b: int = 8, k: int = 10, nlist: int = 32,
+                   nprobe: int = 8, m: int = 8, ef: int = 48,
+                   visited_width: int = 512):
+    """Compact-residency gates (PR 10): the SQ8-resident sharded step
+    programs (IVF probe over int8 codes, HNSW beam over int8 codes +
+    the fixed-width hashed visited filter) must move the SAME per-step
+    collective bytes at N=2048 and N=8192 — candidates, never index
+    rows — and the device-resident index bytes must drop >= 3.5x vs
+    f32 for the IVF layout at D=64 (the serving dim class the budget
+    is written for; the HNSW ratio is reported ungated because its
+    f32 row carries the adjacency list both formats keep). Recall at
+    the large size shows the quantization + hashed-filter cost the
+    conformance tests bound."""
+    import jax.numpy as jnp
+
+    from repro import dist
+    from repro.index import flat, hnsw, ivf, residency
+    from repro.launch import mesh as mesh_lib
+    from repro.utils import hlo as hlo_lib
+
+    mesh = mesh_lib.make_search_mesh()
+    shards = dist.collectives.shard_count(mesh)
+    d = 64
+    rng = np.random.default_rng(0)
+    rows = []
+    coll = {"ivf": {}, "hnsw": {}}
+    ratios = {}
+    for n in (2048, 8192):
+        x = rng.normal(size=(n, d)).astype(np.float32)
+        q = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+
+        index_f = ivf.build(x, nlist=nlist, seed=0)
+        index_q = residency.quantize_ivf(index_f)
+        placed = dist.place_index(index_q, mesh)
+        step = dist.collectives.make_sharded_probe_step(mesh)
+        s0 = ivf.init_state(placed, q, k=k, nprobe=nprobe)
+        coll["ivf"][n] = hlo_lib.collective_bytes(
+            step.lower(placed, s0).compile().as_text())["total"]
+
+        graph_f = hnsw.build(x, m=m, passes=1, ef_construction=32,
+                             seed=0)
+        graph_q = residency.quantize_hnsw(graph_f)
+        gplaced = dist.place_index(graph_q, mesh)
+        bstep = dist.collectives.make_sharded_beam_step(mesh)
+        gs0 = hnsw.init_state(gplaced, q, ef=ef,
+                              visited_width=visited_width)
+        coll["hnsw"][n] = hlo_lib.collective_bytes(
+            bstep.lower(gplaced, gs0, k=k).compile().as_text())["total"]
+
+        ratios[n] = {
+            "ivf": (residency.resident_bytes(index_f)["total"]
+                    / residency.resident_bytes(index_q)["total"]),
+            "hnsw": (residency.resident_bytes(graph_f)["total"]
+                     / residency.resident_bytes(graph_q)["total"]),
+        }
+
+        _, gt_i = flat.search(q, jnp.asarray(x), k)
+
+        def recall(i_pred):
+            return float(np.mean(np.asarray(
+                flat.recall_at_k(i_pred, gt_i))))
+
+        _, i_f32, _ = ivf.search(index_f, q, k=k, nprobe=nprobe)
+        _, i_sq8, _ = ivf.search(index_q, q, k=k, nprobe=nprobe)
+        _, gi_f32, _ = hnsw.search(graph_f, q, k=k, ef=ef)
+        _, gi_sq8, _ = hnsw.search(graph_q, q, k=k, ef=ef,
+                                   visited_width=visited_width)
+        rows.append({
+            "shards": shards, "n": n, "d": d, "k": k,
+            "nlist": nlist, "nprobe": nprobe, "m": m, "ef": ef,
+            "visited_width": visited_width,
+            "ivf_collective_bytes_per_step": coll["ivf"][n],
+            "hnsw_collective_bytes_per_step": coll["hnsw"][n],
+            "ivf_resident_ratio_f32_over_sq8": round(ratios[n]["ivf"], 3),
+            "hnsw_resident_ratio_f32_over_sq8": round(
+                ratios[n]["hnsw"], 3),
+            "ivf_recall_f32": round(recall(i_f32), 4),
+            "ivf_recall_sq8": round(recall(i_sq8), 4),
+            "hnsw_recall_f32": round(recall(gi_f32), 4),
+            "hnsw_recall_sq8_hashed": round(recall(gi_sq8), 4),
+        })
+
+    n_indep = (coll["ivf"][2048] == coll["ivf"][8192]
+               and coll["hnsw"][2048] == coll["hnsw"][8192])
+    ratio_ok = ratios[8192]["ivf"] >= 3.5
+    rows[-1]["gate_collective_bytes_n_independent"] = n_indep
+    rows[-1]["gate_ivf_resident_ratio_ge_3_5"] = ratio_ok
+    headline = (f"{shards} shard(s): SQ8 steps "
+                f"{coll['ivf'][8192]/1e3:.1f} kB ivf / "
+                f"{coll['hnsw'][8192]/1e3:.1f} kB hnsw per step, "
+                f"N-independent {'PASS' if n_indep else 'FAIL'}; "
+                f"resident f32/sq8 {ratios[8192]['ivf']:.2f}x ivf "
+                f"(gate>=3.5x {'PASS' if ratio_ok else 'FAIL'}), "
+                f"{ratios[8192]['hnsw']:.2f}x hnsw")
+    return rows, headline
+
+
 def dist_multi_host_serve(n: int = 20_000, d: int = 32, k: int = 10,
                           nlist: int = 64, nprobe: int = 16,
                           slots: int = 64, steps_per_sync: int = 4,
@@ -406,10 +503,14 @@ def dist_difficulty_serve(n: int = 20_000, d: int = 32, k: int = 10,
 
 
 if __name__ == "__main__":
+    from benchmarks.artifact import write_bench_artifact
+    out = {}
     for fn in (dist_sharded_search, dist_sharded_ivf_probe,
-               dist_sharded_hnsw_beam, dist_multi_host_serve,
-               dist_difficulty_serve):
+               dist_sharded_hnsw_beam, dist_residency,
+               dist_multi_host_serve, dist_difficulty_serve):
         rows, headline = fn()
         print(headline)
         for r in rows:
             print(r)
+        out[fn.__name__] = {"headline": headline, "rows": rows}
+    print("wrote", write_bench_artifact(out))

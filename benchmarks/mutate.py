@@ -354,8 +354,12 @@ def mutate_online_compaction(n: int = 8_000, d: int = 24,
 
 
 if __name__ == "__main__":
+    from benchmarks.artifact import write_bench_artifact
+    out = {}
     for fn in (mutate_burst, mutate_online_compaction):
         rows, headline = fn()
         for r in rows:
             print(r)
         print(headline)
+        out[fn.__name__] = {"headline": headline, "rows": rows}
+    print("wrote", write_bench_artifact(out))

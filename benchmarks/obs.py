@@ -85,5 +85,9 @@ def obs_tracing_overhead(repeats: int = 5):
 
 
 if __name__ == "__main__":
+    from benchmarks.artifact import write_bench_artifact
     out_rows, out_headline = obs_tracing_overhead()
     print(out_headline)
+    print("wrote", write_bench_artifact(
+        {"obs_tracing_overhead": {"headline": out_headline,
+                                  "rows": out_rows}}))

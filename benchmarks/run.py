@@ -1,31 +1,18 @@
 """Benchmark harness (deliverable d): one function per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV and writes results/benchmarks.json
 plus a per-commit results/BENCH_<utc-timestamp>.json artifact (same
-payload + git metadata) so nightly runs accumulate a comparable series.
+payload + git metadata incl. a dirty flag, via benchmarks.artifact) on
+EVERY invocation — nightly and local runs alike — so the perf series
+accumulates one comparable point per run.
 """
 from __future__ import annotations
 
-import datetime
 import json
 import os
-import subprocess
 import time
 import traceback
 
-
-def _git_meta() -> dict:
-    """Best-effort commit metadata for the per-commit artifact."""
-    meta = {}
-    for key, cmd in (("commit", ["git", "rev-parse", "HEAD"]),
-                     ("branch", ["git", "rev-parse", "--abbrev-ref",
-                                 "HEAD"])):
-        try:
-            meta[key] = subprocess.run(
-                cmd, capture_output=True, text=True, timeout=10,
-                check=True).stdout.strip()
-        except Exception:
-            meta[key] = "unknown"
-    return meta
+from benchmarks.artifact import write_bench_artifact
 
 
 def main() -> None:
@@ -36,6 +23,7 @@ def main() -> None:
         ("dist_sharded_search", dist_search.dist_sharded_search),
         ("dist_sharded_ivf_probe", dist_search.dist_sharded_ivf_probe),
         ("dist_sharded_hnsw_beam", dist_search.dist_sharded_hnsw_beam),
+        ("dist_residency", dist_search.dist_residency),
         ("dist_multi_host_serve", dist_search.dist_multi_host_serve),
         ("dist_difficulty_serve", dist_search.dist_difficulty_serve),
         ("mutate_burst", mutate.mutate_burst),
@@ -74,16 +62,8 @@ def main() -> None:
     os.makedirs("results", exist_ok=True)
     with open("results/benchmarks.json", "w") as f:
         json.dump(all_out, f, indent=1, default=str)
-    # per-commit artifact: same payload stamped with git metadata and a
-    # UTC timestamp in the filename, so CI uploads keep one comparable
-    # file per run instead of overwriting the series
-    stamp = datetime.datetime.now(datetime.timezone.utc).strftime(
-        "%Y%m%dT%H%M%SZ")
-    artifact = {"meta": {**_git_meta(), "timestamp_utc": stamp},
-                "benchmarks": all_out}
-    with open(f"results/BENCH_{stamp}.json", "w") as f:
-        json.dump(artifact, f, indent=1, default=str)
-    print(f"wrote results/benchmarks.json + results/BENCH_{stamp}.json")
+    path = write_bench_artifact(all_out)
+    print(f"wrote results/benchmarks.json + {path}")
     n_err = sum(1 for v in all_out.values() if v["status"] != "ok")
     if n_err:
         raise SystemExit(f"{n_err} benchmarks failed")

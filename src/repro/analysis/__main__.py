@@ -46,10 +46,14 @@ def run_selftest() -> List[str]:
 
     from repro.analysis import hlo_passes
 
+    # Two-HLO detectors compare a small and a large build (the corpus
+    # module then also defines build_bad_large()); the rest see one.
     detectors = {
         "replicated-constant": hlo_passes.replicated_constants,
         "unpartitionable-topk": hlo_passes.unpartitionable_topk,
+        "resident-bytes": hlo_passes.resident_bytes,
     }
+    two_hlo = {"resident-bytes"}
     errors: List[str] = []
     corpus = _corpus_dir()
     if not os.path.isdir(corpus):
@@ -67,7 +71,13 @@ def run_selftest() -> List[str]:
             continue
         fn, args = mod.build_bad()
         hlo = fn.lower(*args).compile().as_text()
-        found = detectors[mod.EXPECT_PASS](f"corpus/{name}", hlo)
+        if mod.EXPECT_PASS in two_hlo:
+            fn_l, args_l = mod.build_bad_large()
+            hlo_l = fn_l.lower(*args_l).compile().as_text()
+            found = detectors[mod.EXPECT_PASS](f"corpus/{name}", hlo,
+                                               hlo_l)
+        else:
+            found = detectors[mod.EXPECT_PASS](f"corpus/{name}", hlo)
         located = [f for f in found
                    if f.file and os.path.basename(f.file) == name
                    and f.line]

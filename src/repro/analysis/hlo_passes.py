@@ -13,7 +13,7 @@ import re
 from typing import Dict, List, Optional, Tuple
 
 from repro.analysis.findings import Finding
-from repro.utils.hlo import (COLLECTIVES, _shape_bytes,
+from repro.utils.hlo import (COLLECTIVES, _find_entry, _shape_bytes,
                              _split_computations, collective_bytes)
 
 #: Constants smaller than this are assumed deliberate (iota tables,
@@ -23,6 +23,8 @@ CONST_BYTES_THRESHOLD = 64 * 1024
 
 _CONST_RE = re.compile(
     r"=\s*([a-z0-9]+\[[\d,]*\]\S*)\s+constant\(")
+_PARAM_RE = re.compile(
+    r"=\s*([a-z0-9]+)\[([\d,]*)\]\S*\s+parameter\((\d+)\)")
 _META_FILE_RE = re.compile(r'source_file="([^"]+)"')
 _META_LINE_RE = re.compile(r"source_line=(\d+)")
 _DEF_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=")
@@ -155,4 +157,104 @@ def collective_n_independence(entry: str, hlo_small: str, hlo_large: str,
                 f"({a:.0f} -> {b:.0f} between the small and large "
                 f"builds): collectives must move candidates, not "
                 f"index rows"))
+    return out
+
+
+def _entry_params(hlo: str) -> Dict[int, Tuple[str, str, Tuple[int, ...]]]:
+    """parameter number -> (instr name, dtype, dims) for the ENTRY
+    computation's `parameter(n)` instructions (post-SPMD: per-device
+    shapes)."""
+    lines = _split_computations(hlo).get(_find_entry(hlo), [])
+    params: Dict[int, Tuple[str, str, Tuple[int, ...]]] = {}
+    for line in lines:
+        m = _PARAM_RE.search(line)
+        if not m:
+            continue
+        nm = _DEF_NAME_RE.match(line)
+        dims = (tuple(int(x) for x in m.group(2).split(","))
+                if m.group(2) else ())
+        params[int(m.group(3))] = (nm.group(1) if nm else "",
+                                   m.group(1), dims)
+    return params
+
+
+def _param_use_loc(hlo: str, name: str
+                   ) -> Tuple[Optional[str], Optional[int]]:
+    """Source anchor for a parameter: the first instruction CONSUMING
+    `%name` that carries metadata. Parameter instructions themselves
+    have no source location — the array was built in Python, not by an
+    op — so the finding points at the code that reads it."""
+    if not name:
+        return None, None
+    pat = re.compile(r"%" + re.escape(name) + r"\b")
+    for line in hlo.splitlines():
+        if " parameter(" in line:
+            continue
+        if not pat.search(line.split("=", 1)[-1]):
+            continue
+        f, ln = _source_loc(line)
+        if f:
+            return f, ln
+    return None, None
+
+
+def _nelems(dims: Tuple[int, ...]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def resident_bytes(entry: str, hlo_small: str, hlo_large: str,
+                   *, dim: int = 16) -> List[Finding]:
+    """Pass 6: SQ8-resident entries must hold vector payloads as int8.
+
+    Entries registered `resident_sq8=True` serve the compact residency
+    format (index.residency): every N-scaled vector-payload parameter —
+    one whose per-device element count GROWS between the small and
+    large builds and whose trailing dim is the vector dim — must enter
+    the compiled program at int8 width, and at least one such int8
+    payload must exist. A float payload that scales with N means the
+    manifest (or an engine refactor behind it) silently regressed to
+    f32 residency: the program still computes the right answer, at
+    4-4.4x the device bytes the residency contract budgets for.
+    Batch-sized state (q, top-k buffers) and non-payload index arrays
+    (ids, sqnorm, neighbor lists, the hashed visited filter) never
+    match the payload test and stay unconstrained.
+    """
+    ps = _entry_params(hlo_small)
+    pl = _entry_params(hlo_large)
+    out: List[Finding] = []
+    has_sq8 = False
+    for num, (name, dt, dims) in sorted(ps.items()):
+        other = pl.get(num)
+        if other is None:
+            continue
+        _, dt_l, dims_l = other
+        if dt != dt_l or len(dims) != len(dims_l):
+            continue
+        if _nelems(dims_l) <= _nelems(dims):
+            continue                       # not N-scaled
+        if len(dims) < 2 or dims[-1] != dim:
+            continue                       # not a vector payload
+        if dt == "s8":
+            has_sq8 = True
+            continue
+        if dt not in ("f32", "f64", "bf16", "f16"):
+            continue
+        f, ln = _param_use_loc(hlo_large, name)
+        out.append(Finding(
+            "resident-bytes", entry,
+            f"N-scaled vector payload parameter({num}) is device-"
+            f"resident as {dt}[{','.join(map(str, dims_l))}]: "
+            f"SQ8-resident entries must search int8 codes "
+            f"(index.residency.quantize_*) and re-rank the final "
+            f"top-k from the f32 store",
+            f, ln))
+    if not has_sq8:
+        out.append(Finding(
+            "resident-bytes", entry,
+            "no N-scaled int8 vector-payload parameter reaches the "
+            "program: the entry is registered resident_sq8 but is "
+            "not serving the SQ8 view"))
     return out

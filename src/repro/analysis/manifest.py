@@ -32,6 +32,7 @@ from repro.dist import sharding as sharding_lib
 from repro.gbdt import model as gbdt_model
 from repro.index import hnsw as hnsw_lib
 from repro.index import ivf as ivf_lib
+from repro.index import residency as residency_lib
 from repro.kernels import ops as kernel_ops
 from repro.launch import mesh as mesh_lib
 from repro.obs import trace as obs_trace
@@ -50,37 +51,41 @@ def _hlo(fn, *args, mesh=None, **kw) -> str:
         return fn.lower(*args, **kw).compile().as_text()
 
 
-def _make_ivf(n: int, d: int, *, nlist: int = 32,
-              seed: int = 0) -> ivf_lib.IVFIndex:
+def _make_ivf(n: int, d: int, *, nlist: int = 32, seed: int = 0,
+              sq8: bool = False) -> ivf_lib.IVFIndex:
     """Fabricated IVF index: random vectors, random (balanced-ish)
-    bucket assignment through the real pack_buckets layout."""
+    bucket assignment through the real pack_buckets layout. sq8=True
+    runs the real residency quantizer over it."""
     rng = np.random.default_rng(seed)
     x = rng.normal(size=(n, d)).astype(np.float32)
     assign = rng.integers(0, nlist, size=n)
     bv, bi, bsq, sizes = ivf_lib.pack_buckets(
         x, x, np.arange(n, dtype=np.int32), assign, nlist)
-    return ivf_lib.IVFIndex(
+    index = ivf_lib.IVFIndex(
         centroids=jnp.asarray(rng.normal(size=(nlist, d)).astype(
             np.float32)),
         bucket_vecs=jnp.asarray(bv), bucket_ids=jnp.asarray(bi),
         bucket_sqnorm=jnp.asarray(bsq), bucket_sizes=jnp.asarray(sizes),
         scale=jnp.ones((d,), jnp.float32),
         offset=jnp.zeros((d,), jnp.float32))
+    return residency_lib.quantize_ivf(index) if sq8 else index
 
 
-def _make_hnsw(n: int, d: int, *, m: int = 8,
-               seed: int = 0) -> hnsw_lib.HNSWIndex:
+def _make_hnsw(n: int, d: int, *, m: int = 8, seed: int = 0,
+               sq8: bool = False) -> hnsw_lib.HNSWIndex:
     """Fabricated HNSW graph: random vectors + random adjacency (graph
-    quality is irrelevant at trace time)."""
+    quality is irrelevant at trace time). sq8=True runs the real
+    residency quantizer over it."""
     rng = np.random.default_rng(seed)
     x = rng.normal(size=(n, d)).astype(np.float32)
     nbr = rng.integers(0, n, size=(n, m)).astype(np.int32)
-    return hnsw_lib.HNSWIndex(
+    index = hnsw_lib.HNSWIndex(
         vectors=jnp.asarray(x),
         sqnorm=jnp.asarray((x ** 2).sum(axis=1)),
         neighbors=jnp.asarray(nbr),
         entry=jnp.asarray(0, jnp.int32),
         route_ids=jnp.asarray(np.arange(64, dtype=np.int32)))
+    return residency_lib.quantize_hnsw(index) if sq8 else index
 
 
 def _queries(d: int, *, b: int = BATCH, seed: int = 1) -> jax.Array:
@@ -119,24 +124,32 @@ def _predictor() -> RecallPredictor:
 # Fused kernels
 # ---------------------------------------------------------------------------
 
-@register("kernels/l2_topk")
+@register("kernels/l2_topk", resident_sq8=True)
 def l2_topk(size: str) -> Dict[str, str]:
-    """The fused flat top-k kernel wrapper (interpret mode on CPU)."""
+    """The fused flat top-k kernel wrapper (interpret mode on CPU),
+    called in the SQ8 asymmetric form: int8 codes, dequantized sqnorms
+    and an explicit per-query bias."""
     n, d = SIZES[size]
     rng = np.random.default_rng(2)
-    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
-    return {"l2_topk": _hlo(kernel_ops.l2_topk, _queries(d), x, k=K,
-                            interpret=True)}
+    codes = jnp.asarray(rng.integers(-127, 128, size=(n, d)).astype(
+        np.int8))
+    xsq = jnp.sum(codes.astype(jnp.float32) ** 2, axis=1)
+    q = _queries(d)
+    bias = jnp.sum(q * q, axis=1, keepdims=True)
+    return {"l2_topk": _hlo(kernel_ops.l2_topk, q, codes, k=K,
+                            x_sqnorm=xsq, bias=bias, interpret=True)}
 
 
-@register("kernels/bucket_topk")
+@register("kernels/bucket_topk", resident_sq8=True)
 def bucket_topk(size: str) -> Dict[str, str]:
-    """The fused IVF probe kernel wrapper (interpret mode on CPU)."""
+    """The fused IVF probe kernel wrapper (interpret mode on CPU) over
+    int8 bucket codes (the SQ8-resident store's gathered rows)."""
     n, d = SIZES[size]
     cap = n // 32
     rng = np.random.default_rng(3)
-    vecs = jnp.asarray(rng.normal(size=(BATCH, cap, d)).astype(np.float32))
-    sqn = jnp.sum(vecs ** 2, axis=2)
+    vecs = jnp.asarray(rng.integers(-127, 128, size=(BATCH, cap, d))
+                       .astype(np.int8))
+    sqn = jnp.sum(vecs.astype(jnp.float32) ** 2, axis=2)
     ids = jnp.asarray(rng.integers(0, n, size=(BATCH, cap)).astype(
         np.int32))
     return {"bucket_topk": _hlo(
@@ -161,25 +174,34 @@ def flat_search(size: str) -> Dict[str, str]:
     return {"search": _hlo(fn, _queries(d), x, mesh=mesh)}
 
 
-@register("dist/ivf_probe_step")
+@register("dist/ivf_probe_step", resident_sq8=True)
 def ivf_probe_step(size: str) -> Dict[str, str]:
-    """One sharded IVF probe step over a cap-sharded bucket store."""
+    """One sharded IVF probe step over a cap-sharded SQ8 bucket store
+    (the default serving residency — PR 10)."""
     n, d = SIZES[size]
     mesh = _search_mesh()
-    index = sharding_lib.place_index(_make_ivf(n, d), mesh)
+    index = sharding_lib.place_index(_make_ivf(n, d, sq8=True), mesh)
     eng = engines_lib.sharded_ivf_engine(index, mesh, k=K, nprobe=NPROBE)
     st = eng.init(index, _queries(d))
     return {"step": _hlo(eng.step, index, st, mesh=mesh)}
 
 
-@register("dist/hnsw_beam_step")
+#: Fixed hashed-visited width for the beam-step entry: N-independent by
+#: construction (the point of the hashed filter), a power of two, and
+#: divisible by every shard count the gate meshes use.
+VISITED_W = 512
+
+
+@register("dist/hnsw_beam_step", resident_sq8=True)
 def hnsw_beam_step(size: str) -> Dict[str, str]:
-    """One sharded HNSW beam expansion over a row-sharded graph."""
+    """One sharded HNSW beam expansion over a row-sharded SQ8 graph
+    with the fixed-width hashed visited filter."""
     n, d = SIZES[size]
     mesh = _search_mesh()
-    index = sharding_lib.place_index(_make_hnsw(n, d), mesh)
+    index = sharding_lib.place_index(_make_hnsw(n, d, sq8=True), mesh)
     step = dist_collectives.make_sharded_beam_step(mesh)
-    st = hnsw_lib.init_state(index, _queries(d), ef=16)
+    st = hnsw_lib.init_state(index, _queries(d), ef=16,
+                             visited_width=VISITED_W)
     return {"step": _hlo(step, index, st, mesh=mesh, k=K)}
 
 

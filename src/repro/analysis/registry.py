@@ -36,17 +36,25 @@ class EntryPoint:
     the builder derives from the CURRENT visible device count.
     `check`, when set instead, is an executable pass (the retrace
     audit) returning Findings directly; such entries skip the HLO
-    passes."""
+    passes.
+
+    `resident_sq8` marks entries whose builders serve the compact
+    SQ8-resident index format: the resident-bytes pass then asserts
+    every N-scaled vector payload entering the compiled program is
+    int8-width (and that at least one int8 payload exists), so a
+    manifest regression back to f32 residency fails the gate."""
     name: str
     build: Optional[Callable[[str], Tuple[Any, tuple]]] = None
     check: Optional[Callable[[], List[Any]]] = None
     min_devices: int = 1
+    resident_sq8: bool = False
 
 
 _REGISTRY: Dict[str, EntryPoint] = {}
 
 
-def register(name: str, *, min_devices: int = 1, check: bool = False):
+def register(name: str, *, min_devices: int = 1, check: bool = False,
+             resident_sq8: bool = False):
     """Decorator: register a builder (or, with check=True, an
     executable audit) under `name`."""
     def deco(fn):
@@ -56,7 +64,8 @@ def register(name: str, *, min_devices: int = 1, check: bool = False):
                                       min_devices=min_devices)
                            if check else
                            EntryPoint(name, build=fn,
-                                      min_devices=min_devices))
+                                      min_devices=min_devices,
+                                      resident_sq8=resident_sq8))
         return fn
     return deco
 

@@ -12,7 +12,7 @@ from typing import List
 
 from repro.analysis import hlo_passes, padlint
 from repro.analysis.findings import Finding
-from repro.analysis.registry import entry_points
+from repro.analysis.registry import SIZES, entry_points
 
 #: src root, derived from this file (src/repro/analysis/runner.py).
 SRC_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
@@ -37,6 +37,9 @@ def run_entry(ep) -> List[Finding]:
         if tag in large:
             out.extend(hlo_passes.collective_n_independence(
                 name, hlo, large[tag]))
+            if ep.resident_sq8:
+                out.extend(hlo_passes.resident_bytes(
+                    name, hlo, large[tag], dim=SIZES["small"][1]))
     return out
 
 

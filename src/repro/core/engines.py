@@ -102,11 +102,15 @@ def sharded_ivf_engine(index: ivf_lib.IVFIndex, mesh, *, k: int, nprobe: int,
 
 
 def hnsw_engine(index: hnsw_lib.HNSWIndex, *, k: int, ef: int,
-                max_steps: int = 0) -> Engine:
+                max_steps: int = 0, visited_width: int = 0) -> Engine:
+    """`visited_width` > 0 swaps the exact [B, N] visited bitmap for a
+    fixed-width hashed filter [B, visited_width] (power of two < N; see
+    hnsw.init_state) so the per-query state stops scaling with N."""
     limit = max_steps or 8 * ef
     return Engine(
         index=index,
-        init=lambda idx, q: hnsw_lib.init_state(idx, q, ef=ef),
+        init=lambda idx, q: hnsw_lib.init_state(
+            idx, q, ef=ef, visited_width=visited_width),
         step=lambda idx, s: hnsw_lib.beam_step(idx, s, k=k),
         topk_d=lambda s: s.cand_d[:, :k],
         topk_i=lambda s: s.cand_i[:, :k],
@@ -132,8 +136,8 @@ def mutable_engine(base_engine: Engine, delta, *,
 
 
 def sharded_hnsw_engine(index: hnsw_lib.HNSWIndex, mesh, *, k: int, ef: int,
-                        max_steps: int = 0,
-                        pin_merge: bool = True) -> Engine:
+                        max_steps: int = 0, pin_merge: bool = True,
+                        visited_width: int = 0) -> Engine:
     """ShardedHNSWEngine: the beam loop over a row-sharded graph
     (dist.place_index + dist.collectives.make_sharded_beam_step).
 
@@ -143,7 +147,9 @@ def sharded_hnsw_engine(index: hnsw_lib.HNSWIndex, mesh, *, k: int, ef: int,
     neighbor resolution + one [B, M] psum/all-gather frontier merge
     instead of a GSPMD gather of neighbor lists and vectors). `index`
     must have been placed with dist.place_index(index, mesh) so its node
-    count divides the shard count."""
+    count divides the shard count. `visited_width` > 0 selects the
+    hashed visited filter (must also divide the shard count — the
+    filter splits over "model" inside the step)."""
     from repro.dist import collectives as dist_collectives
 
     # make_sharded_beam_step returns a jitted step(index, state, k=..):
@@ -158,7 +164,8 @@ def sharded_hnsw_engine(index: hnsw_lib.HNSWIndex, mesh, *, k: int, ef: int,
     limit = max_steps or 8 * ef
     return Engine(
         index=index,
-        init=lambda idx, q: hnsw_lib.init_state(idx, q, ef=ef),
+        init=lambda idx, q: hnsw_lib.init_state(
+            idx, q, ef=ef, visited_width=visited_width),
         step=lambda idx, s: step(idx, s, k=k),
         topk_d=lambda s: s.cand_d[:, :k],
         topk_i=lambda s: s.cand_i[:, :k],

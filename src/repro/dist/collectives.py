@@ -14,8 +14,9 @@ Three sharded entry points:
     traffic drops from the GSPMD gather's O(B*cap*D) to O(B*k*shards).
   * make_sharded_beam_step — one HNSW beam expansion over a ROW-sharded
     graph (dist.sharding.place_index splits vectors/sqnorm/neighbors on
-    the node dim over "model"; the per-query visited bitmap [B, N]
-    splits on its node dim too): the shard owning each query's selected
+    the node dim over "model"; the per-query visited structure — exact
+    [B, N] bitmap or fixed-width hashed filter [B, W] — splits on its
+    second dim too): the shard owning each query's selected
     candidate resolves its adjacency row (one [B, M] psum), every shard
     scans the neighbors IT owns against its local vectors/visited slice,
     and the per-shard [B, M] distance frontiers merge via one tiled
@@ -254,7 +255,10 @@ def make_sharded_probe_step(mesh: Mesh, *, axis: str = SHARD_AXIS,
     pairs + an insert-count psum. Bookkeeping (probe cursor, active
     masks, ndis from the replicated bucket_sizes) is replicated and
     identical to the single-device step, so results match
-    index.ivf.search exactly on any shard count.
+    index.ivf.search exactly on any shard count. A cold-tier store
+    (index.hot_map set, serve.cold) resolves bucket ids to device
+    slots through the replicated map first; cold buckets skip with the
+    same semantics as index.ivf.probe_step and add no collective.
 
     `pin_merge` keeps the running-top-k merge (a jax.lax.top_k, i.e. an
     unpartitionable TopK custom-call) INSIDE the shard_map so it runs on
@@ -281,6 +285,19 @@ def make_sharded_probe_step(mesh: Mesh, *, axis: str = SHARD_AXIS,
         bucket = jnp.take_along_axis(s.probe_order, pos[:, None],
                                      axis=1)[:, 0]
         sizes = index.bucket_sizes[bucket]       # replicated [B]
+        if index.hot_map is not None:
+            # Cold-tier store (serve.cold): bucket ids resolve through
+            # the replicated hot map to device store slots. A cold
+            # bucket (slot -1) is skipped THIS step — the probe cursor
+            # still advances, the scan contributes no candidates and
+            # the masked sizes keep ndis honest. No extra collective.
+            slot = index.hot_map[bucket]
+            hot = slot >= 0
+            slot = jnp.maximum(slot, 0)
+            sizes = jnp.where(hot, sizes, 0)
+        else:
+            slot = bucket
+            hot = jnp.ones_like(bucket, dtype=bool)
 
         if index.quantized:
             # asymmetric SQ8 via the kernel's bias term:
@@ -290,14 +307,16 @@ def make_sharded_probe_step(mesh: Mesh, *, axis: str = SHARD_AXIS,
         else:
             q_eff = s.q
             bias = s.qsq
-        def scan(q_eff, bias, topk_d, topk_i, bucket, vecs, sqn, ids):
+        def scan(q_eff, bias, topk_d, topk_i, slot, hot, vecs, sqn, ids):
             # Local batch size, NOT the outer b: with a "hosts" batch
             # axis each host group scans only its slot slice.
             bl = q_eff.shape[0]
             kth = topk_d[:, -1:]
-            v = vecs[bucket]                     # [Bl, capS, D] local gather
-            sq = sqn[bucket]
-            id_ = ids[bucket]
+            v = vecs[slot]                       # [Bl, capS, D] local gather
+            # Cold (unresident) buckets degrade to the padding contract
+            # (ids -1 / sqnorm +inf): no candidate, no insert count.
+            sq = jnp.where(hot[:, None], sqn[slot], PAD_SQNORM)
+            id_ = jnp.where(hot[:, None], ids[slot], PAD_ID)
             if use_kernel:
                 run_d = pad_dists((bl, k))
                 run_i = pad_ids((bl, k))
@@ -337,12 +356,12 @@ def make_sharded_probe_step(mesh: Mesh, *, axis: str = SHARD_AXIS,
         sharded = shard_map(
             scan, mesh=mesh,
             in_specs=(P(bh, None), P(bh, None), P(bh, None), P(bh, None),
-                      P(bh), P(None, axis, None), P(None, axis),
+                      P(bh), P(bh), P(None, axis, None), P(None, axis),
                       P(None, axis)),
             out_specs=(P(bh, None), P(bh, None), P(bh)),
             check_rep=False)
         out_d, out_i, cnt = sharded(
-            q_eff, bias, s.topk_d, s.topk_i, bucket,
+            q_eff, bias, s.topk_d, s.topk_i, slot, hot,
             index.bucket_vecs, index.bucket_sqnorm, index.bucket_ids)
 
         if pin_merge:
@@ -410,6 +429,16 @@ def make_sharded_beam_step(mesh: Mesh, *, axis: str = SHARD_AXIS,
     versus the O(B*M*D) vector gather GSPMD emits for the unsharded
     step on a mesh-placed index.
 
+    When the state carries a HASHED visited filter [B, W] (W < N,
+    hnsw.init_state's visited_width; W must be a shard-count multiple)
+    step 2 resolves membership at the hash slot's owner instead: one
+    extra [B, M] i32 psum rebuilds the global seen mask, keeping the
+    per-step traffic N-independent, and the skip behaviour (including
+    hash-collision false positives) matches the single-device hashed
+    step bit-for-bit. SQ8-resident graphs (int8 vectors) just cast the
+    gathered rows — the state's effective query / bias fold the dequant
+    transform, so the collective layout is unchanged.
+
     `pin_merge` runs the frontier merge's top-k (hnsw.frontier_topk, an
     unpartitionable TopK custom-call) inside a batch-axis shard_map so
     it stays on each host group's local slot rows; False restores the
@@ -441,6 +470,16 @@ def make_sharded_beam_step(mesh: Mesh, *, axis: str = SHARD_AXIS,
                 f"graph has {index.num_vectors} rows, not divisible by "
                 f"{nshards} shards; place the index with "
                 f"dist.place_index(index, mesh) (it pads the node dim)")
+        # Exact [B, N] bitmap or fixed-width hashed filter [B, W]: the
+        # structure is whatever init_state built (static at trace time);
+        # either way the visited dim splits over `axis`.
+        width = s.visited.shape[1]
+        hashed = width < index.num_vectors
+        if width % nshards:
+            raise ValueError(
+                f"visited width {width} not divisible by {nshards} "
+                f"shards; pick a power-of-two visited_width that the "
+                f"shard count divides")
 
         # Replicated frontier bookkeeping — shared with hnsw.beam_step
         # so the two steps cannot drift out of parity.
@@ -462,10 +501,33 @@ def make_sharded_beam_step(mesh: Mesh, *, axis: str = SHARD_AXIS,
             valid = (nbrs >= 0) & act[:, None]
             owned = valid & (nbrs >= base) & (nbrs < base + rows)
             loc = jnp.where(owned, nbrs - base, 0)
-            seen = jnp.take_along_axis(vis_loc, loc, axis=1)
+            if hashed:
+                # Hashed filter: membership lives at the HASH SLOT's
+                # owner, not the vector row's. The slot owner reads its
+                # local filter slice and one [Bl, M] i32 psum rebuilds
+                # the global seen mask (each slot has exactly one
+                # owner), matching hnsw.beam_step's hashed read
+                # bit-for-bit — collisions skip the same nodes. The
+                # slot owner then sets the bits for every VALID
+                # neighbor, as the single-device step does.
+                from repro.index import hnsw as hnsw_lib
+                slots = hnsw_lib.hash_slot(jnp.maximum(nbrs, 0), width)
+                rows_v = vis_loc.shape[1]
+                base_v = jax.lax.axis_index(axis) * rows_v
+                own_slot = (slots >= base_v) & (slots < base_v + rows_v)
+                loc_slot = jnp.where(own_slot, slots - base_v, 0)
+                hit = jnp.take_along_axis(vis_loc, loc_slot, axis=1)
+                seen = jax.lax.psum(
+                    (hit & own_slot).astype(jnp.int32), axis) > 0
+                vis_loc = vis_loc.at[
+                    jnp.arange(bl)[:, None], loc_slot].max(
+                        own_slot & valid)
+            else:
+                seen = jnp.take_along_axis(vis_loc, loc, axis=1)
+                vis_loc = vis_loc.at[
+                    jnp.arange(bl)[:, None], loc].max(owned)
             new = owned & ~seen
-            vis_loc = vis_loc.at[jnp.arange(bl)[:, None], loc].max(owned)
-            vecs = vec_loc[loc]                              # [Bl, M, D]
+            vecs = vec_loc[loc].astype(jnp.float32)          # [Bl, M, D]
             dist = (sqn_loc[loc]
                     - 2.0 * jnp.einsum("bd,bmd->bm", q, vecs) + qsq)
             dist = jnp.where(new, jnp.maximum(dist, 0.0), PAD_DIST)

@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,13 +38,21 @@ from repro.core.padding import PAD_DIST, PAD_ID, pad_dists, pad_ids
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class HNSWIndex:
-    vectors: jax.Array    # f32[N, D]
-    sqnorm: jax.Array     # f32[N]
+    vectors: jax.Array    # f32|int8[N, D] (SQ8-resident when int8)
+    sqnorm: jax.Array     # f32[N] — of the DEQUANTIZED vectors when SQ8
     neighbors: jax.Array  # i32[N, M] (-1 pad)
     entry: jax.Array      # i32[] medoid entry point (fallback)
     route_ids: jax.Array  # i32[R] upper-layer stand-in: uniform node sample;
     #                       one dense scan picks a per-query base-layer entry
     #                       (the role HNSW's upper layers play, one matmul)
+    # SQ8 affine dequant (x_hat = scale * x8 + offset, per dim); None for
+    # f32 storage (index.residency.quantize_hnsw produces SQ8 views).
+    scale: Optional[jax.Array] = None    # f32[D]
+    offset: Optional[jax.Array] = None   # f32[D]
+
+    @property
+    def quantized(self) -> bool:
+        return self.vectors.dtype == jnp.int8
 
     @property
     def num_vectors(self) -> int:
@@ -53,6 +61,36 @@ class HNSWIndex:
     @property
     def degree(self) -> int:
         return self.neighbors.shape[1]
+
+
+def asym_query(index: HNSWIndex, qf: jax.Array, qsq: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """SQ8 asymmetric query transform (identity for f32 storage).
+
+    Distances to dequantized codes decompose per query:
+    ``||x_hat - q||^2 = ||x_hat||^2 - 2 (q*scale).x8 + (||q||^2 -
+    2 q.offset)``, so passing ``(q*scale, qsq - 2 q.offset)`` as the
+    state's (q, qsq) lets every downstream dot-product path — the
+    routing scan, beam_step, the sharded expand — serve int8 codes
+    UNCHANGED except for an f32 cast of the gathered vectors."""
+    if not index.quantized:
+        return qf, qsq
+    q_eff = qf * index.scale[None, :]
+    bias = qsq - 2.0 * (qf @ index.offset)[:, None]
+    return q_eff, bias
+
+
+def hash_slot(ids: jax.Array, width: int) -> jax.Array:
+    """Fibonacci-hash node ids into [0, width); width a power of two.
+
+    The hashed visited filter's slot function: multiplicative hashing
+    by 2654435761 (2^32/phi) then taking the TOP log2(width) bits, so
+    consecutive ids (bucket-local neighborhoods) spread across the
+    filter instead of aliasing into the same word."""
+    log2w = int(width).bit_length() - 1
+    h = (ids.astype(jnp.uint32) * jnp.uint32(2654435761)
+         ) >> jnp.uint32(32 - log2w)
+    return h.astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -313,12 +351,13 @@ def insert_nodes_steps(index: HNSWIndex, rows: np.ndarray, *,
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class HNSWSearchState:
-    q: jax.Array         # f32[B, D]
-    qsq: jax.Array       # f32[B, 1]
+    q: jax.Array         # f32[B, D] effective query (q*scale when SQ8)
+    qsq: jax.Array       # f32[B, 1] effective bias (see asym_query)
     cand_d: jax.Array    # f32[B, ef] ascending (frontier + results)
     cand_i: jax.Array    # i32[B, ef]
     cand_exp: jax.Array  # bool[B, ef]
-    visited: jax.Array   # bool[B, N]
+    visited: jax.Array   # bool[B, N] exact bitmap, or [B, W] hashed
+    #                      filter when W < N (see hash_slot)
     first_nn: jax.Array  # f32[B]
     active: jax.Array    # bool[B]
     ndis: jax.Array      # i32[B]
@@ -329,17 +368,25 @@ class HNSWSearchState:
         return self.cand_d[:, :k], self.cand_i[:, :k]
 
 
-@functools.partial(jax.jit, static_argnames=("ef",))
-def init_state(index: HNSWIndex, q: jax.Array, *, ef: int) -> HNSWSearchState:
+@functools.partial(jax.jit, static_argnames=("ef", "visited_width"))
+def init_state(index: HNSWIndex, q: jax.Array, *, ef: int,
+               visited_width: int = 0) -> HNSWSearchState:
+    """Start-of-search state. ``visited_width=0`` keeps the exact
+    [B, N] visited bitmap; a nonzero power-of-two width < N switches to
+    the N-independent hashed visited filter (bounded false-positive
+    skips — a colliding NEW node is treated as already seen)."""
     b = q.shape[0]
     n = index.num_vectors
     qf = q.astype(jnp.float32)
     qsq = jnp.sum(qf**2, axis=1, keepdims=True)
+    # SQ8: fold the asymmetric transform into the state's (q, qsq) so
+    # every later dot product serves int8 codes unchanged.
+    q_eff, qb = asym_query(index, qf, qsq)
     # Upper-layer stand-in: one dense scan of the routing sample picks a
     # per-query base-layer entry (greedy descent's role in HNSW).
     rv = index.vectors[index.route_ids]                     # [R, D]
     rd = (index.sqnorm[index.route_ids][None, :]
-          - 2.0 * qf @ rv.T + qsq)                          # [B, R]
+          - 2.0 * q_eff @ rv.astype(jnp.float32).T + qb)    # [B, R]
     r_best = jnp.argmin(rd, axis=1)
     e = index.route_ids[r_best]                             # [B]
     ed = jnp.maximum(jnp.take_along_axis(rd, r_best[:, None], 1)[:, 0], 0.0)
@@ -350,14 +397,23 @@ def init_state(index: HNSWIndex, q: jax.Array, *, ef: int) -> HNSWSearchState:
     cand_d = pad_dists((b, ef)).at[:, 0].set(ed)
     cand_i = pad_ids((b, ef)).at[:, 0].set(e)
     cand_exp = jnp.zeros((b, ef), bool)
-    visited = jnp.zeros((b, n), bool).at[jnp.arange(b), e].set(True)
+    if visited_width:
+        w = int(visited_width)
+        if w < 2 or w & (w - 1) or w >= n:
+            raise ValueError(
+                f"visited_width must be a power of two in [2, N) "
+                f"(got {w} for N={n})")
+        visited = jnp.zeros((b, w), bool).at[
+            jnp.arange(b), hash_slot(e, w)].set(True)
+    else:
+        visited = jnp.zeros((b, n), bool).at[jnp.arange(b), e].set(True)
     # The routing scan above really computes R distances per query, so
     # ndis starts at R — NOT 1 — keeping fit-time ground-truth features
     # and serve-time features on the same scale (the entry's distance is
     # one of the R; beam steps then add only *new* computations).
     nroute = index.route_ids.shape[0]
     return HNSWSearchState(
-        q=qf, qsq=qsq, cand_d=cand_d, cand_i=cand_i, cand_exp=cand_exp,
+        q=q_eff, qsq=qb, cand_d=cand_d, cand_i=cand_i, cand_exp=cand_exp,
         visited=visited, first_nn=first_nn,
         active=jnp.ones((b,), bool),
         ndis=jnp.full((b,), nroute, jnp.int32),
@@ -448,13 +504,21 @@ def beam_step(index: HNSWIndex, s: HNSWSearchState, *,
     nbrs = index.neighbors[sel_id_safe]                     # [B, M]
     valid = (nbrs >= 0) & act[:, None]
     nbrs_safe = jnp.maximum(nbrs, 0)
-    seen = jnp.take_along_axis(s.visited, nbrs_safe, axis=1)
+    if s.visited.shape[1] < index.num_vectors:
+        # Hashed visited filter: membership checked/set at the hash
+        # slot. A colliding NEW node reads as seen and is skipped — the
+        # bounded false-positive cost the conformance suite budgets.
+        mark = hash_slot(nbrs_safe, s.visited.shape[1])
+    else:
+        mark = nbrs_safe
+    seen = jnp.take_along_axis(s.visited, mark, axis=1)
     new = valid & ~seen
     visited = s.visited.at[
-        jnp.arange(b)[:, None], jnp.where(valid, nbrs_safe, 0)].max(valid)
+        jnp.arange(b)[:, None], jnp.where(valid, mark, 0)].max(valid)
 
-    vecs = index.vectors[nbrs_safe]                         # [B, M, D]
-    dist = (index.sqnorm[nbrs_safe] - 2.0 * jnp.einsum("bd,bmd->bm", s.q, vecs)
+    vecs = index.vectors[nbrs_safe]                 # [B, M, D] f32|int8
+    dist = (index.sqnorm[nbrs_safe]
+            - 2.0 * jnp.einsum("bd,bmd->bm", s.q, vecs.astype(jnp.float32))
             + s.qsq)
     dist = jnp.where(new, jnp.maximum(dist, 0.0), PAD_DIST)
     return merge_expand(s, cand_exp, act, nbrs, dist, visited, k=k)
@@ -477,22 +541,26 @@ def _drive(step, index: HNSWIndex, s: HNSWSearchState, k: int, limit
 
 
 def search(index: HNSWIndex, q: jax.Array, *, k: int, ef: int,
-           max_steps: int = 0) -> Tuple[jax.Array, jax.Array, HNSWSearchState]:
+           max_steps: int = 0, visited_width: int = 0
+           ) -> Tuple[jax.Array, jax.Array, HNSWSearchState]:
     """Plain HNSW search to natural termination."""
-    return _drive(beam_step, index, init_state(index, q, ef=ef), k,
-                  max_steps or index.num_vectors)
+    return _drive(beam_step, index,
+                  init_state(index, q, ef=ef, visited_width=visited_width),
+                  k, max_steps or index.num_vectors)
 
 
 def search_sharded(index: HNSWIndex, q: jax.Array, *, k: int, ef: int,
-                   mesh, max_steps: int = 0
+                   mesh, max_steps: int = 0, visited_width: int = 0
                    ) -> Tuple[jax.Array, jax.Array, HNSWSearchState]:
     """Plain HNSW search through the shard_map beam step: `index` must be
     placed with dist.place_index(index, mesh) (vectors/sqnorm/neighbors
-    split on the node dim over the "model" axis; the visited bitmap is
-    split the same way inside the step). Matches `search` exactly
-    (topk_d / topk_i / ndis / ninserts) on any shard count."""
+    split on the node dim over the "model" axis; the visited structure —
+    exact bitmap or hashed filter — is split the same way inside the
+    step). Matches `search` exactly (topk_d / topk_i / ndis / ninserts)
+    on any shard count."""
     from repro.dist import collectives  # local import: dist uses kernels
 
     step = collectives.make_sharded_beam_step(mesh)
-    return _drive(step, index, init_state(index, q, ef=ef), k,
-                  max_steps or index.num_vectors)
+    return _drive(step, index,
+                  init_state(index, q, ef=ef, visited_width=visited_width),
+                  k, max_steps or index.num_vectors)

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +37,12 @@ class IVFIndex:
     # (ones/zeros) for f32 storage.
     scale: jax.Array          # f32[D]
     offset: jax.Array         # f32[D]
+    # Cold-tier indirection (serve.cold): the bucket arrays above hold
+    # only the RESIDENT buckets and hot_map[bucket] names the slot a
+    # bucket currently occupies (-1 = spilled to the host cold tier; a
+    # probe of a cold bucket is skipped, never stalls). None = every
+    # bucket resident at its own slot (bucket id == slot id).
+    hot_map: Optional[jax.Array] = None   # i32[nlist]
 
     @property
     def quantized(self) -> bool:
@@ -60,10 +66,21 @@ class IVFIndex:
 
 
 def quantize_sq8(x: np.ndarray, scale: np.ndarray, offset: np.ndarray
-                 ) -> Tuple[np.ndarray, np.ndarray]:
-    """Per-dim affine SQ8: returns (int8 codes, dequantized f32)."""
-    x8 = np.clip(np.round((x - offset) / scale), -127, 127).astype(np.int8)
-    return x8, x8.astype(np.float32) * scale + offset
+                 ) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Per-dim affine SQ8: returns (int8 codes, dequantized f32,
+    clipped-value count).
+
+    ``scale``/``offset`` are usually the FROZEN base range (compaction
+    re-quantizes deltas against it so stored codes stay comparable), so
+    vectors from an OOD drift burst can exceed it. They are clamped to
+    the representable range — correct, but lossy — and the third return
+    counts the clamped scalars so callers can surface the loss
+    (``darth_sq8_clipped_total``) instead of silently biasing the
+    asymmetric distances."""
+    raw = np.round((x - offset) / scale)
+    nclipped = int(np.count_nonzero((raw < -127.0) | (raw > 127.0)))
+    x8 = np.clip(raw, -127, 127).astype(np.int8)
+    return x8, x8.astype(np.float32) * scale + offset, nclipped
 
 
 def pack_buckets(x_store: np.ndarray, x_deq: np.ndarray, ids: np.ndarray,
@@ -135,7 +152,7 @@ def build(x: np.ndarray, nlist: int, *, iters: int = 15, seed: int = 0,
         hi = x.max(axis=0)
         scale = np.maximum((hi - lo) / 254.0, 1e-12).astype(np.float32)
         offset = ((hi + lo) / 2.0).astype(np.float32)
-        x_store, x_deq = quantize_sq8(x, scale, offset)
+        x_store, x_deq, _ = quantize_sq8(x, scale, offset)
     else:
         scale = np.ones((d,), np.float32)
         offset = np.zeros((d,), np.float32)
@@ -218,10 +235,22 @@ def probe_step(index: IVFIndex, s: IVFSearchState) -> IVFSearchState:
     pos = jnp.minimum(s.probe_pos, nprobe - 1)
     bucket = jnp.take_along_axis(s.probe_order, pos[:, None], axis=1)[:, 0]
 
-    vecs = index.bucket_vecs[bucket]        # [B, cap, D] (f32 or int8)
-    ids = index.bucket_ids[bucket]          # [B, cap]
-    sqn = index.bucket_sqnorm[bucket]       # [B, cap]
-    sizes = index.bucket_sizes[bucket]      # [B]
+    if index.hot_map is not None:
+        # Cold tier: resolve bucket -> resident slot; a cold bucket
+        # (slot -1) is SKIPPED this probe — the position still
+        # advances, its candidates and ndis are masked out — so a cold
+        # hit never stalls the fixed-shape step (serve.cold prefetches
+        # ahead of the probe order to make misses rare).
+        slot = index.hot_map[bucket]        # [B]
+        hot = slot >= 0
+        slot = jnp.maximum(slot, 0)
+    else:
+        slot = bucket
+        hot = None
+    vecs = index.bucket_vecs[slot]          # [B, cap, D] (f32 or int8)
+    ids = index.bucket_ids[slot]            # [B, cap]
+    sqn = index.bucket_sqnorm[slot]         # [B, cap]
+    sizes = index.bucket_sizes[bucket]      # [B] (full per-bucket sizes)
 
     if index.quantized:
         # asymmetric SQ8: q . x_hat = (q*scale) . x8 + q . offset
@@ -234,6 +263,9 @@ def probe_step(index: IVFIndex, s: IVFSearchState) -> IVFSearchState:
     dist = jnp.where(ids >= 0, jnp.maximum(dist, 0.0), PAD_DIST)
     # Inactive queries contribute nothing.
     dist = jnp.where(s.active[:, None], dist, PAD_DIST)
+    if hot is not None:
+        dist = jnp.where(hot[:, None], dist, PAD_DIST)
+        sizes = jnp.where(hot, sizes, 0)
 
     old_kth = s.topk_d[:, -1]
     cand_d = jnp.concatenate([s.topk_d, dist], axis=1)

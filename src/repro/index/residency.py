@@ -1,0 +1,145 @@
+"""Compact index residency: SQ8 views, f32 re-rank, byte accounting.
+
+The residency tiers (docs/architecture.md "Index residency tiers"):
+
+  * device HBM holds the SQ8 view of the vector payload — per-dim
+    affine int8 codes (4x smaller than f32) searched with asymmetric
+    distances (f32 query vs dequantized codes), the format both
+    engines serve by default;
+  * host memory holds the exact f32 vectors (`RerankStore`) used to
+    re-rank the final over-provisioned top-k, and the IVF cold bucket
+    tier (serve.cold);
+  * `resident_bytes` is the accounting the shardlint resident-bytes
+    pass and the dist_residency benchmark gate against.
+
+Conversion is host-side numpy (like build/compaction): `quantize_ivf` /
+`quantize_hnsw` derive the per-dim range from the live rows and return
+a same-shape index whose payload is int8 — drop-in for every engine
+and for `dist.place_index` (scale/offset replicate like the other
+small fields).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.padding import PAD_DIST, PAD_ID, PAD_SQNORM
+from repro.index import hnsw as hnsw_lib
+from repro.index import ivf as ivf_lib
+
+AnyIndex = Union[ivf_lib.IVFIndex, hnsw_lib.HNSWIndex]
+
+
+def sq8_range(x: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-dim affine SQ8 range of ``x`` [L, D]: (scale, offset) such
+    that the observed min/max map to the int8 code range [-127, 127]."""
+    lo = x.min(axis=0)
+    hi = x.max(axis=0)
+    scale = np.maximum((hi - lo) / 254.0, 1e-12).astype(np.float32)
+    offset = ((hi + lo) / 2.0).astype(np.float32)
+    return scale, offset
+
+
+def quantize_ivf(index: ivf_lib.IVFIndex) -> ivf_lib.IVFIndex:
+    """SQ8-resident view of an f32 IVF index (bucket layout, ids and
+    sizes unchanged; bucket_sqnorm recomputed on the dequantized codes
+    so served distances match what the quantized search measures)."""
+    if index.quantized:
+        return index
+    bv = np.asarray(jax.device_get(index.bucket_vecs), np.float32)
+    bi = np.asarray(jax.device_get(index.bucket_ids))
+    live = bi >= 0
+    scale, offset = sq8_range(bv[live])
+    codes_live, deq_live, _ = ivf_lib.quantize_sq8(bv[live], scale, offset)
+    codes = np.zeros(bv.shape, np.int8)
+    codes[live] = codes_live
+    sqn = np.full(bi.shape, PAD_SQNORM, np.float32)
+    sqn[live] = (deq_live ** 2).sum(axis=1)
+    return dataclasses.replace(
+        index, bucket_vecs=jnp.asarray(codes),
+        bucket_sqnorm=jnp.asarray(sqn),
+        scale=jnp.asarray(scale), offset=jnp.asarray(offset))
+
+
+def quantize_hnsw(index: hnsw_lib.HNSWIndex) -> hnsw_lib.HNSWIndex:
+    """SQ8-resident view of an f32 HNSW graph (adjacency, entry and
+    routing sample unchanged; dead rows keep sqnorm +inf)."""
+    if index.quantized:
+        return index
+    x = np.asarray(jax.device_get(index.vectors), np.float32)
+    sq = np.asarray(jax.device_get(index.sqnorm))
+    live = np.isfinite(sq)
+    scale, offset = sq8_range(x[live] if live.any() else x)
+    codes, deq, _ = ivf_lib.quantize_sq8(x, scale, offset)
+    sqn = np.where(live, (deq ** 2).sum(axis=1),
+                   PAD_SQNORM).astype(np.float32)
+    return dataclasses.replace(
+        index, vectors=jnp.asarray(codes), sqnorm=jnp.asarray(sqn),
+        scale=jnp.asarray(scale), offset=jnp.asarray(offset))
+
+
+def resident_bytes(index: AnyIndex) -> Dict[str, int]:
+    """Per-array device-resident bytes of an index view, plus "total".
+
+    The steady-state footprint the residency work is gated on: the
+    dist_residency benchmark asserts the SQ8 total is >= 3.5x smaller
+    than the f32 baseline for the IVF layout, and the shardlint
+    resident-bytes pass asserts the N-scaled payload entering the
+    compiled step programs is int8-width."""
+    out: Dict[str, int] = {}
+    total = 0
+    for f in dataclasses.fields(index):
+        v = getattr(index, f.name)
+        if v is None or not hasattr(v, "dtype"):
+            continue
+        nbytes = int(np.prod(v.shape)) * np.dtype(v.dtype).itemsize
+        out[f.name] = nbytes
+        total += nbytes
+    out["total"] = total
+    return out
+
+
+@dataclasses.dataclass
+class RerankStore:
+    """Host-memory exact f32 vectors for final-top-k re-ranking.
+
+    Row index == global vector id (the id space both engines report).
+    The store never ships to the device: candidates come back from the
+    SQ8 search over-provisioned (k' = margin * k), the store re-ranks
+    them exactly and returns the final k — recovering f32-exact result
+    ids at SQ8-resident device cost."""
+
+    vectors: np.ndarray   # f32[N, D]
+
+    def __post_init__(self):
+        self.vectors = np.asarray(self.vectors, np.float32)
+
+    def rerank(self, q: np.ndarray, ids: np.ndarray, k: int = 0
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """Exact squared-L2 re-rank of candidate ``ids`` for query
+        ``q``; returns (dist f32[k], ids i32[k]) ascending with the
+        repo's pad convention (+inf / -1) for missing candidates.
+        ``k=0`` keeps the candidate count."""
+        ids = np.asarray(ids).reshape(-1).astype(np.int64)
+        k = int(k) or ids.size
+        valid = (ids >= 0) & (ids < self.vectors.shape[0])
+        v = self.vectors[np.clip(ids, 0, self.vectors.shape[0] - 1)]
+        q = np.asarray(q, np.float32).reshape(-1)
+        d = ((v - q[None, :]) ** 2).sum(axis=1).astype(np.float32)
+        d = np.where(valid, d, PAD_DIST)
+        order = np.argsort(d, kind="stable")[:k]
+        out_d = np.full((k,), PAD_DIST, np.float32)
+        out_i = np.full((k,), PAD_ID, np.int32)
+        out_d[:order.size] = d[order]
+        out_i[:order.size] = np.where(np.isfinite(d[order]), ids[order],
+                                      PAD_ID).astype(np.int32)
+        return out_d, out_i
+
+    def reranker(self, k: int):
+        """Bind ``k``: returns the (q, ids) -> (d, i) callable shape
+        DarthServer's ``rerank=`` hook expects."""
+        return lambda q, ids: self.rerank(q, ids, k)

@@ -28,15 +28,24 @@ def _round_up(v: int, m: int) -> int:
 @functools.partial(jax.jit, static_argnames=("k", "bq", "bn", "interpret"))
 def l2_topk(q: jax.Array, x: jax.Array, *, k: int,
             x_sqnorm: Optional[jax.Array] = None,
+            bias: Optional[jax.Array] = None,
             bq: int = 128, bn: int = 512,
             interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
     """Fused top-k nearest (squared L2). Handles padding; returns true
-    squared distances (|| q ||^2 added back), ascending, with int32 ids;
-    padded/invalid slots have dist=+inf, id=-1."""
+    squared distances, ascending, with int32 ids; padded/invalid slots
+    have dist=+inf, id=-1.
+
+    ``bias`` [B, 1] is the per-query constant added to the kernel's
+    ``x_sqnorm - 2 q.x`` partial distances; it defaults to ``||q||^2``
+    (exact f32). The SQ8 asymmetric form — mirroring ``bucket_probe`` —
+    passes ``q*scale`` as ``q``, int8 codes as ``x``, the DEQUANTIZED
+    sqnorms, and ``bias = ||q||^2 - 2 q.offset``."""
     b, d = q.shape
     n = x.shape[0]
     if x_sqnorm is None:
         x_sqnorm = jnp.sum(x.astype(jnp.float32) ** 2, axis=1)
+    if bias is None:
+        bias = jnp.sum(q.astype(jnp.float32) ** 2, axis=1, keepdims=True)
     bq_eff = min(bq, _round_up(b, 8))
     bn_eff = min(bn, _round_up(n, 128))
     bp = _round_up(b, bq_eff)
@@ -46,7 +55,7 @@ def l2_topk(q: jax.Array, x: jax.Array, *, k: int,
     xsqp = jnp.pad(x_sqnorm, (0, np_ - n), constant_values=jnp.inf)
     dist, idx = l2_topk_padded(qp, xp, xsqp, k=k, bq=bq_eff, bn=bn_eff,
                                interpret=interpret)
-    dist = dist[:b] + jnp.sum(q.astype(jnp.float32) ** 2, axis=1, keepdims=True)
+    dist = dist[:b] + bias
     idx = idx[:b]
     dist = jnp.where(idx >= 0, jnp.maximum(dist, 0.0), jnp.inf)
     return dist, idx

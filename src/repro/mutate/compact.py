@@ -59,17 +59,18 @@ def drain(gen):
 
 
 def compact_ivf(index: ivf_lib.IVFIndex, delta_ids: np.ndarray,
-                delta_vecs: np.ndarray, *, cap_round: int = 8
-                ) -> ivf_lib.IVFIndex:
+                delta_vecs: np.ndarray, *, cap_round: int = 8,
+                metrics=None) -> ivf_lib.IVFIndex:
     """Fold live delta entries into the bucket store; drop tombstones.
     (Synchronous: drains compact_ivf_steps in one call.)"""
     return drain(compact_ivf_steps(index, delta_ids, delta_vecs,
-                                   cap_round=cap_round))
+                                   cap_round=cap_round, metrics=metrics))
 
 
 def compact_ivf_steps(index: ivf_lib.IVFIndex, delta_ids: np.ndarray,
                       delta_vecs: np.ndarray, *, cap_round: int = 8,
-                      assign_chunk: int = 4096, pack_chunk: int = 64):
+                      assign_chunk: int = 4096, pack_chunk: int = 64,
+                      metrics=None):
     """Incremental IVF fold: snapshot reads, chunked delta re-spill,
     chunked bucket re-pack; yields between bounded units and returns
     the shadow IVFIndex via StopIteration.value."""
@@ -99,8 +100,18 @@ def compact_ivf_steps(index: ivf_lib.IVFIndex, delta_ids: np.ndarray,
 
     if index.quantized:
         base_deq = base_store.astype(np.float32) * scale + offset
-        delta_store, delta_deq = ivf_lib.quantize_sq8(delta_vecs, scale,
-                                                      offset)
+        # The delta is quantized against the FROZEN base range so codes
+        # stay comparable; an OOD drift burst can exceed it. The clamp
+        # is correct but lossy — surface it instead of clipping silently
+        # (the recorded count is the drift monitor's cue to re-derive
+        # the range at the next full rebuild).
+        delta_store, delta_deq, nclip = ivf_lib.quantize_sq8(
+            delta_vecs, scale, offset)
+        if nclip and metrics is not None:
+            metrics.counter(
+                "darth_sq8_clipped_total",
+                "SQ8 values clamped to the frozen base range during "
+                "delta re-quantization").inc(nclip)
     else:
         base_deq = base_store
         delta_store, delta_deq = delta_vecs, delta_vecs
@@ -128,23 +139,33 @@ def compact_ivf_steps(index: ivf_lib.IVFIndex, delta_ids: np.ndarray,
 def compact_hnsw(index: hnsw_lib.HNSWIndex, delta_ids: np.ndarray,
                  delta_vecs: np.ndarray, next_id: int, *,
                  ef_construction: int = 64, alpha: float = 1.2,
-                 chunk: int = 1024, seed: int = 0) -> hnsw_lib.HNSWIndex:
+                 chunk: int = 1024, seed: int = 0,
+                 metrics=None) -> hnsw_lib.HNSWIndex:
     """Grow the graph to `next_id` rows, repair deletions, link delta.
     (Synchronous: drains compact_hnsw_steps in one call.)"""
     return drain(compact_hnsw_steps(index, delta_ids, delta_vecs, next_id,
                                     ef_construction=ef_construction,
-                                    alpha=alpha, chunk=chunk, seed=seed))
+                                    alpha=alpha, chunk=chunk, seed=seed,
+                                    metrics=metrics))
 
 
 def compact_hnsw_steps(index: hnsw_lib.HNSWIndex, delta_ids: np.ndarray,
                        delta_vecs: np.ndarray, next_id: int, *,
                        ef_construction: int = 64, alpha: float = 1.2,
                        chunk: int = 1024, seed: int = 0,
-                       repair_chunk: int = 256):
+                       repair_chunk: int = 256, metrics=None):
     """Incremental HNSW fold: snapshot reads, chunked deletion repair,
     chunked incremental linking; yields between bounded units and
-    returns the shadow HNSWIndex via StopIteration.value."""
+    returns the shadow HNSWIndex via StopIteration.value.
+
+    SQ8-resident graphs dequantize at entry (pruning geometry runs in
+    f32) and re-quantize at exit against the FROZEN base range, so the
+    rebuilt view stays int8-resident; delta clips are recorded like the
+    IVF path's."""
     x = np.asarray(index.vectors)
+    if index.quantized:
+        x = (x.astype(np.float32) * np.asarray(index.scale)
+             + np.asarray(index.offset))
     sq = np.asarray(index.sqnorm)
     nbr = np.asarray(index.neighbors)
     yield
@@ -223,6 +244,27 @@ def compact_hnsw_steps(index: hnsw_lib.HNSWIndex, delta_ids: np.ndarray,
     route_ids = rng.choice(live, size=min(r, live.size),
                            replace=False).astype(np.int32)
     entry = int(live[np.argmin(((x2[live] - x2[live].mean(0)) ** 2).sum(1))])
-    return dataclasses.replace(
+    grown = dataclasses.replace(
         grown, entry=jnp.asarray(entry, jnp.int32),
         route_ids=jnp.asarray(route_ids))
+    if not index.quantized:
+        return grown
+    # Re-quantize at exit against the frozen base range: base rows
+    # round-trip exactly; only delta rows can clip (recorded, not
+    # silent). sqnorm is recomputed on the DEQUANTIZED codes so served
+    # distances match what the quantized search measures.
+    scale = np.asarray(index.scale)
+    offset = np.asarray(index.offset)
+    codes, deq, _ = ivf_lib.quantize_sq8(x2, scale, offset)
+    nclip = (ivf_lib.quantize_sq8(delta_vecs, scale, offset)[2]
+             if delta_ids.size else 0)
+    if nclip and metrics is not None:
+        metrics.counter(
+            "darth_sq8_clipped_total",
+            "SQ8 values clamped to the frozen base range during "
+            "delta re-quantization").inc(nclip)
+    sq_q = np.full((n_new,), PAD_SQNORM, np.float32)
+    sq_q[live] = (deq[live] ** 2).sum(axis=1)
+    return dataclasses.replace(
+        grown, vectors=jnp.asarray(codes), sqnorm=jnp.asarray(sq_q),
+        scale=index.scale, offset=index.offset)

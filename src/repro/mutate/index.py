@@ -311,7 +311,11 @@ class MutableIndex:
         else:
             sq = np.asarray(jax.device_get(self.base.sqnorm))
             rows = np.nonzero(np.isfinite(sq))[0]
-            vecs = np.asarray(jax.device_get(self.base.vectors))[rows]
+            vecs = np.asarray(jax.device_get(
+                self.base.vectors))[rows].astype(np.float32)
+            if self.base.quantized:
+                vecs = (vecs * np.asarray(self.base.scale)
+                        + np.asarray(self.base.offset))
             ids = rows.astype(np.int64)
         d_ids, d_vecs = self._delta_live()
         return (np.concatenate([ids, d_ids]),
@@ -377,12 +381,13 @@ class MutableIndex:
         d_ids, d_vecs = self._delta_live()
         if self.kind == "ivf":
             gen = compact_lib.compact_ivf_steps(
-                self.base, d_ids, d_vecs, cap_round=cap_round)
+                self.base, d_ids, d_vecs, cap_round=cap_round,
+                metrics=self.metrics)
         else:
             gen = compact_lib.compact_hnsw_steps(
                 self.base, d_ids, d_vecs, self._next_id,
                 ef_construction=ef_construction, alpha=alpha,
-                chunk=chunk, seed=seed)
+                chunk=chunk, seed=seed, metrics=self.metrics)
         self._job = CompactionJob(gen, d_ids)
         if self.metrics is not None:
             self.metrics.event("compact_begin", version=int(self.version),

@@ -115,9 +115,16 @@ def explain(trace: Union[str, Sequence], qid: Optional[int] = None,
     if traj:
         fired = sum(1 for i in range(1, len(traj))
                     if traj[i] != traj[i - 1]) + (1 if traj[0] >= 0 else 0)
+        # A query that outlived the ring keeps only the newest cap
+        # steps — a leading "…" marks the overwritten prefix so the
+        # sparkline is never mistaken for the query's full life.
+        trunc = "…" if term.get("trajectory_truncated") else ""
+        total = term.get("step", 0) - term.get("admit_step", 0)
+        label = (f"last {len(traj)} of {total} steps" if trunc
+                 else f"{len(traj)} steps")
         lines.append(
-            f"  trajectory ({len(traj)} steps, predictor fired on "
-            f"{term.get('npred', fired)} of them): {_sparkline(traj)}")
+            f"  trajectory ({label}, predictor fired on "
+            f"{term.get('npred', fired)} of them): {trunc}{_sparkline(traj)}")
     rp = term.get("r_pred")
     eff = term.get("effective_target", term.get("target"))
     if reason == "interval_met" and rp is not None and eff is not None:

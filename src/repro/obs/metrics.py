@@ -225,6 +225,18 @@ def serve_metrics(registry: Optional[MetricsRegistry]
                      "drained atomic hot-swaps applied mid-serve")
     registry.counter("darth_steals_total",
                      "queue entries stolen between hosts")
+    registry.counter("darth_sq8_clipped_total",
+                     "SQ8 values clamped to the frozen base range "
+                     "during delta re-quantization")
+    registry.counter("darth_cold_prefetch_total",
+                     "cold IVF buckets staged into device slots ahead "
+                     "of their probe turn")
+    registry.counter("darth_cold_evictions_total",
+                     "resident buckets evicted to make room for "
+                     "prefetched cold buckets")
+    registry.counter("darth_cold_miss_total",
+                     "probes that resolved cold and were skipped "
+                     "(bucket not resident in time)")
     registry.histogram("darth_chunk_latency_ms",
                        "per-chunk device round-trip wall time",
                        edges=LATENCY_MS_EDGES)

@@ -51,7 +51,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -86,20 +86,28 @@ def traj_record(traj: jnp.ndarray, steps: jnp.ndarray,
 
 
 def traj_window(row: np.ndarray, admit_step: int, harvest_step: int,
-                base: int) -> List[float]:
+                base: int) -> Tuple[List[float], bool]:
     """Host-side drain: one slot's trajectory between its admission and
-    harvest, oldest first. ``base`` is the engine-step count when the
-    ring's chunk state was (re)initialized (ring columns count from
-    there). Windows longer than the ring keep the most recent cap
-    entries — the ring wrapped over the older ones."""
+    harvest, unrolled by the ring cursor so values come out oldest
+    first regardless of how many times the ring wrapped. ``base`` is
+    the engine-step count when the ring's chunk state was
+    (re)initialized (ring columns count from there).
+
+    Returns ``(values, truncated)``. Windows longer than the ring keep
+    only the most recent ``cap`` entries — the ring overwrote the older
+    prefix in place — and report ``truncated=True`` so consumers (the
+    explain sparkline, the trajectory-final == harvested ``r_pred``
+    invariant checks) know the series is a suffix, not the full life
+    of the query."""
     cap = row.shape[0]
     lo = admit_step - base
     hi = harvest_step - base
+    truncated = (hi - lo) > cap
     lo = max(lo, hi - cap)
     if hi <= lo:
-        return []
+        return [], False
     cols = np.arange(lo, hi) % cap
-    return [float(v) for v in row[cols]]
+    return [float(v) for v in row[cols]], truncated
 
 
 # ---------------------------------------------------------------------------

@@ -1,9 +1,11 @@
-from repro.serve import difficulty, engine
+from repro.serve import cold, difficulty, engine
+from repro.serve.cold import ColdTier, make_cold_tier
 from repro.serve.difficulty import (TierConfig, TierStats, assign_tiers,
                                     difficulty_scores)
 from repro.serve.engine import DarthServer, HostStats, ServeStats
 
 __all__ = [
-    "engine", "difficulty", "DarthServer", "HostStats", "ServeStats",
+    "engine", "difficulty", "cold", "DarthServer", "HostStats",
+    "ServeStats", "ColdTier", "make_cold_tier",
     "TierConfig", "TierStats", "assign_tiers", "difficulty_scores",
 ]

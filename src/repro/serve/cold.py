@@ -1,0 +1,259 @@
+"""Cold bucket tier: rarely-probed IVF buckets spill to host memory.
+
+The third residency tier (docs/architecture.md "Index residency
+tiers"): the device bucket store holds only ``hot_slots`` bucket rows
+— the host keeps the canonical copy of EVERY bucket's payload, so the
+device store is a cache and "eviction" is pure ``hot_map`` bookkeeping,
+never a device→host copy. ``IVFIndex.hot_map`` is the indirection the
+probe paths (index.ivf.probe_step and the sharded
+dist.collectives.make_sharded_probe_step) resolve bucket ids through:
+a probe whose bucket is not resident is SKIPPED — the probe cursor
+advances, the scan contributes no candidates, ndis stays honest — so a
+cold hit never stalls the SPMD chunk.
+
+``ColdTier.on_boundary`` is the prefetcher, shaped for
+``DarthServer.serve(.., on_boundary=tier.on_boundary)``: at every chunk
+boundary it reads the in-flight pool state (``server.chunk_state``),
+walks each active slot's REMAINING probe order ``lookahead`` probes
+ahead, stages the demanded cold buckets into the least-demanded device
+slots (functional ``.at[slot].set`` — the transfer is dispatched at the
+boundary and overlaps the next chunk's compute), and retargets the pool
+with ``set_engine(contents_only=True)``. With ``lookahead >=
+steps_per_sync`` a bucket demanded by the NEXT chunk is staged one
+boundary ahead of its probe turn; buckets that still slip through skip
+(``darth_cold_miss_total``) rather than block.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.index import ivf as ivf_lib
+
+
+def split_index(index: ivf_lib.IVFIndex, hot_buckets: np.ndarray
+                ) -> ivf_lib.IVFIndex:
+    """Device view holding only ``hot_buckets``' payload rows.
+
+    ``hot_buckets`` (i32[nslots], unique bucket ids) occupy slots
+    0..nslots-1 in build order; every other bucket maps to -1 in
+    ``hot_map``. Centroids and ``bucket_sizes`` stay full [nlist] —
+    probe ranking and the ndis accounting are residency-independent.
+    """
+    hot = np.asarray(hot_buckets, np.int32).reshape(-1)
+    if hot.size != np.unique(hot).size:
+        raise ValueError("hot_buckets must be unique bucket ids")
+    hot_map = np.full((index.nlist,), -1, np.int32)
+    hot_map[hot] = np.arange(hot.size, dtype=np.int32)
+    return dataclasses.replace(
+        index,
+        bucket_vecs=jnp.asarray(np.asarray(
+            jax.device_get(index.bucket_vecs))[hot]),
+        bucket_ids=jnp.asarray(np.asarray(
+            jax.device_get(index.bucket_ids))[hot]),
+        bucket_sqnorm=jnp.asarray(np.asarray(
+            jax.device_get(index.bucket_sqnorm))[hot]),
+        hot_map=jnp.asarray(hot_map))
+
+
+class ColdTier:
+    """Host-canonical bucket store + device-slot cache manager.
+
+    Build with :func:`make_cold_tier` (which picks the initial resident
+    set and produces the device store), keep the returned ``tier``
+    alive for the serve's duration, and pass ``tier.on_boundary`` to
+    ``DarthServer.serve``. The tier owns the authoritative ``hot_map``;
+    the server's engine index is refreshed in place (contents-only, no
+    recompile — slot count and shapes never change).
+    """
+
+    def __init__(self, index: ivf_lib.IVFIndex, store: ivf_lib.IVFIndex,
+                 *, lookahead: int = 4, staging: int = 8,
+                 metrics=None) -> None:
+        self.host_vecs = np.asarray(jax.device_get(index.bucket_vecs))
+        self.host_ids = np.asarray(jax.device_get(index.bucket_ids))
+        self.host_sqn = np.asarray(jax.device_get(index.bucket_sqnorm))
+        self.store = store
+        hot_map = np.asarray(jax.device_get(store.hot_map))
+        self.hot_map = hot_map.copy()
+        nslots = store.bucket_vecs.shape[0]
+        self.slot_bucket = np.full((nslots,), -1, np.int32)
+        resident = np.where(hot_map >= 0)[0]
+        self.slot_bucket[hot_map[resident]] = resident
+        self.lookahead = int(lookahead)
+        # Only the trailing `staging` slots are evictable. The seeded
+        # set stays PINNED: the boundary hook sees demand from the
+        # in-flight slots only, and queries admitted at the very next
+        # refill are invisible to it — evicting "undemanded" pinned
+        # buckets would strip exactly what the next admission wave's
+        # first probes need (the window the plan()/popularity seed
+        # exists to cover).
+        self.pinned = np.zeros((nslots,), bool)
+        self.pinned[:max(nslots - int(staging), 0)] = True
+        self.metrics = metrics
+        self.prefetches = 0
+        self.evictions = 0
+        self.misses = 0
+
+    # -- demand planning ----------------------------------------------
+
+    def plan(self, queries: np.ndarray, *, nprobe: int,
+             first: int = 4) -> ivf_lib.IVFIndex:
+        """Re-seed the resident set from a known query workload.
+
+        The boundary prefetcher covers every probe a query makes AFTER
+        its first chunk (by then the slot's probe order is visible and
+        lookahead stages ahead of the cursor), but a query's FIRST
+        ``steps_per_sync`` probes run before any boundary has seen it —
+        a cold bucket there is skipped for good. When the workload is
+        known up front (the batch serve API), ranking every query's
+        centroids and seeding residency by early-probe demand closes
+        exactly that window: buckets scored by how many queries want
+        them within their first ``first`` probes (earlier probes weigh
+        more). Returns the new device store; build the serving engine
+        from it."""
+        q = jnp.asarray(np.asarray(queries, np.float32))
+        qsq = jnp.sum(q * q, axis=1, keepdims=True)
+        order, _ = ivf_lib.rank_centroids(self.store.centroids, q, qsq,
+                                          min(nprobe, self.store.nlist))
+        order = np.asarray(jax.device_get(order))
+        score = np.zeros((self.store.nlist,), np.float64)
+        depth = min(first, order.shape[1])
+        for j in range(depth):
+            np.add.at(score, order[:, j], float(depth - j))
+        # Tail tie-break: keep the populated-bucket prior for slots the
+        # workload's early probes leave unclaimed.
+        sizes = np.asarray(jax.device_get(self.store.bucket_sizes))
+        score += sizes / max(float(sizes.sum()), 1.0)
+        nslots = self.slot_bucket.size
+        hot = np.argsort(-score, kind="stable")[:nslots].astype(np.int32)
+        hot_map = np.full((self.store.nlist,), -1, np.int32)
+        hot_map[hot] = np.arange(nslots, dtype=np.int32)
+        self.hot_map = hot_map
+        self.slot_bucket = hot.copy()
+        self.store = dataclasses.replace(
+            self.store,
+            bucket_vecs=jnp.asarray(self.host_vecs[hot]),
+            bucket_ids=jnp.asarray(self.host_ids[hot]),
+            bucket_sqnorm=jnp.asarray(self.host_sqn[hot]),
+            hot_map=jnp.asarray(hot_map))
+        return self.store
+
+    def _demand(self, server) -> Optional[Dict[int, int]]:
+        """bucket id -> probes-until-needed (min over active slots),
+        from the server's boundary-exposed pool state; None when no
+        probe bookkeeping is in flight (between serves / right after a
+        swap / non-IVF engine)."""
+        s = server.chunk_state
+        while s is not None and not hasattr(s, "probe_order"):
+            s = getattr(s, "inner", None)
+        if s is None:
+            return None
+        order = np.asarray(jax.device_get(s.probe_order))
+        pos = np.asarray(jax.device_get(s.probe_pos))
+        active = np.asarray(jax.device_get(s.active))
+        nprobe = order.shape[1]
+        want: Dict[int, int] = {}
+        for row in np.where(active)[0]:
+            lo = int(pos[row])
+            ahead = order[row, lo:min(lo + self.lookahead, nprobe)]
+            for j, bk in enumerate(np.asarray(ahead, np.int64)):
+                bk = int(bk)
+                if bk >= 0 and want.get(bk, self.lookahead + 1) > j:
+                    want[bk] = j
+        return want
+
+    # -- the boundary hook --------------------------------------------
+
+    def on_boundary(self, server) -> None:
+        """Stage upcoming cold buckets; evict slots nothing will probe."""
+        want = self._demand(server)
+        if not want:
+            return
+        missing = sorted(
+            (bk for bk in want if self.hot_map[bk] < 0),
+            key=want.get)
+        if not missing:
+            return
+        # A demanded-but-cold bucket closer than the chunk length will
+        # be probed before the staged copy can matter: an honest miss.
+        near = sum(1 for bk in missing
+                   if want[bk] < getattr(server, "steps_per_sync", 1))
+        # Victims: unpinned (staging-ring) slots whose bucket no active
+        # slot will probe inside the lookahead window.
+        victims = [sl for sl in range(self.slot_bucket.size)
+                   if not self.pinned[sl]
+                   and int(self.slot_bucket[sl]) not in want]
+        loads = list(zip(missing, victims))
+        if not loads:
+            self._count(near, 0, 0)
+            return
+        bv, bi, bs = (self.store.bucket_vecs, self.store.bucket_ids,
+                      self.store.bucket_sqnorm)
+        evicted = 0
+        for bk, sl in loads:
+            old = int(self.slot_bucket[sl])
+            if old >= 0:
+                self.hot_map[old] = -1
+                evicted += 1
+            # Host payload is canonical — staging is device-write only.
+            bv = bv.at[sl].set(self.host_vecs[bk])
+            bi = bi.at[sl].set(self.host_ids[bk])
+            bs = bs.at[sl].set(self.host_sqn[bk])
+            self.hot_map[bk] = sl
+            self.slot_bucket[sl] = bk
+        self.store = dataclasses.replace(
+            self.store, bucket_vecs=bv, bucket_ids=bi, bucket_sqnorm=bs,
+            hot_map=jnp.asarray(self.hot_map))
+        self._retarget(server)
+        self._count(near, len(loads), evicted)
+
+    def _retarget(self, server) -> None:
+        """Contents-only engine refresh around the new store view."""
+        engine = server.engine
+        idx = engine.index
+        if hasattr(idx, "base"):      # MutableIndexView: swap the base
+            idx = dataclasses.replace(idx, base=self.store)
+        else:
+            idx = self.store
+        server.set_engine(engine._replace(index=idx), contents_only=True)
+
+    def _count(self, near: int, staged: int, evicted: int) -> None:
+        self.misses += near
+        self.prefetches += staged
+        self.evictions += evicted
+        if self.metrics is None:
+            return
+        if near:
+            self.metrics.counter("darth_cold_miss_total").inc(near)
+        if staged:
+            self.metrics.counter("darth_cold_prefetch_total").inc(staged)
+        if evicted:
+            self.metrics.counter("darth_cold_evictions_total").inc(evicted)
+
+
+def make_cold_tier(index: ivf_lib.IVFIndex, *, hot_slots: int,
+                   lookahead: int = 4, staging: int = 8,
+                   metrics=None) -> ColdTier:
+    """Split ``index`` into a ``hot_slots``-bucket device store plus a
+    host cold tier, initially keeping the most populated buckets
+    resident (population is the best probe-popularity prior available
+    at split time; ``plan`` sharpens the seed from a known workload and
+    the boundary prefetcher's ``staging``-slot ring tracks live demand).
+    """
+    if not 0 < hot_slots <= index.nlist:
+        raise ValueError(
+            f"hot_slots must be in (0, nlist={index.nlist}], "
+            f"got {hot_slots}")
+    sizes = np.asarray(jax.device_get(index.bucket_sizes))
+    hot = np.argsort(-sizes, kind="stable")[:hot_slots].astype(np.int32)
+    store = split_index(index, hot)
+    return ColdTier(index, store, lookahead=lookahead,
+                    staging=min(staging, hot_slots), metrics=metrics)
+
+
+__all__ = ["ColdTier", "make_cold_tier", "split_index"]

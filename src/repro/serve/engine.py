@@ -418,9 +418,12 @@ class _HostSlots:
             if obs.npred is not None:
                 attrs["npred"] = int(obs.npred[s])
             if obs.traj is not None:
-                attrs["trajectory"] = obs_trace.traj_window(
+                traj, trunc = obs_trace.traj_window(
                     obs.traj[s], int(self.admit_step[s]), step,
                     obs.traj_base)
+                attrs["trajectory"] = traj
+                if trunc:
+                    attrs["trajectory_truncated"] = True
         return attrs
 
     def harvest(self, mask: np.ndarray, topk_d: np.ndarray,
@@ -622,9 +625,15 @@ class DarthServer:
                  num_slots: int = 64, steps_per_sync: int = 4,
                  mesh=None, hosts: int = 1, tiers=None,
                  tracer: Optional[obs_trace.Tracer] = None,
-                 metrics=None):
+                 metrics=None, rerank=None):
         from repro.obs import metrics as obs_metrics
         self.engine = engine
+        # Optional exact re-rank hook (index.residency.RerankStore.rerank
+        # or compatible (q, ids) -> (d, i) callable), applied to every
+        # completed result after the serve loop: the engine searches the
+        # compact SQ8-resident index at an over-provisioned k and the
+        # hook restores exact f32 distances/order for the final top-k.
+        self.rerank = rerank
         self.predictor = predictor
         self.interval_for_target = interval_for_target
         self.num_slots = num_slots
@@ -665,6 +674,12 @@ class DarthServer:
         # serve in progress — lets on_boundary hooks stamp the trace
         # events they emit (compaction begin/tick/swap)
         self.boundary_step = 0
+        # In-flight pool search state at the most recent chunk boundary
+        # (None outside serve / right after a swap): on_boundary hooks
+        # that plan ahead of the engine read it — serve.cold's prefetch
+        # walks each slot's remaining IVF probe order through it. Device
+        # arrays; hooks fetch the small fields they need.
+        self.chunk_state = None
 
         self._build_chunks()
 
@@ -903,6 +918,7 @@ class DarthServer:
                                    kill_hosts or {}, on_boundary)
             finally:
                 self._serving = False
+                self.chunk_state = None
 
     def _serve(self, queries: np.ndarray, r_targets: np.ndarray,
                max_engine_steps: int, kill_hosts: Dict[int, int],
@@ -1077,6 +1093,7 @@ class DarthServer:
             # slot is in flight, so every admitted query runs start to
             # finish against one index version (its admission epoch)
             self.boundary_step = stats.engine_steps
+            self.chunk_state = st
             if on_boundary is not None:
                 swap_was_pending = self._pending_swap is not None
                 on_boundary(self)
@@ -1095,6 +1112,7 @@ class DarthServer:
                 # may differ — e.g. HNSW visited rows grow at
                 # compaction); force a full init rebuild at the refill
                 st = None
+                self.chunk_state = None
                 traj = None
                 changed = False
                 occupied = occupied_global()
@@ -1215,6 +1233,11 @@ class DarthServer:
             self._export_metrics(mets, stats, hostslots, chunk_ms)
         if tr is not None:
             tr.finish()
+        if self.rerank is not None:
+            for qid, r in enumerate(results):
+                if r is not None:
+                    results[qid] = self.rerank(
+                        np.asarray(queries[qid], np.float32), r[1])
         return results, stats
 
     def _export_metrics(self, mets, stats: ServeStats,

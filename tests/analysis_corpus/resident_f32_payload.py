@@ -1,0 +1,49 @@
+"""Known-bad corpus: the f32-residency regression bug class (PR 10).
+
+An SQ8-resident entry point whose N-scaled vector payload enters the
+compiled step as f32 — the shape of a quantizer silently dropped from
+the manifest (or an engine refactor re-materialising the float store
+on device). The program computes the right answer at 4x the device
+bytes the residency contract budgets for, so only the two-build
+resident-bytes pass catches it: the payload's per-device element
+count grows small -> large, its trailing dim is the vector dim, and
+its dtype is f32 where int8 codes were promised. The pass must flag
+the payload's use-site with a file:line into this module (python -m
+repro.analysis --selftest asserts it does).
+"""
+MIN_DEVICES = 1
+EXPECT_PASS = "resident-bytes"
+
+_DIM = 16  # the gate's vector dim (registry.SIZES)
+
+
+def _build(n):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    # BUG: the "resident" payload is f32 — the SQ8 quantizer was never
+    # applied, so every device holds 4 bytes/dim instead of 1.
+    payload = jnp.asarray(rng.normal(size=(n, _DIM)).astype(np.float32))
+    sqn = jnp.sum(payload * payload, axis=1)
+
+    @jax.jit
+    def scan(q, x, xsq):
+        # The f32 payload is consumed right here — the resident-bytes
+        # finding anchors at this distance expansion.
+        dist = xsq[None, :] - 2.0 * (q @ x.T)
+        return jax.lax.top_k(-dist, 8)
+
+    return scan, (jnp.zeros((8, _DIM), jnp.float32), payload, sqn)
+
+
+def build_bad():
+    """The bad program at the small size: (jitted_fn, args)."""
+    return _build(2048)
+
+
+def build_bad_large():
+    """The same program at the large size (the pass compares the two
+    builds to tell N-scaled payloads from batch-sized state)."""
+    return _build(8192)

@@ -120,12 +120,15 @@ def test_trajectory_ring_record_and_window():
     # steps 5, 6 overwrote columns 0, 1: ring holds [.5, .6, .3, .4]
     np.testing.assert_allclose(row, [0.5, 0.6, 0.3, 0.4], atol=1e-6)
     # admitted at step 2, harvested at step 6 -> steps 3..6, oldest first
-    w = trace_lib.traj_window(row, 2, 6, 0)
+    w, trunc = trace_lib.traj_window(row, 2, 6, 0)
     np.testing.assert_allclose(w, [0.3, 0.4, 0.5, 0.6], atol=1e-6)
+    assert not trunc
     # window longer than the ring keeps the most recent cap entries
-    w = trace_lib.traj_window(row, 0, 6, 0)
+    # (unrolled by the cursor) and reports the dropped prefix
+    w, trunc = trace_lib.traj_window(row, 0, 6, 0)
     np.testing.assert_allclose(w, [0.3, 0.4, 0.5, 0.6], atol=1e-6)
-    assert trace_lib.traj_window(row, 6, 6, 0) == []
+    assert trunc
+    assert trace_lib.traj_window(row, 6, 6, 0) == ([], False)
     # base offset: ring re-initialized at engine step 10 counts its
     # columns from there (device steps are chunk-local after a rebuild)
     t2 = trace_lib.traj_init(1, 4)
@@ -133,10 +136,31 @@ def test_trajectory_ring_record_and_window():
         t2 = trace_lib.traj_record(t2, jnp.int32(s),
                                    jnp.full((1,), v, jnp.float32))
     row2 = np.asarray(t2)[0]
-    np.testing.assert_allclose(trace_lib.traj_window(row2, 10, 12, 10),
+    np.testing.assert_allclose(trace_lib.traj_window(row2, 10, 12, 10)[0],
                                [0.1, 0.2], atol=1e-6)
-    np.testing.assert_allclose(trace_lib.traj_window(row2, 11, 12, 10),
+    np.testing.assert_allclose(trace_lib.traj_window(row2, 11, 12, 10)[0],
                                [0.2], atol=1e-6)
+
+
+def test_trajectory_window_outliving_ring_is_exact_suffix():
+    """Regression: a query served for more than traj_cap steps must
+    drain the most recent cap predictions IN STEP ORDER (unrolled by
+    the cursor, not raw ring order) and be flagged truncated."""
+    cap = 5
+    traj = trace_lib.traj_init(1, cap)
+    full = []
+    for g in range(1, 14):                     # 13 steps >> cap
+        v = g / 100.0
+        full.append(v)
+        traj = trace_lib.traj_record(traj, jnp.int32(g),
+                                     jnp.full((1,), v, jnp.float32))
+        row = np.asarray(traj)[0]
+        w, trunc = trace_lib.traj_window(row, 0, g, 0)
+        # the drained window is always the exact most-recent suffix of
+        # the true step series, regardless of wrap count
+        np.testing.assert_allclose(w, full[-cap:], atol=1e-6)
+        assert trunc == (g > cap)
+        assert w[-1] == pytest.approx(v)
 
 
 def test_tracer_exactly_once_and_reason_taxonomy():
@@ -250,6 +274,49 @@ def test_traced_serve_matches_untraced_and_closes_every_query(obs_setup):
     admits = [s for s in tracer.last_spans if s.kind == "admit"]
     assert len(admits) == 64 and stats.refills > 0
     assert any(s.attrs.get("refill") for s in admits)
+
+
+def test_served_trajectory_outliving_ring(obs_setup):
+    """Regression (queries served > traj_cap steps): the drained
+    trajectory must be the exact most-recent suffix of the full series
+    (cursor-unrolled, in step order), flagged truncated, and still end
+    at the harvested r_pred; explain marks the dropped prefix."""
+    ds, index, d = obs_setup
+    rts = np.full((64,), 0.95, np.float32)    # high target -> long lives
+    cap = 2
+
+    big = trace_lib.Tracer(traj_cap=64)       # never wraps here
+    DarthServer(d.engine, d.trained.predictor, d.interval_for_target,
+                num_slots=8, steps_per_sync=3,
+                tracer=big).serve(ds.queries, rts)
+    small = trace_lib.Tracer(traj_cap=cap)
+    DarthServer(d.engine, d.trained.predictor, d.interval_for_target,
+                num_slots=8, steps_per_sync=3,
+                tracer=small).serve(ds.queries, rts)
+
+    terms_small, terms_big = small.terminals(), big.terminals()
+    truncated_qids = []
+    for qid, span in terms_small.items():
+        traj = span.attrs.get("trajectory")
+        if traj is None:
+            continue
+        assert len(traj) <= cap
+        ref = terms_big[qid].attrs["trajectory"]
+        lived = span.step - span.attrs["admit_step"]
+        # exact suffix of the unwrapped reference trajectory
+        np.testing.assert_allclose(traj, ref[-len(traj):], atol=0)
+        assert bool(span.attrs.get("trajectory_truncated")) == \
+            (lived > cap), span
+        rp = span.attrs.get("r_pred")
+        if traj and rp is not None:
+            assert traj[-1] == pytest.approx(rp, abs=1e-6)
+        if span.attrs.get("trajectory_truncated"):
+            truncated_qids.append(qid)
+    assert truncated_qids, "workload never outlived the ring (cap=2?)"
+
+    from repro.obs import explain as explain_lib
+    story = explain_lib.explain(small.last_spans, qid=truncated_qids[0])
+    assert "…" in story and "last " in story
 
 
 def test_single_chunk_serve_has_degenerate_percentiles(obs_setup):
